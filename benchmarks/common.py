@@ -1,0 +1,61 @@
+"""Shared benchmark helpers: datasets (CPU-scaled), timing, CSV emission."""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+RESULTS_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                           "results")
+
+# CPU-friendly default lengths (paper lengths with --full)
+BENCH_LENGTHS = {
+    "elec_power": 2976, "min_temp": 3650, "pedestrian": 8760,
+    "uk_elec": 17520, "aus_elec": 46080, "humidity": 43200,
+    "ir_bio_temp": 43200, "solar": 57600,
+}
+
+
+def bench_series(name: str, full: bool = False):
+    from repro.data.synthetic import DATASETS, make_dataset
+    spec = DATASETS[name]
+    n = spec.length if full else min(BENCH_LENGTHS[name], spec.length)
+    kappa = spec.kappa
+    n = (n // max(kappa, 1)) * max(kappa, 1)
+    return make_dataset(name, seed=0, length=n), spec
+
+
+def timed(fn, *args, repeats: int = 1, **kw):
+    """Returns (result, seconds). Blocks on jax arrays."""
+    fn(*args, **kw)  # warmup/compile
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        out = fn(*args, **kw)
+        jax.block_until_ready(jax.tree.leaves(out)) if jax.tree.leaves(
+            [x for x in jax.tree.leaves(out)
+             if hasattr(x, "block_until_ready")]) else None
+    return out, (time.perf_counter() - t0) / repeats
+
+
+def timed_once(fn, *args, **kw):
+    t0 = time.perf_counter()
+    out = fn(*args, **kw)
+    leaves = [x for x in jax.tree.leaves(out)
+              if hasattr(x, "block_until_ready")]
+    for l in leaves:
+        l.block_until_ready()
+    return out, time.perf_counter() - t0
+
+
+def emit(name: str, seconds: float, derived):
+    """The harness contract: ``name,us_per_call,derived`` CSV lines."""
+    print(f"{name},{seconds * 1e6:.1f},{derived}", flush=True)
+
+
+def save_json(tag: str, obj):
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    with open(os.path.join(RESULTS_DIR, tag + ".json"), "w") as f:
+        json.dump(obj, f, indent=1, default=float)

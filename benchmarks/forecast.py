@@ -1,0 +1,139 @@
+"""Fig 12: impact of compression on forecasting accuracy.
+
+EXP1/EXP3-style: Holt-Winters + seasonal-naive forecasters trained on
+compressed vs raw data at increasing compression ratios, mSMAPE against raw
+ground truth.  EXP2-lite: a reduced transformer LM trained on tokenized
+(compressed vs raw) streams for a few dozen steps, comparing eval loss on
+raw-stream continuations.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import bench_series, emit, save_json
+from repro.baselines.line_simpl import compress_baseline
+from repro.baselines.transform import fft_compress
+from repro.core import measures
+from repro.core.cameo import CameoConfig, compress, decompress, kept_points
+
+
+def _holt_winters(x, period, horizon, alpha=0.3, beta=0.05, gamma=0.2):
+    x = np.asarray(x, np.float64)
+    n = len(x)
+    level = x[:period].mean()
+    trend = (x[period:2 * period].mean() - x[:period].mean()) / period
+    season = x[:period] - level
+    for t in range(n):
+        s = season[t % period]
+        nl = alpha * (x[t] - s) + (1 - alpha) * (level + trend)
+        trend = beta * (nl - level) + (1 - beta) * trend
+        season[t % period] = gamma * (x[t] - nl) + (1 - gamma) * s
+        level = nl
+    return np.array([level + (h + 1) * trend + season[(n + h) % period]
+                     for h in range(horizon)])
+
+
+def _recon_for(method, x, spec, cr):
+    xj = jnp.asarray(x)
+    cfg = CameoConfig(eps=0.0, lags=spec.lags, kappa=spec.kappa,
+                      target_cr=cr, dtype="float64")
+    if method == "cameo":
+        res = compress(xj, cfg)
+        idx, vals = kept_points(res)
+        return np.asarray(decompress(idx, vals, len(x)))
+    if method in ("vw", "pipv", "tps"):
+        r = compress_baseline(xj, cfg, method)
+        kept = np.asarray(r.kept)
+        return np.asarray(decompress(np.nonzero(kept)[0],
+                                     np.asarray(r.xr)[kept], len(x)))
+    if method == "fft":
+        m = max(2, int(len(x) / cr / 3))
+        recon, _ = fft_compress(x, m)
+        return np.asarray(recon)
+    raise ValueError(method)
+
+
+PERIODS = {"uk_elec": 48, "min_temp": 365, "pedestrian": 24, "solar": 2880,
+           "elec_power": 96}
+
+
+def bench_fig12_forecasting(full=False):
+    rows = []
+    horizon = 48
+    for ds in ["uk_elec", "pedestrian"]:
+        x, spec = bench_series(ds, full)
+        x = x[: min(len(x), 6000)]
+        period = min(PERIODS[ds], 168)
+        test = x[-horizon:]
+        f_raw = _holt_winters(x[:-horizon], period, horizon)
+        sm_raw = float(measures.msmape(jnp.asarray(test), jnp.asarray(f_raw)))
+        emit(f"fig12.{ds}.raw", 0.0, f"mSMAPE={sm_raw:.4f}")
+        rows.append(dict(dataset=ds, method="raw", cr=1, msmape=sm_raw))
+        for cr in [2, 6, 10]:
+            for method in ["cameo", "vw", "fft"]:
+                t0 = time.perf_counter()
+                recon = _recon_for(method, x, spec, cr)
+                f = _holt_winters(recon[:-horizon], period, horizon)
+                sm = float(measures.msmape(jnp.asarray(test), jnp.asarray(f)))
+                secs = time.perf_counter() - t0
+                emit(f"fig12.{ds}.{method}.cr{cr}", secs,
+                     f"mSMAPE={sm:.4f}")
+                rows.append(dict(dataset=ds, method=method, cr=cr, msmape=sm))
+    save_json("fig12_forecast", rows)
+    return rows
+
+
+def bench_fig12_lm_forecaster(full=False):
+    """EXP2-lite: reduced-transformer forecaster on compressed vs raw."""
+    from repro.configs.registry import get_reduced
+    from repro.data.pipeline import SeriesTokenizer, series_windows
+    from repro.models.model import forward, model_defs
+    from repro.models.params import init_params
+    from repro.train.step import TrainConfig, build_train_step, init_opt_state
+
+    rows = []
+    ds = "uk_elec"
+    x, spec = bench_series(ds, full)
+    x = x[:4096]
+    cfg = get_reduced("smollm-135m")
+    tok = SeriesTokenizer.fit(x, vocab=cfg.vocab)
+    raw_tokens = tok.encode(x)
+
+    def train_eval(stream_tokens, tag):
+        windows = series_windows(stream_tokens[:3584], 64, 8)
+        eval_windows = series_windows(raw_tokens[3584:], 64, 32)
+        params = init_params(model_defs(cfg), jax.random.PRNGKey(0))
+        tcfg = TrainConfig(peak_lr=2e-3, warmup=5, total_steps=60,
+                           z_loss=0.0)
+        step = jax.jit(build_train_step(cfg, tcfg))
+        opt = init_opt_state(params, tcfg)
+        rng = np.random.default_rng(0)
+        t0 = time.perf_counter()
+        for i in range(60):
+            idx = rng.integers(0, len(windows), 8)
+            params, opt, m = step(
+                params, opt, {"tokens": jnp.asarray(windows[idx])},
+                jnp.asarray(i))
+        secs = time.perf_counter() - t0
+        # eval perplexity on raw continuation
+        from repro.train.step import next_token_loss
+        logits, _ = jax.jit(lambda p, b: forward(p, cfg, b))(
+            params, {"tokens": jnp.asarray(eval_windows[:8])})
+        ev = float(next_token_loss(logits, jnp.asarray(eval_windows[:8])))
+        emit(f"fig12lm.{ds}.{tag}", secs, f"eval_nll={ev:.4f}")
+        return ev
+
+    ev_raw = train_eval(raw_tokens, "raw")
+    res = compress(jnp.asarray(x),
+                   CameoConfig(eps=0.0, lags=spec.lags, target_cr=6.0,
+                               dtype="float64"))
+    idx, vals = kept_points(res)
+    recon = np.asarray(decompress(idx, vals, len(x)))
+    ev_cmp = train_eval(tok.encode(recon), "cameo_cr6")
+    rows.append(dict(dataset=ds, raw_nll=ev_raw, cameo_nll=ev_cmp))
+    save_json("fig12_lm", rows)
+    return rows

@@ -1,0 +1,62 @@
+"""Roofline table: aggregates the dry-run JSON results (§Roofline)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import RESULTS_DIR, emit, save_json
+
+DRYRUN_DIR = os.path.join(RESULTS_DIR, "dryrun")
+
+
+def load_cells():
+    cells = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        with open(path) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def bench_roofline_table(full=False):
+    cells = load_cells()
+    if not cells:
+        emit("roofline.table", 0.0, "no dryrun results yet "
+             "(run python -m repro.launch.dryrun --all)")
+        return []
+    rows = []
+    for c in cells:
+        rf = c["roofline"]
+        tag = f"{c['arch']}.{c['shape']}.{c['mesh']}"
+        emit(f"roofline.{tag}",
+             max(rf["compute_s"], rf["memory_s"], rf["collective_s"]) * 1e6,
+             f"dom={rf['dominant'][:-2]},frac={rf['roofline_fraction']:.4f},"
+             f"compute={rf['compute_s']:.4f}s,memory={rf['memory_s']:.4f}s,"
+             f"collective={rf['collective_s']:.4f}s")
+        rows.append(dict(arch=c["arch"], shape=c["shape"], mesh=c["mesh"],
+                         **{k: rf[k] for k in
+                            ("compute_s", "memory_s", "collective_s",
+                             "dominant", "roofline_fraction",
+                             "useful_flops_ratio")}))
+    save_json("roofline_table", rows)
+    return rows
+
+
+def markdown_table() -> str:
+    """Render §Roofline for EXPERIMENTS.md."""
+    cells = load_cells()
+    lines = [
+        "| arch | shape | mesh | compute s | memory s | collective s | "
+        "dominant | MODEL/HLO flops | roofline frac |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for c in sorted(cells, key=lambda c: (c["arch"], c["shape"], c["mesh"])):
+        rf = c["roofline"]
+        ur = rf.get("useful_flops_ratio")
+        frac = rf.get("roofline_fraction")
+        lines.append(
+            f"| {c['arch']} | {c['shape']} | {c['mesh']} "
+            f"| {rf['compute_s']:.4f} | {rf['memory_s']:.4f} "
+            f"| {rf['collective_s']:.4f} | {rf['dominant'][:-2]} "
+            f"| {ur:.3f} | {frac:.4f} |")
+    return "\n".join(lines)

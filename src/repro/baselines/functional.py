@@ -1,0 +1,167 @@
+"""Functional-approximation lossy baselines: PMC, SWING, Sim-Piece.
+
+Each exposes ``<name>_compress(x, err) -> (recon, stored_values)`` where
+``err`` is the per-value error bound and ``stored_values`` is the number of
+64-bit values the compressed form needs (the paper's accounting).  The ACF
+constraint is enforced externally by trial-and-error over ``err``
+(``baselines.constrain``), exactly as the paper does for these methods.
+
+Scans run compiled (lax.scan); light segment post-processing is numpy.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# PMC-Mean (Lazaridis & Mehrotra): constant segments, max error <= err
+# ---------------------------------------------------------------------------
+
+def pmc_compress(x, err: float):
+    x = jnp.asarray(x)
+    n = x.shape[0]
+
+    def step(carry, xi):
+        lo, hi = carry
+        nlo = jnp.minimum(lo, xi)
+        nhi = jnp.maximum(hi, xi)
+        brk = (nhi - nlo) > 2.0 * err
+        lo2 = jnp.where(brk, xi, nlo)
+        hi2 = jnp.where(brk, xi, nhi)
+        return (lo2, hi2), brk
+
+    inf = jnp.asarray(jnp.inf, x.dtype)
+    (_, _), brks = jax.lax.scan(step, (inf, -inf), x)
+    seg_id = jnp.cumsum(brks.astype(jnp.int32))
+    nseg = int(seg_id[-1]) + 1
+    # PMC emits the segment midrange: |x - (min+max)/2| <= err is exactly the
+    # invariant the (max - min) <= 2*err check maintains.
+    lo = jax.ops.segment_min(x, seg_id, num_segments=nseg)
+    hi = jax.ops.segment_max(x, seg_id, num_segments=nseg)
+    mid = 0.5 * (lo + hi)
+    recon = mid[seg_id]
+    # storage: (value, run length) per segment
+    return recon, 2 * nseg
+
+
+# ---------------------------------------------------------------------------
+# SWING filter (Elmeleegy et al.): connected linear segments via slope cones
+# ---------------------------------------------------------------------------
+
+def swing_compress(x, err: float):
+    x = np.asarray(x, np.float64)
+    n = x.shape[0]
+    xj = jnp.asarray(x)
+
+    def step(carry, inp):
+        t0, x0, u, l, _ = carry
+        t, xi = inp
+        dt_ = jnp.maximum(t - t0, 1.0)
+        s_hi = (xi + err - x0) / dt_
+        s_lo = (xi - err - x0) / dt_
+        nu = jnp.minimum(u, s_hi)
+        nl = jnp.maximum(l, s_lo)
+        fresh = t0 == t            # first point of a fresh segment
+        brk = (~fresh) & (nl > nu)
+        # on break: new segment anchored at the previous approximation point
+        anchor_x = x0 + 0.5 * (u + l) * (t - 1.0 - t0)
+        t0n = jnp.where(brk, t - 1.0, t0)
+        x0n = jnp.where(brk, anchor_x, x0)
+        dt2 = jnp.maximum(t - t0n, 1.0)
+        un = jnp.where(brk, (xi + err - x0n) / dt2, nu)
+        ln = jnp.where(brk, (xi - err - x0n) / dt2, nl)
+        out = (brk, t0n, x0n, un, ln)
+        return (t0n, x0n, un, ln, brk), out
+
+    t_arr = jnp.arange(n, dtype=jnp.float64)
+    init = (jnp.asarray(0.0), xj[0], jnp.asarray(jnp.inf),
+            jnp.asarray(-jnp.inf), jnp.asarray(False))
+    _, (brks, t0s, x0s, us, ls) = jax.lax.scan(step, init, (t_arr, xj))
+
+    brks = np.asarray(brks)
+    seg_id = np.cumsum(brks.astype(np.int64))
+    nseg = int(seg_id[-1]) + 1
+    # parameters at each segment's LAST point
+    last_idx = np.searchsorted(seg_id, np.arange(nseg), side="right") - 1
+    t0f = np.asarray(t0s)[last_idx]
+    x0f = np.asarray(x0s)[last_idx]
+    slope = 0.5 * (np.asarray(us)[last_idx] + np.asarray(ls)[last_idx])
+    slope = np.where(np.isfinite(slope), slope, 0.0)
+    t = np.arange(n, dtype=np.float64)
+    recon = x0f[seg_id] + slope[seg_id] * (t - t0f[seg_id])
+    # storage: swing stores one (value) per segment + final point (connected)
+    return jnp.asarray(recon), 2 * nseg
+
+
+# ---------------------------------------------------------------------------
+# Sim-Piece (Kitsios et al. 2023): PLA with quantized intercepts, grouped
+# ---------------------------------------------------------------------------
+
+def simpiece_compress(x, err: float):
+    """Simplified Sim-Piece: greedy maximal segments whose intercept is
+    quantized to a multiple of ``err``; segments grouped by intercept with
+    overlapping slope intervals merged (the paper's storage trick).
+
+    Storage model: per intercept group, 1 value for the intercept; per merged
+    slope-interval, 1 value for the representative slope; per segment, 1
+    value for its start offset.
+    """
+    x = np.asarray(x, np.float64)
+    n = x.shape[0]
+    if err <= 0:
+        return jnp.asarray(x), 2 * n
+    xq = np.floor(x / err) * err + err / 2.0   # quantized intercepts
+
+    segs = []  # (t0, b, lo_slope, hi_slope, end)
+    t0, b = 0, xq[0]
+    lo, hi = -np.inf, np.inf
+    for t in range(1, n):
+        dt_ = t - t0
+        s_hi = (x[t] + err - b) / dt_
+        s_lo = (x[t] - err - b) / dt_
+        nlo, nhi = max(lo, s_lo), min(hi, s_hi)
+        if nlo > nhi:
+            segs.append((t0, b, lo, hi, t - 1))
+            t0, b = t, xq[t]
+            lo, hi = -np.inf, np.inf
+        else:
+            lo, hi = nlo, nhi
+    segs.append((t0, b, lo, hi, n - 1))
+
+    # group by intercept; merge segments whose slope intervals INTERSECT
+    # (the shared slope must lie inside every member's interval, else the
+    # per-point error bound breaks)
+    groups: dict = {}
+    for (t0, b, lo, hi, end) in segs:
+        groups.setdefault(b, []).append((lo, hi, t0, end))
+    stored = 0
+    recon = np.empty(n)
+    for b, items in groups.items():
+        stored += 1  # intercept
+        items.sort(key=lambda it: it[0])  # -inf (single-point) first
+        merged: list = []  # (isect_lo, isect_hi, members)
+        for lo, hi, t0, end in items:
+            if merged:
+                m_lo, m_hi, members = merged[-1]
+                i_lo, i_hi = max(m_lo, lo), min(m_hi, hi)
+                if i_lo <= i_hi:
+                    merged[-1] = (i_lo, i_hi, members + [(t0, end)])
+                    continue
+            merged.append((lo, hi, [(t0, end)]))
+        for m_lo, m_hi, members in merged:
+            stored += 1  # representative slope
+            if np.isfinite(m_lo) and np.isfinite(m_hi):
+                s = 0.5 * (m_lo + m_hi)
+            elif np.isfinite(m_lo):
+                s = m_lo
+            elif np.isfinite(m_hi):
+                s = m_hi
+            else:
+                s = 0.0
+            for (t0, end) in members:
+                stored += 1  # segment start
+                tt = np.arange(t0, end + 1)
+                recon[t0:end + 1] = b + s * (tt - t0)
+    return jnp.asarray(recon), stored

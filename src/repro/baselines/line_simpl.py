@@ -1,0 +1,223 @@
+"""Line-simplification baselines adapted to the ACF constraint (paper §5.1).
+
+The engine mirrors CAMEO's batched-rounds loop, but candidates are ranked by
+*geometric* criteria instead of ACF impact.  Every accepted round is still
+validated with CAMEO's exact incremental aggregate update, so each baseline
+provides the same hard guarantee ``D(ACF(X'), ACF(X)) <= eps`` — this is the
+paper's "we adapted them to support the constraint on the ACF".
+
+Ranks (lower = removed first):
+
+* ``vw_rank``     — Visvalingam–Whyatt triangle area [90].
+* ``tp_rank_s``   — Turning Points, Sum-of-Absolute-Values importance [83];
+                    non-turning points rank at -inf (the TP initial phase
+                    that removes all non-TPs first).
+* ``tp_rank_m``   — Turning Points, mean-absolute-error importance.
+* ``pip_rank_v``  — Perceptual Important Points, vertical distance [33]
+                    (bottom-up removal order = reverse PIP insertion).
+* ``pip_rank_e``  — PIP, euclidean (perpendicular) distance.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.acf import acf_from_aggregates, aggregate_series, extract_aggregates
+from repro.core.cameo import (
+    CameoConfig,
+    CompressResult,
+    _independent_set,
+    _measure_fn,
+    _reconstruct,
+    _stat_transform,
+    _x_to_y_delta,
+)
+from repro.core.aggregates import alive_neighbors, apply_delta_dense, interpolate_at
+
+
+# ---------------------------------------------------------------------------
+# geometric ranking functions: (xr, alive, prev, nxt) -> [n] scores
+# ---------------------------------------------------------------------------
+
+def _neighbor_vals(xr, alive):
+    n = xr.shape[0]
+    idx = jnp.arange(n, dtype=jnp.int32)
+    prev, nxt = alive_neighbors(alive)
+    p = jnp.clip(prev, 0, n - 1)
+    q = jnp.clip(nxt, 0, n - 1)
+    return idx, prev, nxt, xr[p], xr[q]
+
+
+def vw_rank(xr, alive):
+    """Triangle area over (prev, i, next) — the VW criterion."""
+    n = xr.shape[0]
+    idx, prev, nxt, xp, xq = _neighbor_vals(xr, alive)
+    dt = xr.dtype
+    base = (nxt - prev).astype(dt)
+    # 2*area of triangle (prev, xp) (i, x_i) (next, xq)
+    area2 = jnp.abs(base * (xr - xp) - (idx - prev).astype(dt) * (xq - xp))
+    return 0.5 * area2
+
+
+def _is_turning_point(xr, alive):
+    """Direction change w.r.t. alive neighbors."""
+    n = xr.shape[0]
+    idx, prev, nxt, xp, xq = _neighbor_vals(xr, alive)
+    dl = xr - xp
+    dr = xq - xr
+    return (dl * dr) < 0.0
+
+
+def tp_rank_s(xr, alive):
+    """TP importance: sum of absolute neighbor deltas; non-TPs first."""
+    idx, prev, nxt, xp, xq = _neighbor_vals(xr, alive)
+    imp = jnp.abs(xr - xp) + jnp.abs(xq - xr)
+    tp = _is_turning_point(xr, alive)
+    # non-turning points are removed first (the TP initial phase)
+    return jnp.where(tp, imp, -jnp.ones_like(imp))
+
+
+def tp_rank_m(xr, alive):
+    """TP importance: MAE the removal would introduce; non-TPs first."""
+    n = xr.shape[0]
+    idx = jnp.arange(n, dtype=jnp.int32)
+    prev, nxt = alive_neighbors(alive)
+    interp = interpolate_at(xr, prev, nxt, idx)
+    imp = jnp.abs(interp - xr)
+    tp = _is_turning_point(xr, alive)
+    return jnp.where(tp, imp, -jnp.ones_like(imp))
+
+
+def pip_rank_v(xr, alive):
+    """Vertical distance to the alive-neighbor chord (PIPv)."""
+    n = xr.shape[0]
+    idx = jnp.arange(n, dtype=jnp.int32)
+    prev, nxt = alive_neighbors(alive)
+    interp = interpolate_at(xr, prev, nxt, idx)
+    return jnp.abs(interp - xr)
+
+
+def pip_rank_e(xr, alive):
+    """Perpendicular (euclidean) distance to the alive-neighbor chord."""
+    idx, prev, nxt, xp, xq = _neighbor_vals(xr, alive)
+    dt = xr.dtype
+    dxx = (nxt - prev).astype(dt)
+    dyy = xq - xp
+    num = jnp.abs(dyy * (idx - prev).astype(dt) - dxx * (xr - xp))
+    den = jnp.sqrt(dxx * dxx + dyy * dyy)
+    return num / jnp.maximum(den, 1e-12)
+
+
+# ---------------------------------------------------------------------------
+# removal engine (rank-then-validate, exact ACF constraint)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("cfg", "rank_fn"))
+def constrained_removal(x: jax.Array, cfg: CameoConfig, rank_fn) -> CompressResult:
+    """Greedy removal by ``rank_fn`` score under the exact ACF constraint.
+
+    Identical loop structure to CAMEO's rounds mode; only the ranking
+    criterion differs (geometry instead of ACF impact), which is what makes
+    CAMEO win the comparison — it optimizes the quantity being constrained.
+    """
+    dt = cfg.jdtype()
+    x = x.astype(dt)
+    n = x.shape[0]
+    L = cfg.lags
+    kap = cfg.kappa
+    y0 = aggregate_series(x, kap)
+    ny = y0.shape[0]
+    agg0 = extract_aggregates(y0, L)
+    transform = _stat_transform(cfg)
+    mfn = _measure_fn(cfg)
+    p0 = transform(acf_from_aggregates(agg0, ny))
+
+    if cfg.target_cr is not None:
+        min_alive = max(2, int(np.ceil(n / cfg.target_cr)))
+        eps = jnp.asarray(jnp.inf, dt)
+    else:
+        min_alive = 2
+        eps = jnp.asarray(cfg.eps, dt)
+    if cfg.max_cr is not None:
+        min_alive = max(min_alive, int(np.ceil(n / cfg.max_cr)))
+    k_max = max(1, int(cfg.alpha * n))
+
+    def cond(c):
+        (xr, alive, y, agg, alpha, dev, rounds, done, blocked) = c
+        return (~done) & (rounds < cfg.max_rounds) & (jnp.sum(alive) > min_alive)
+
+    def body(c):
+        (xr, alive, y, agg, alpha, dev, rounds, done, blocked) = c
+        inf = jnp.asarray(jnp.inf, dt)
+        idx = jnp.arange(n, dtype=jnp.int32)
+        score = rank_fn(xr, alive).astype(dt)
+        removable = alive & (idx > 0) & (idx < n - 1) & (~blocked)
+        score = jnp.where(removable, score, inf)
+
+        n_alive = jnp.sum(alive)
+        k_dyn = jnp.maximum(
+            1, jnp.minimum(
+                (alpha * n_alive.astype(dt)).astype(jnp.int32),
+                (n_alive - min_alive).astype(jnp.int32)))
+        neg_vals, sel_idx = jax.lax.top_k(-score, k_max)
+        vals = -neg_vals
+        rank_ok = (jnp.arange(k_max) < k_dyn) & jnp.isfinite(vals)
+        sel = jnp.zeros((n,), bool).at[sel_idx].set(rank_ok, mode="drop")
+        sel = _independent_set(sel, score, alive)
+        n_sel = jnp.sum(sel)
+        any_sel = n_sel > 0
+
+        alive_new = alive & (~sel)
+        xr_new = _reconstruct(x, alive_new)
+        dy = _x_to_y_delta(xr_new - xr, kap, dt)
+        agg_new = apply_delta_dense(agg, y, dy)
+        dev_new = mfn(transform(acf_from_aggregates(agg_new, ny)), p0)
+
+        accept = (dev_new <= eps) & any_sel
+        single_fail = (~accept) & (n_sel <= 1) & any_sel
+        failed_idx = jnp.argmax(sel)
+        blocked_new = jnp.where(
+            accept, jnp.zeros_like(blocked),
+            jnp.where(single_fail, blocked.at[failed_idx].set(True), blocked))
+        exhausted = ~jnp.any(alive & (~blocked_new) &
+                             (idx > 0) & (idx < n - 1))
+        done_new = done | (~any_sel) | ((~accept) & exhausted)
+        alpha_new = jnp.where(accept, jnp.minimum(alpha * 1.1, cfg.alpha),
+                              jnp.maximum(alpha * 0.5, jnp.asarray(1.5 / n, dt)))
+
+        pick = lambda a, b: jnp.where(accept, a, b)
+        return (pick(xr_new, xr), pick(alive_new, alive), pick(y + dy, y),
+                jax.tree.map(pick, agg_new, agg), alpha_new,
+                pick(dev_new, dev), rounds + 1, done_new, blocked_new)
+
+    init = (x, jnp.ones((n,), bool), y0, agg0, jnp.asarray(cfg.alpha, dt),
+            jnp.asarray(0.0, dt), jnp.asarray(0, jnp.int32),
+            jnp.asarray(False), jnp.zeros((n,), bool))
+    (xr, alive, y, agg, _, dev, rounds, _, _) = jax.lax.while_loop(
+        cond, body, init)
+    stat_new = transform(acf_from_aggregates(agg, ny))
+    return CompressResult(
+        kept=alive, xr=xr, deviation=dev, n_kept=jnp.sum(alive),
+        iters=rounds, stat_orig=p0, stat_new=stat_new)
+
+
+LINE_SIMPL_BASELINES = {
+    "vw": vw_rank,
+    "tps": tp_rank_s,
+    "tpm": tp_rank_m,
+    "pipv": pip_rank_v,
+    "pipe": pip_rank_e,
+}
+
+
+def compress_baseline(x, cfg: CameoConfig, name: str) -> CompressResult:
+    if name in LINE_SIMPL_BASELINES:
+        if cfg.kappa > 1:
+            n = (np.asarray(x).shape[0] // cfg.kappa) * cfg.kappa
+            x = jnp.asarray(x)[:n]
+        return constrained_removal(jnp.asarray(x), cfg,
+                                   LINE_SIMPL_BASELINES[name])
+    raise ValueError(f"unknown line-simplification baseline {name!r}")

@@ -1,0 +1,24 @@
+"""Domain-transform baseline: FFT top-m coefficient truncation (paper §5.1).
+
+``fft_compress(x, m)`` keeps the ``m`` largest-magnitude rFFT coefficients
+(DC always kept), zeroes the rest, and reconstructs by inverse transform.
+Storage: 2 values per kept complex coefficient + 1 for its index.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def fft_compress(x, m: int):
+    x = np.asarray(x, np.float64)
+    n = x.shape[0]
+    spec = np.fft.rfft(x)
+    m = int(max(1, min(m, spec.shape[0])))
+    mag = np.abs(spec)
+    mag[0] = np.inf  # always keep DC
+    keep = np.argsort(mag)[::-1][:m]
+    trunc = np.zeros_like(spec)
+    trunc[keep] = spec[keep]
+    recon = np.fft.irfft(trunc, n=n)
+    return jnp.asarray(recon), 3 * m

@@ -1,0 +1,81 @@
+"""Architecture registry: ``--arch <id>`` resolution + parameter accounting.
+
+Also owns ``expected_long_context``: which archs run the ``long_500k`` cell
+(sub-quadratic capable) vs. skip it (pure full-attention; see DESIGN.md
+§Arch-applicability).
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict
+
+from repro.configs.base import SHAPES, ModelConfig
+
+_MODULES = {
+    "stablelm-12b": "repro.configs.stablelm_12b",
+    "gemma3-27b": "repro.configs.gemma3_27b",
+    "qwen3-0.6b": "repro.configs.qwen3_0_6b",
+    "smollm-135m": "repro.configs.smollm_135m",
+    "qwen3-moe-235b-a22b": "repro.configs.qwen3_moe_235b_a22b",
+    "kimi-k2-1t-a32b": "repro.configs.kimi_k2_1t_a32b",
+    "qwen2-vl-2b": "repro.configs.qwen2_vl_2b",
+    "mamba2-2.7b": "repro.configs.mamba2_2_7b",
+    "musicgen-large": "repro.configs.musicgen_large",
+    "jamba-1.5-large-398b": "repro.configs.jamba_1_5_large_398b",
+}
+
+ARCH_IDS = tuple(_MODULES)
+
+# long_500k runs only for sub-quadratic-capable archs (SSM / hybrid /
+# sliding-window); pure full-attention archs skip it by assignment.
+LONG_CONTEXT_ARCHS = ("gemma3-27b", "mamba2-2.7b", "jamba-1.5-large-398b")
+
+
+def get_config(arch: str) -> ModelConfig:
+    mod = importlib.import_module(_MODULES[arch])
+    return mod.CONFIG
+
+
+def get_reduced(arch: str) -> ModelConfig:
+    mod = importlib.import_module(_MODULES[arch])
+    return mod.reduced()
+
+
+def cells(include_skipped: bool = False):
+    """All assigned (arch, shape) dry-run cells.
+
+    Yields (arch, shape_name, runnable: bool)."""
+    for arch in ARCH_IDS:
+        for shape in SHAPES:
+            runnable = shape != "long_500k" or arch in LONG_CONTEXT_ARCHS
+            if runnable or include_skipped:
+                yield arch, shape, runnable
+
+
+def param_count(cfg: ModelConfig) -> int:
+    from repro.models.model import model_defs
+    from repro.models.params import count_params
+    return count_params(model_defs(cfg))
+
+
+def active_param_count(cfg: ModelConfig) -> int:
+    """Active params per token (MoE: top_k of n_experts + shared)."""
+    total = param_count(cfg)
+    if cfg.n_experts == 0:
+        return total
+    from repro.models.model import model_defs
+    from repro.models.params import count_params, _map_defs
+    import numpy as np
+
+    expert_total = 0
+
+    def visit(path, d):
+        nonlocal expert_total
+        if len(path) >= 1 and any("moe" == p for p in path) and \
+                path[-1] in ("wi_gate", "wi_up", "wo"):
+            expert_total += int(np.prod(d.shape))
+        return None
+
+    _map_defs(visit, model_defs(cfg))
+    active_frac = (cfg.top_k / cfg.n_experts)
+    return int(total - expert_total * (1.0 - active_frac))

@@ -1,0 +1,344 @@
+"""Incremental maintenance of the ACF aggregates (paper Eqs. 8-11).
+
+This is the paper's core contribution: after removing a point (and replacing
+the interior of the affected segment by linear interpolation), the five
+per-lag aggregates are updated from the *delta vector* between the old and
+new reconstruction — O(L) for a single-point delta, O(mL) for an m-point
+segment — instead of recomputing the ACF in O(nL).
+
+Three granularities are provided:
+
+* ``apply_delta_dense``   — exact update from a dense delta vector (used by
+  the TPU batched-rounds mode: one O(nL) regular kernel per round, including
+  the cross-lag bilinear term across *all* of this round's segments).
+* ``apply_delta_window``  — exact update from a delta confined to a static
+  window ``W`` (used by the paper-faithful sequential mode; Eq. 9).
+* ``impact_single_delta`` — vectorized Algorithm 2: hypothetical new ACF for
+  a single-point delta at each queried index (Eq. 8), used for *ranking*
+  only.  The ``kernels/acf_impact`` Pallas kernel implements the same math.
+
+All functions operate on the *target* series ``y`` (the raw series for
+``kappa == 1``, or the tumbling-window aggregate series for Def. 2).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.acf import Aggregates, acf_from_aggregates
+
+
+def _lag_masks(idx: jax.Array, ny: int, L: int, dtype):
+    """head/tail validity masks for absolute indices ``idx`` (shape [...]).
+
+    Returns ``(head, tail)`` of shape ``[..., L]`` where
+    ``head[..., l-1] = idx <= ny-1-l`` and ``tail[..., l-1] = idx >= l``.
+    """
+    l = jnp.arange(1, L + 1)
+    head = (idx[..., None] <= (ny - 1 - l)).astype(dtype)
+    tail = (idx[..., None] >= l).astype(dtype)
+    return head, tail
+
+
+# ---------------------------------------------------------------------------
+# Dense exact update (rounds mode)
+# ---------------------------------------------------------------------------
+
+def apply_delta_dense(agg: Aggregates, y_old: jax.Array, delta: jax.Array) -> Aggregates:
+    """Exact aggregate update for an arbitrary dense delta vector.
+
+    ``y_old`` is the reconstruction *before* the update.  Cost: O(ny + L) for
+    the four moment sums (via cumulative sums) + O(ny * L) for ``sxx``.
+    """
+    ny = y_old.shape[0]
+    L = agg.sx.shape[0]
+    l = jnp.arange(1, L + 1)
+
+    cd = jnp.cumsum(delta)
+    e = delta * (2.0 * y_old + delta)
+    ce = jnp.cumsum(e)
+    dtot, etot = cd[-1], ce[-1]
+
+    dsx = cd[ny - 1 - l]
+    dsx2 = ce[ny - 1 - l]
+    dsxl = dtot - cd[l - 1]
+    dsxl2 = etot - ce[l - 1]
+
+    def lag_term(ll):
+        mask = (jnp.arange(ny) <= (ny - 1 - ll)).astype(y_old.dtype)
+        y_sh = jnp.roll(y_old, -ll)
+        d_sh = jnp.roll(delta, -ll)
+        # new*new - old*old expanded: d_t*y_{t+l} + y_t*d_{t+l} + d_t*d_{t+l}
+        return jnp.sum(mask * (delta * y_sh + y_old * d_sh + delta * d_sh))
+
+    dsxx = jax.vmap(lag_term)(l)
+    return Aggregates(
+        sx=agg.sx + dsx,
+        sxl=agg.sxl + dsxl,
+        sx2=agg.sx2 + dsx2,
+        sxl2=agg.sxl2 + dsxl2,
+        sxx=agg.sxx + dsxx,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Windowed exact update (sequential mode, Eq. 9)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("W", "L"))
+def apply_delta_window(
+    agg: Aggregates,
+    y_old: jax.Array,
+    delta_win: jax.Array,   # [W] deltas for positions start .. start+W-1
+    start: jax.Array,       # scalar int32: absolute index of delta_win[0]
+    *,
+    W: int,
+    L: int,
+) -> Aggregates:
+    """Exact Eq. 9 update for a delta confined to ``W`` contiguous points.
+
+    Out-of-range window positions must carry zero delta (masked by caller).
+    Cost O(W * L).
+    """
+    ny = y_old.shape[0]
+    dtype = y_old.dtype
+    # Pad y by L left and L+W right so the slice below never clamps for any
+    # start in [0, ny); head/tail masks null out padded contributions.
+    y_pad = jnp.pad(y_old, (L, L + W))
+    # ywin[j] == y_old[start - L + j] for j in [0, W + 2L)
+    ywin = jax.lax.dynamic_slice(y_pad, (start,), (W + 2 * L,))
+    j = jnp.arange(W)
+    abs_t = start + j                                     # [W]
+    head, tail = _lag_masks(abs_t, ny, L, dtype)          # [W, L]
+
+    d = delta_win                                          # [W]
+    y_at = ywin[L + j]                                     # y_old at window
+    e = d * (2.0 * y_at + d)                               # [W]
+
+    dsx = jnp.sum(d[:, None] * head, axis=0)
+    dsxl = jnp.sum(d[:, None] * tail, axis=0)
+    dsx2 = jnp.sum(e[:, None] * head, axis=0)
+    dsxl2 = jnp.sum(e[:, None] * tail, axis=0)
+
+    l = jnp.arange(1, L + 1)
+    # y_{t+l} and y_{t-l} gathered from the padded window.
+    y_fwd = ywin[(L + j)[:, None] + l[None, :]]            # [W, L]
+    y_bwd = ywin[(L + j)[:, None] - l[None, :]]            # [W, L]
+    # cross term d_t * d_{t+l}: pad delta window on the right by L.
+    d_pad = jnp.pad(d, (0, L))
+    d_fwd = d_pad[j[:, None] + l[None, :]]                 # [W, L]
+    dsxx = jnp.sum(
+        d[:, None] * (y_fwd * head + y_bwd * tail + d_fwd * head), axis=0
+    )
+    return Aggregates(
+        sx=agg.sx + dsx,
+        sxl=agg.sxl + dsxl,
+        sx2=agg.sx2 + dsx2,
+        sxl2=agg.sxl2 + dsxl2,
+        sxx=agg.sxx + dsxx,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Vectorized single-delta impact (Algorithm 2 / Eq. 8) — ranking only
+# ---------------------------------------------------------------------------
+
+def acf_after_single_delta(
+    agg: Aggregates,
+    y: jax.Array,
+    idx: jax.Array,     # [P] absolute indices receiving a delta
+    dval: jax.Array,    # [P] delta magnitudes
+) -> jax.Array:
+    """Hypothetical ACF (per Eq. 8) after adding ``dval[p]`` at ``idx[p]``,
+    independently for each p.  Returns ``[P, L]``.
+    """
+    ny = y.shape[0]
+    L = agg.sx.shape[0]
+    dtype = y.dtype
+    head, tail = _lag_masks(idx, ny, L, dtype)             # [P, L]
+    l = jnp.arange(1, L + 1)
+    y_pad = jnp.pad(y, (L, L))
+    y_fwd = y_pad[(idx + L)[:, None] + l[None, :]]         # y[i+l]
+    y_bwd = y_pad[(idx + L)[:, None] - l[None, :]]         # y[i-l]
+    y_at = y[idx]                                          # [P]
+
+    d = dval[:, None]                                      # [P, 1]
+    e = (dval * (2.0 * y_at + dval))[:, None]              # [P, 1]
+
+    sx = agg.sx[None, :] + d * head
+    sxl = agg.sxl[None, :] + d * tail
+    sx2 = agg.sx2[None, :] + e * head
+    sxl2 = agg.sxl2[None, :] + e * tail
+    sxx = agg.sxx[None, :] + d * (y_fwd * head + y_bwd * tail)
+
+    m = (ny - l).astype(dtype)[None, :]
+    num = m * sxx - sx * sxl
+    den2 = (m * sx2 - sx * sx) * (m * sxl2 - sxl * sxl)
+    tiny = jnp.asarray(1e-30, dtype)
+    den = jnp.sqrt(jnp.maximum(den2, tiny))
+    return jnp.where(den2 > tiny, num / den, jnp.zeros_like(num))
+
+
+def acf_after_window_delta_ctx(
+    agg: Aggregates,
+    y_ctx: jax.Array,    # [m + 2L + W] context: y_ctx[j] = y_global[off-L+j]
+    starts: jax.Array,   # [P] *local* index of each window's first delta
+    dwins: jax.Array,    # [P, W] per-candidate delta windows (zero-padded)
+    *,
+    ny: int,
+    off,
+) -> jax.Array:
+    """Hypothetical ACF after applying each candidate's *windowed* delta
+    independently (vectorized Eq. 9).  Returns ``[P, L]``.
+
+    This is the exact ranking form: it accounts for the full re-interpolated
+    segment of a removal, including the cross-lag bilinear term, unlike the
+    single-delta Algorithm-2 approximation.  The context form supports the
+    coarse-grained partitioned mode: ``y_ctx`` is a local chunk with L-point
+    halos on each side (+W right padding) and ``off`` is the chunk's global
+    offset; out-of-series context positions must be zero.
+    """
+    L = agg.sx.shape[0]
+    P, W = dwins.shape
+    dtype = y_ctx.dtype
+    y_pad = y_ctx
+    j = jnp.arange(W)
+    abs_t = off + starts[:, None] + j[None, :]              # [P, W] global
+    loc_t = starts[:, None] + j[None, :]                    # [P, W] local
+    head = (abs_t[..., None] <= (ny - 1 - jnp.arange(1, L + 1))).astype(dtype)
+    tail = (abs_t[..., None] >= jnp.arange(1, L + 1)).astype(dtype)  # [P,W,L]
+
+    d = dwins                                               # [P, W]
+    y_at = y_pad[loc_t + L]                                 # [P, W]
+    e = d * (2.0 * y_at + d)
+
+    dsx = jnp.einsum("pw,pwl->pl", d, head)
+    dsxl = jnp.einsum("pw,pwl->pl", d, tail)
+    dsx2 = jnp.einsum("pw,pwl->pl", e, head)
+    dsxl2 = jnp.einsum("pw,pwl->pl", e, tail)
+
+    l = jnp.arange(1, L + 1)
+    y_fwd = y_pad[loc_t[..., None] + L + l]                 # [P, W, L]
+    y_bwd = y_pad[loc_t[..., None] + L - l]
+    d_padded = jnp.pad(d, ((0, 0), (0, L)))
+    d_fwd = d_padded[:, j[:, None] + l[None, :]]            # [P, W, L]
+    dsxx = jnp.einsum(
+        "pw,pwl->pl", d, y_fwd * head + y_bwd * tail) + jnp.einsum(
+        "pw,pwl->pl", d, d_fwd * head)
+
+    m = (ny - l).astype(dtype)[None, :]
+    sx = agg.sx[None, :] + dsx
+    sxl = agg.sxl[None, :] + dsxl
+    sx2 = agg.sx2[None, :] + dsx2
+    sxl2 = agg.sxl2[None, :] + dsxl2
+    sxx = agg.sxx[None, :] + dsxx
+    num = m * sxx - sx * sxl
+    den2 = (m * sx2 - sx * sx) * (m * sxl2 - sxl * sxl)
+    tiny = jnp.asarray(1e-30, dtype)
+    den = jnp.sqrt(jnp.maximum(den2, tiny))
+    return jnp.where(den2 > tiny, num / den, jnp.zeros_like(num))
+
+
+def acf_after_window_delta(agg: Aggregates, y: jax.Array, starts: jax.Array,
+                           dwins: jax.Array) -> jax.Array:
+    """Single-partition wrapper around :func:`acf_after_window_delta_ctx`."""
+    L = agg.sx.shape[0]
+    W = dwins.shape[1]
+    y_ctx = jnp.pad(y, (L, L + W))
+    return acf_after_window_delta_ctx(
+        agg, y_ctx, starts, dwins, ny=y.shape[0], off=0)
+
+
+def segment_deltas(xr: jax.Array, prev: jax.Array, nxt: jax.Array,
+                   i: jax.Array, W: int):
+    """Delta window from removing point(s) ``i``: the interior of segment
+    (prev[i], nxt[i]) is re-interpolated on the line between the endpoints.
+
+    Vectorized over ``i``; returns ``(dwin [..., W], start [...], span [...])``
+    with deltas zero beyond the span (spans > W are truncated — callers treat
+    those candidates as unrankable).
+    """
+    n = xr.shape[0]
+    dt = xr.dtype
+    p = prev[i]
+    q = nxt[i]
+    start = p + 1
+    span = q - p - 1
+    j = jnp.arange(W, dtype=jnp.int32)
+    absj = jnp.clip(start[..., None] + j, 0, n - 1)
+    pc = jnp.clip(p, 0, n - 1)[..., None]
+    qc = jnp.clip(q, 0, n - 1)[..., None]
+    denom = jnp.maximum((q - p).astype(dt), 1.0)[..., None]
+    t = (absj - jnp.clip(p, 0, n - 1)[..., None]).astype(dt) / denom
+    newv = xr[pc] + (xr[qc] - xr[pc]) * t
+    m = (j < span[..., None]).astype(dt)
+    dwin = (newv - xr[absj]) * m
+    return dwin, start, span
+
+
+def impact_single_delta(
+    agg: Aggregates,
+    y: jax.Array,
+    idx: jax.Array,
+    dval: jax.Array,
+    p0: jax.Array,
+    measure_fn,
+    *,
+    chunk: int = 4096,
+) -> jax.Array:
+    """Ranking impact ``D(ACF_after_removal, P0)`` for each queried point.
+
+    Chunked over points to bound the [P, L] intermediate (mirrors the VMEM
+    tiling of the Pallas kernel).
+    """
+    P = idx.shape[0]
+    L = agg.sx.shape[0]
+    pad = (-P) % chunk
+    idx_p = jnp.pad(idx, (0, pad))
+    dval_p = jnp.pad(dval, (0, pad))
+
+    def one_chunk(args):
+        ii, dd = args
+        acf_new = acf_after_single_delta(agg, y, ii, dd)   # [chunk, L]
+        return jax.vmap(lambda row: measure_fn(row, p0))(acf_new)
+
+    nchunks = (P + pad) // chunk
+    out = jax.lax.map(
+        one_chunk,
+        (idx_p.reshape(nchunks, chunk), dval_p.reshape(nchunks, chunk)),
+    )
+    return out.reshape(-1)[:P]
+
+
+# ---------------------------------------------------------------------------
+# Alive-neighbor machinery (replaces the paper's linked list, vectorized)
+# ---------------------------------------------------------------------------
+
+def alive_neighbors(alive: jax.Array):
+    """For every index i, the nearest alive index strictly left / right.
+
+    Returns ``(prev, nxt)`` int32 arrays; ``prev[i] = -1`` if none,
+    ``nxt[i] = n`` if none.  O(n) via cumulative max/min.
+    """
+    n = alive.shape[0]
+    idx = jnp.arange(n, dtype=jnp.int32)
+    left_ids = jnp.where(alive, idx, jnp.int32(-1))
+    prev_incl = jax.lax.associative_scan(jnp.maximum, left_ids)
+    prev = jnp.concatenate([jnp.array([-1], jnp.int32), prev_incl[:-1]])
+    right_ids = jnp.where(alive, idx, jnp.int32(n))
+    nxt_incl = jax.lax.associative_scan(jnp.minimum, right_ids, reverse=True)
+    nxt = jnp.concatenate([nxt_incl[1:], jnp.array([n], jnp.int32)])
+    return prev, nxt
+
+
+def interpolate_at(x: jax.Array, prev: jax.Array, nxt: jax.Array, i: jax.Array):
+    """Value of the line through the alive neighbors of i, evaluated at i."""
+    n = x.shape[0]
+    p = jnp.clip(prev, 0, n - 1)
+    q = jnp.clip(nxt, 0, n - 1)
+    xp, xq = x[p], x[q]
+    denom = jnp.maximum((q - p).astype(x.dtype), 1.0)
+    t = (i - p).astype(x.dtype) / denom
+    return xp + (xq - xp) * t

@@ -1,0 +1,596 @@
+"""CAMEO: autocorrelation-preserving lossy compression (paper §4).
+
+Two execution modes share the same incremental-aggregate substrate:
+
+* ``mode="sequential"`` — paper-faithful Algorithm 1: one point removed per
+  iteration (heap replaced by a dense masked argmin), exact Eq. 9 windowed
+  aggregate update + constraint check at pop time, and *blocking* — only the
+  ``h`` alive neighbors on each side get their cached impact recomputed
+  (ReHeap) after a removal.
+
+* ``mode="rounds"`` — the TPU-native batched-greedy adaptation: every round
+  computes the Algorithm-2 impact for *all* alive points as one dense O(nL)
+  kernel (see ``kernels/acf_impact``), removes an independent set of the
+  lowest-impact α-fraction, applies one exact dense aggregate update for the
+  whole round, and accepts/rejects the round against the ε constraint
+  (rejections halve α, so the mode converges to the same guarantee).
+
+Both modes support the three problem variants of §3:
+  Def. 1 (SIP)                — ``eps`` bound on D(S(X'), S(X));
+  Def. 2 (SIP on aggregates)  — ``kappa > 1`` tumbling-window mean;
+  Def. 3 (compression-centric)— ``target_cr`` (minimize D s.t. CR ≥ c).
+and both statistics ``S ∈ {acf, pacf}``.
+
+The guarantee discipline matches the paper: the *ranking* of candidates is a
+heuristic (single-delta Eq. 8 approximation, possibly stale under blocking),
+but every actual removal is validated with an exact incremental update, so
+the returned deviation is exact w.r.t. the reconstruction's true ACF/PACF.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import measures as _measures
+from repro.core.acf import (
+    Aggregates,
+    acf_from_aggregates,
+    aggregate_series,
+    extract_aggregates,
+    pacf_from_acf,
+)
+from repro.core.aggregates import (
+    acf_after_single_delta,
+    acf_after_window_delta,
+    alive_neighbors,
+    apply_delta_dense,
+    apply_delta_window,
+    interpolate_at,
+    segment_deltas,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class CameoConfig:
+    """Static configuration (hashable: safe to close over / pass as static)."""
+
+    eps: float = 0.01
+    lags: int = 24
+    stat: str = "acf"              # "acf" | "pacf"
+    measure: str = "mae"           # see core.measures
+    kappa: int = 1                 # Def. 2 tumbling-window size (mean agg)
+    mode: str = "rounds"           # "rounds" | "sequential"
+    # -- rounds mode --
+    alpha: float = 0.10            # per-round removal fraction cap
+    max_rounds: int = 400
+    impact_chunk: int = 4096
+    rank: str = "window"           # "window" (exact Eq. 9) | "single" (Alg. 2)
+    stop_policy: str = "exhaustive"  # "exhaustive" | "first_violation"
+    select: str = "bisect"         # "bisect" (prefix search) | "backoff"
+    bisect_probes: int = 6
+    # -- sequential mode --
+    hops: int = 16                 # blocking neighborhood h per side
+    window: int = 64               # max re-interpolated span W (static)
+    max_iters: Optional[int] = None
+    # -- Def. 3 / halting --
+    target_cr: Optional[float] = None   # minimize D s.t. CR >= target_cr
+    max_cr: Optional[float] = None      # optional halt once CR reaches this
+    dtype: str = "float64"
+
+    def jdtype(self):
+        return jnp.dtype(self.dtype)
+
+
+class CompressResult(NamedTuple):
+    kept: jax.Array        # bool [n] — True where the original point is kept
+    xr: jax.Array          # float [n] — reconstruction (kept pts bit-exact)
+    deviation: jax.Array   # scalar — exact D(S(recon), S(orig))
+    n_kept: jax.Array      # scalar int
+    iters: jax.Array       # rounds (rounds mode) or removals (sequential)
+    stat_orig: jax.Array   # [L] S of the original target series
+    stat_new: jax.Array    # [L] S of the reconstruction's target series
+
+
+# ---------------------------------------------------------------------------
+# shared helpers
+# ---------------------------------------------------------------------------
+
+def _stat_transform(cfg: CameoConfig):
+    if cfg.stat == "acf":
+        return lambda r: r
+    if cfg.stat == "pacf":
+        return pacf_from_acf
+    raise ValueError(f"unknown stat {cfg.stat!r}")
+
+
+def _measure_fn(cfg: CameoConfig):
+    return _measures.get_measure(cfg.measure)
+
+
+def _impact_all(cfg, agg, y, xr, alive, p0, n):
+    """Algorithm-2 (single-delta) ranking impact for all n points."""
+    dt = cfg.jdtype()
+    idx = jnp.arange(n, dtype=jnp.int32)
+    prev, nxt = alive_neighbors(alive)
+    xhat = interpolate_at(xr, prev, nxt, idx)
+    dx = xhat - xr
+    if cfg.kappa == 1:
+        y_idx, dval = idx, dx
+    else:
+        y_idx = idx // cfg.kappa
+        dval = dx / jnp.asarray(cfg.kappa, dt)
+
+    transform = _stat_transform(cfg)
+    mfn = _measure_fn(cfg)
+
+    P = n
+    chunk = min(cfg.impact_chunk, P)
+    pad = (-P) % chunk
+    ii = jnp.pad(y_idx, (0, pad))
+    dd = jnp.pad(dval, (0, pad))
+
+    def one_chunk(args):
+        ci, cd = args
+        rows = acf_after_single_delta(agg, y, ci, cd)      # [chunk, L]
+        return jax.vmap(lambda r: mfn(transform(r), p0))(rows)
+
+    nchunks = (P + pad) // chunk
+    imp = jax.lax.map(
+        one_chunk, (ii.reshape(nchunks, chunk), dd.reshape(nchunks, chunk))
+    ).reshape(-1)[:P]
+
+    inf = jnp.asarray(jnp.inf, dt)
+    removable = alive & (idx > 0) & (idx < n - 1)
+    return jnp.where(removable, imp.astype(dt), inf)
+
+
+def _impact_all_window(cfg, agg, y, xr, alive, p0, n):
+    """Exact windowed (Eq. 9) ranking impact for all n points.
+
+    Accounts for the full re-interpolated segment of each hypothetical
+    removal.  Candidates whose segment exceeds the static window ``W`` fall
+    back to the single-delta estimate (their actual removal is still checked
+    exactly by the dense update).  This is the math the ``kernels/acf_impact``
+    Pallas kernel implements.
+    """
+    dt = cfg.jdtype()
+    W = cfg.window
+    kap = cfg.kappa
+    idx = jnp.arange(n, dtype=jnp.int32)
+    prev, nxt = alive_neighbors(alive)
+    transform = _stat_transform(cfg)
+    mfn = _measure_fn(cfg)
+    inf = jnp.asarray(jnp.inf, dt)
+    Wy = W if kap == 1 else (W // kap + 2)
+
+    chunk = min(cfg.impact_chunk, n)
+    pad = (-n) % chunk
+    idx_p = jnp.pad(idx, (0, pad))
+
+    def one_chunk(ci):
+        dwin, start, span = segment_deltas(xr, prev, nxt, ci, W)  # [c,W]
+        if kap == 1:
+            dyw, ystart = dwin, start
+        else:
+            b0 = start // kap
+            j = jnp.arange(W, dtype=jnp.int32)
+            seg = (start[:, None] + j[None, :]) // kap - b0[:, None]
+            dyw = jax.vmap(
+                lambda d, s: jax.ops.segment_sum(d, s, num_segments=Wy)
+            )(dwin, seg) / jnp.asarray(kap, dt)
+            ystart = b0
+        rows = acf_after_window_delta(agg, y, ystart, dyw)        # [c, L]
+        imp = jax.vmap(lambda r: mfn(transform(r), p0))(rows)
+        return imp, span
+
+    nchunks = (n + pad) // chunk
+    imp, span = jax.lax.map(one_chunk, idx_p.reshape(nchunks, chunk))
+    imp = imp.reshape(-1)[:n].astype(dt)
+    span = span.reshape(-1)[:n]
+
+    # fall back to single-delta ranking where the segment outgrew W
+    needs_fallback = span > W
+    imp_sd = _impact_all(cfg, agg, y, xr, alive, p0, n)
+    imp = jnp.where(needs_fallback, imp_sd, imp)
+
+    removable = alive & (idx > 0) & (idx < n - 1)
+    return jnp.where(removable, imp, inf)
+
+
+def _ranking_impact(cfg, agg, y, xr, alive, p0, n):
+    if cfg.rank == "window":
+        return _impact_all_window(cfg, agg, y, xr, alive, p0, n)
+    if cfg.rank == "single":
+        return _impact_all(cfg, agg, y, xr, alive, p0, n)
+    raise ValueError(f"unknown rank {cfg.rank!r}")
+
+
+def _independent_set(sel: jax.Array, impact: jax.Array, alive: jax.Array):
+    """Drop alive-adjacent picks: keep a pick iff it beats both its nearest
+    *selected* alive neighbors (vectorized local-minima rule on the alive
+    chain, so no two removed points ever share a segment endpoint)."""
+    n = sel.shape[0]
+    idx = jnp.arange(n, dtype=jnp.int32)
+    prev, nxt = alive_neighbors(alive)
+    inf = jnp.asarray(jnp.inf, impact.dtype)
+    # impact of my adjacent alive neighbors IF they are also selected
+    pc, qc = jnp.clip(prev, 0, n - 1), jnp.clip(nxt, 0, n - 1)
+    left_imp = jnp.where(sel[pc] & (prev >= 0), impact[pc], inf)
+    right_imp = jnp.where(sel[qc] & (nxt <= n - 1), impact[qc], inf)
+    li = jnp.where(prev >= 0, prev, n)
+    beats_left = (impact < left_imp) | ((impact == left_imp) & (idx < li))
+    ri = jnp.where(nxt <= n - 1, nxt, -1)
+    beats_right = (impact < right_imp) | ((impact == right_imp) & (idx < ri))
+    return sel & beats_left & beats_right
+
+
+def _reconstruct(x_kept_vals: jax.Array, alive: jax.Array) -> jax.Array:
+    """Full-length reconstruction: alive points keep their value, dead points
+    take the line between their alive neighbors."""
+    n = alive.shape[0]
+    idx = jnp.arange(n, dtype=jnp.int32)
+    prev, nxt = alive_neighbors(alive)
+    interp = interpolate_at(x_kept_vals, prev, nxt, idx)
+    return jnp.where(alive, x_kept_vals, interp)
+
+
+def _x_to_y_delta(delta_x: jax.Array, kappa: int, dt):
+    if kappa == 1:
+        return delta_x
+    ny = delta_x.shape[0] // kappa
+    return delta_x.reshape(ny, kappa).sum(axis=1) / jnp.asarray(kappa, dt)
+
+
+# ---------------------------------------------------------------------------
+# rounds mode (TPU-native batched greedy)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def compress_rounds(x: jax.Array, cfg: CameoConfig) -> CompressResult:
+    dt = cfg.jdtype()
+    x = x.astype(dt)
+    n = x.shape[0]
+    L = cfg.lags
+    y0 = aggregate_series(x, cfg.kappa)
+    ny = y0.shape[0]
+    agg0 = extract_aggregates(y0, L)
+    transform = _stat_transform(cfg)
+    mfn = _measure_fn(cfg)
+    p0 = transform(acf_from_aggregates(agg0, ny))
+
+    if cfg.target_cr is not None:
+        min_alive = max(2, int(np.ceil(n / cfg.target_cr)))
+        eps = jnp.asarray(jnp.inf, dt)
+    else:
+        min_alive = 2
+        eps = jnp.asarray(cfg.eps, dt)
+    if cfg.max_cr is not None:
+        min_alive = max(min_alive, int(np.ceil(n / cfg.max_cr)))
+
+    k_max = max(1, int(cfg.alpha * n))
+
+    def cond(c):
+        (xr, alive, y, agg, alpha, dev, rounds, done, blocked) = c
+        return (~done) & (rounds < cfg.max_rounds) & (jnp.sum(alive) > min_alive)
+
+    def eval_prefix(impact, sel_idx, finite, alive, xr, y, agg, kp):
+        """Trial-removal of the kp lowest-impact candidates (independent-set
+        filtered).  Returns (dev, sel, alive', xr', dy, agg')."""
+        rank_ok = (jnp.arange(k_max) < kp) & finite
+        sel = jnp.zeros((n,), bool).at[sel_idx].set(rank_ok, mode="drop")
+        sel = _independent_set(sel, impact, alive)
+        alive_new = alive & (~sel)
+        xr_new = _reconstruct(x, alive_new)
+        dy = _x_to_y_delta(xr_new - xr, cfg.kappa, dt)
+        agg_new = apply_delta_dense(agg, y, dy)
+        dev_new = mfn(transform(acf_from_aggregates(agg_new, ny)), p0)
+        return dev_new, sel, alive_new, xr_new, dy, agg_new
+
+    def body(c):
+        (xr, alive, y, agg, alpha, dev, rounds, done, blocked) = c
+        n_alive = jnp.sum(alive)
+        impact = _ranking_impact(cfg, agg, y, xr, alive, p0, n)
+        inf = jnp.asarray(jnp.inf, dt)
+        impact = jnp.where(blocked, inf, impact)
+        k_cap = jnp.maximum(
+            1, jnp.minimum(
+                (alpha * n_alive.astype(dt)).astype(jnp.int32),
+                (n_alive - min_alive).astype(jnp.int32),
+            ),
+        )
+        neg_vals, sel_idx = jax.lax.top_k(-impact, k_max)
+        finite = jnp.isfinite(-neg_vals)
+
+        if cfg.select == "bisect":
+            # largest feasible prefix via bisection (dev(0)=dev <= eps holds)
+            def probe(_, lohi):
+                lo, hi = lohi
+                mid = (lo + hi + 1) // 2
+                dev_mid, *_ = eval_prefix(
+                    impact, sel_idx, finite, alive, xr, y, agg, mid)
+                ok = dev_mid <= eps
+                return (jnp.where(ok, mid, lo), jnp.where(ok, hi, mid - 1))
+            lo, hi = jax.lax.fori_loop(
+                0, cfg.bisect_probes, probe,
+                (jnp.asarray(0, jnp.int32), k_cap.astype(jnp.int32)))
+            k_final = lo
+        else:
+            k_final = k_cap.astype(jnp.int32)
+
+        dev_new, sel, alive_new, xr_new, dy, agg_new = eval_prefix(
+            impact, sel_idx, finite, alive, xr, y, agg, k_final)
+        n_sel = jnp.sum(sel)
+        any_sel = n_sel > 0
+        accept = (dev_new <= eps) & any_sel
+
+        was_single = n_sel <= 1
+        if cfg.stop_policy == "first_violation":
+            done_new = done | ((~accept) & was_single) | \
+                ((k_final == 0) if cfg.select == "bisect" else (~any_sel))
+            blocked_new = blocked
+        else:
+            # exhaustive: when not even the single best candidate fits,
+            # block it and keep searching; blocks clear on any accept.
+            best_idx = sel_idx[0]
+            no_fit = (k_final == 0) if cfg.select == "bisect" else \
+                ((~accept) & was_single & any_sel)
+            blocked_new = jnp.where(
+                accept, jnp.zeros_like(blocked),
+                jnp.where(no_fit & finite[0],
+                          blocked.at[best_idx].set(True), blocked))
+            exhausted = ~jnp.any(alive & (~blocked_new) & jnp.isfinite(impact))
+            done_new = done | ((~accept) & exhausted) | (~finite[0])
+        if cfg.select == "backoff":
+            alpha_new = jnp.where(accept, jnp.minimum(alpha * 1.1, cfg.alpha),
+                                  jnp.maximum(alpha * 0.5,
+                                              jnp.asarray(1.5 / n, dt)))
+        else:
+            alpha_new = alpha
+
+        xr_out = jnp.where(accept, xr_new, xr)
+        alive_out = jnp.where(accept, alive_new, alive)
+        y_out = jnp.where(accept, y + dy, y)
+        agg_out = jax.tree.map(
+            lambda new, old: jnp.where(accept, new, old), agg_new, agg)
+        dev_out = jnp.where(accept, dev_new, dev)
+        return (xr_out, alive_out, y_out, agg_out, alpha_new,
+                dev_out, rounds + 1, done_new, blocked_new)
+
+    alive0 = jnp.ones((n,), bool)
+    init = (x, alive0, y0, agg0, jnp.asarray(cfg.alpha, dt),
+            jnp.asarray(0.0, dt), jnp.asarray(0, jnp.int32),
+            jnp.asarray(False), jnp.zeros((n,), bool))
+    (xr, alive, y, agg, _, dev, rounds, _, _) = jax.lax.while_loop(
+        cond, body, init)
+    stat_new = transform(acf_from_aggregates(agg, ny))
+    return CompressResult(
+        kept=alive, xr=xr, deviation=dev, n_kept=jnp.sum(alive),
+        iters=rounds, stat_orig=p0, stat_new=stat_new)
+
+
+# ---------------------------------------------------------------------------
+# sequential mode (paper-faithful Algorithm 1)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def compress_sequential(x: jax.Array, cfg: CameoConfig) -> CompressResult:
+    dt = cfg.jdtype()
+    x = x.astype(dt)
+    n = x.shape[0]
+    L = cfg.lags
+    W = cfg.window
+    h = cfg.hops
+    kap = cfg.kappa
+    y0 = aggregate_series(x, kap)
+    ny = y0.shape[0]
+    agg0 = extract_aggregates(y0, L)
+    transform = _stat_transform(cfg)
+    mfn = _measure_fn(cfg)
+    p0 = transform(acf_from_aggregates(agg0, ny))
+    inf = jnp.asarray(jnp.inf, dt)
+
+    if cfg.target_cr is not None:
+        min_alive = max(2, int(np.ceil(n / cfg.target_cr)))
+        eps = inf
+    else:
+        min_alive = 2
+        eps = jnp.asarray(cfg.eps, dt)
+    if cfg.max_cr is not None:
+        min_alive = max(min_alive, int(np.ceil(n / cfg.max_cr)))
+    max_iters = cfg.max_iters if cfg.max_iters is not None else (n - min_alive)
+
+    # y-window size for kappa>1 windowed updates.
+    Wy = W if kap == 1 else (W // kap + 2)
+
+    def seg_delta(xr, p, q):
+        """Deltas for re-interpolating the interior of segment (p, q).
+
+        Returns (dwin [W], start, valid) — valid=False if the span exceeds W.
+        """
+        start = p + 1
+        span = q - p - 1            # number of interior points
+        j = jnp.arange(W, dtype=jnp.int32)
+        absj = jnp.clip(start + j, 0, n - 1)
+        t = (absj - p).astype(dt) / jnp.maximum((q - p).astype(dt), 1.0)
+        newv = xr[jnp.clip(p, 0, n - 1)] + (
+            xr[jnp.clip(q, 0, n - 1)] - xr[jnp.clip(p, 0, n - 1)]) * t
+        m = (j < span).astype(dt)
+        dwin = (newv - xr[absj]) * m
+        return dwin, start, span <= W
+
+    def y_window(dwin, start):
+        """Map an x-space delta window onto the target (aggregate) series."""
+        if kap == 1:
+            return dwin, start
+        b0 = start // kap
+        j = jnp.arange(W, dtype=jnp.int32)
+        seg = (start + j) // kap - b0
+        dy = jax.ops.segment_sum(dwin, seg, num_segments=Wy) / jnp.asarray(kap, dt)
+        return dy, b0
+
+    def trial(agg, y, xr, p, q):
+        dwin, start, valid = seg_delta(xr, p, q)
+        dyw, ystart = y_window(dwin, start)
+        agg_t = apply_delta_window(agg, y, dyw, ystart, W=Wy, L=L)
+        dev_t = mfn(transform(acf_from_aggregates(agg_t, ny)), p0)
+        return agg_t, dev_t, dwin, dyw, start, ystart, valid
+
+    def neighbor_impact(agg, y, xr, prev, nxt, jpt):
+        """Exact (Eq. 9) ranking impact of removing alive point jpt."""
+        _, dev_t, *_rest, valid = trial(agg, y, xr, prev[jpt], nxt[jpt])
+        interior = (jpt > 0) & (jpt < n - 1)
+        return jnp.where(valid & interior, dev_t, inf)
+
+    def collect_neighbors(prev, nxt, p, q):
+        """h alive indices walking left from p and right from q (incl. p, q)."""
+        # left walk
+        def left_body(i, acc):
+            ids, ptr = acc
+            ids = ids.at[i].set(ptr)
+            ptr = jnp.clip(prev[jnp.clip(ptr, 0, n - 1)], -1, n - 1)
+            ptr = jnp.where(ptr < 0, jnp.int32(0), ptr)
+            return ids, ptr
+        ids_l, _ = jax.lax.fori_loop(
+            0, h + 1, left_body,
+            (jnp.zeros((h + 1,), jnp.int32), jnp.clip(p, 0, n - 1)))
+        def right_body(i, acc):
+            ids, ptr = acc
+            ids = ids.at[i].set(ptr)
+            ptr = jnp.clip(nxt[jnp.clip(ptr, 0, n - 1)], 0, n)
+            ptr = jnp.where(ptr >= n, jnp.int32(n - 1), ptr)
+            return ids, ptr
+        ids_r, _ = jax.lax.fori_loop(
+            0, h + 1, right_body,
+            (jnp.zeros((h + 1,), jnp.int32), jnp.clip(q, 0, n - 1)))
+        return jnp.concatenate([ids_l, ids_r])
+
+    def init_impacts(agg, y, xr, prev, nxt):
+        # Exact impacts are O(nWL) to initialize; Algorithm 2 initializes with
+        # the O(nL) single-delta form, which is exact while all points are
+        # alive (every segment has span 1).  We do the same.
+        alive = jnp.ones((n,), bool)
+        return _impact_all(cfg, agg, y, xr, alive, p0, n)
+
+    def cond(c):
+        (xr, alive, prev, nxt, imp, agg, y, dev, it, done) = c
+        return (~done) & (it < max_iters) & (jnp.sum(alive) > min_alive)
+
+    def body(c):
+        (xr, alive, prev, nxt, imp, agg, y, dev, it, done) = c
+        i = jnp.argmin(imp)
+        best = imp[i]
+        p, q = prev[i], nxt[i]
+        agg_t, dev_t, dwin, dyw, start, ystart, valid = trial(agg, y, xr, p, q)
+
+        can_remove = jnp.isfinite(best) & valid & (dev_t <= eps)
+        # Algorithm 1 stops at the first violation, which is sound when the
+        # heap is fresh; under blocking the popped impact can be stale (the
+        # paper's ReHeap keeps neighborhoods fresh, but distant entries age),
+        # so a stale pop would end the run prematurely.  We block the
+        # offending candidate (impact=inf; ReHeap revives neighbors later)
+        # and stop only when no finite candidate remains.  With
+        # stop_policy="first_violation" the paper's literal semantics apply.
+        if cfg.stop_policy == "first_violation":
+            violation = jnp.isfinite(best) & valid & (dev_t > eps)
+            done_new = done | violation | (~jnp.isfinite(best))
+        else:
+            done_new = done | (~jnp.isfinite(best))
+
+        # apply removal (no-ops when rejected)
+        def windowed_add(arr, win, st, Wn):
+            """arr[st + j] += win[j] with clamp-safe shifting near the end."""
+            size = arr.shape[0]
+            offset = jnp.clip(st, 0, size - Wn)
+            shift = st - offset
+            k = jnp.arange(Wn)
+            buf = jnp.where(k >= shift, win[jnp.clip(k - shift, 0, Wn - 1)], 0.0)
+            return jax.lax.dynamic_update_slice(
+                arr, jax.lax.dynamic_slice(arr, (offset,), (Wn,)) + buf, (offset,))
+
+        def apply(_):
+            xr2 = windowed_add(xr, dwin, start, W)
+            alive2 = alive.at[i].set(False)
+            prev2 = prev.at[q].set(p, mode="drop")
+            nxt2 = nxt.at[p].set(q, mode="drop")
+            y2 = windowed_add(y, dyw, ystart, Wy)
+            imp2 = imp.at[i].set(inf)
+            # ReHeap: exact impact recompute for h alive neighbors per side.
+            nbrs = collect_neighbors(prev2, nxt2, p, q)
+            new_imps = jax.vmap(
+                lambda jpt: neighbor_impact(agg_t, y2, xr2, prev2, nxt2, jpt)
+            )(nbrs)
+            # only alive points get updates (dedup: later writes win, values
+            # identical for duplicated indices so order is irrelevant)
+            alive_n = alive2[nbrs]
+            imp2 = imp2.at[nbrs].set(
+                jnp.where(alive_n, new_imps, imp2[nbrs]), mode="drop")
+            return xr2, alive2, prev2, nxt2, imp2, agg_t, y2, dev_t
+
+        def reject(_):
+            # rejected candidates (span overflow or eps violation under the
+            # skip policy) become unremovable until a ReHeap revives them
+            imp2 = imp.at[i].set(inf)
+            return xr, alive, prev, nxt, imp2, agg, y, dev
+
+        xr2, alive2, prev2, nxt2, imp2, agg2, y2, dev2 = jax.lax.cond(
+            can_remove, apply, reject, operand=None)
+        return (xr2, alive2, prev2, nxt2, imp2, agg2, y2, dev2,
+                it + 1, done_new)
+
+    idx = jnp.arange(n, dtype=jnp.int32)
+    prev0 = idx - 1
+    nxt0 = idx + 1
+    imp0 = init_impacts(agg0, y0, x, prev0, nxt0)
+    init = (x, jnp.ones((n,), bool), prev0, nxt0, imp0, agg0, y0,
+            jnp.asarray(0.0, dt), jnp.asarray(0, jnp.int32),
+            jnp.asarray(False))
+    xr, alive, prev, nxt, imp, agg, y, dev, it, _ = jax.lax.while_loop(
+        cond, body, init)
+    stat_new = transform(acf_from_aggregates(agg, ny))
+    return CompressResult(
+        kept=alive, xr=xr, deviation=dev, n_kept=jnp.sum(alive),
+        iters=it, stat_orig=p0, stat_new=stat_new)
+
+
+# ---------------------------------------------------------------------------
+# public API
+# ---------------------------------------------------------------------------
+
+def compress(x, cfg: CameoConfig) -> CompressResult:
+    """Compress ``x`` under ``cfg``.  Trims a tail remainder so the length is
+    divisible by ``kappa`` (the trimmed points are kept verbatim by callers
+    that need exact framing; the registry uses divisible lengths)."""
+    x = jnp.asarray(x)
+    if cfg.kappa > 1:
+        n = (x.shape[0] // cfg.kappa) * cfg.kappa
+        x = x[:n]
+    if cfg.mode == "rounds":
+        return compress_rounds(x, cfg)
+    if cfg.mode == "sequential":
+        return compress_sequential(x, cfg)
+    raise ValueError(f"unknown mode {cfg.mode!r}")
+
+
+def kept_points(res: CompressResult):
+    """(indices, values) numpy views of the kept points."""
+    kept = np.asarray(res.kept)
+    idx = np.nonzero(kept)[0]
+    vals = np.asarray(res.xr)[idx]
+    return idx, vals
+
+
+def decompress(indices, values, n: int, dtype=jnp.float64) -> jax.Array:
+    """Linear-interpolation decompression (paper §4.1): one forward pass."""
+    indices = jnp.asarray(indices, dtype=dtype)
+    values = jnp.asarray(values, dtype=dtype)
+    grid = jnp.arange(n, dtype=dtype)
+    return jnp.interp(grid, indices, values)
+
+
+def compression_ratio(res: CompressResult) -> float:
+    return float(res.kept.shape[0]) / float(res.n_kept)

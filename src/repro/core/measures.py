@@ -1,0 +1,74 @@
+"""Quality measures ``D(a, b)`` (paper §2.3).
+
+Used both for the ACF-deviation constraint (vectors of length L) and for
+reconstruction error of full series.  All return scalars.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def mae(a: jax.Array, b: jax.Array) -> jax.Array:
+    return jnp.mean(jnp.abs(a - b))
+
+
+def rmse(a: jax.Array, b: jax.Array) -> jax.Array:
+    return jnp.sqrt(jnp.mean((a - b) ** 2))
+
+
+def nrmse(a: jax.Array, b: jax.Array) -> jax.Array:
+    rng = jnp.max(a) - jnp.min(a)
+    rng = jnp.where(rng <= 0, jnp.ones_like(rng), rng)
+    return rmse(a, b) / rng
+
+
+def mape(a: jax.Array, b: jax.Array) -> jax.Array:
+    denom = jnp.maximum(jnp.abs(a), 1e-12)
+    return jnp.mean(jnp.abs(a - b) / denom)
+
+
+def cheb(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Chebyshev distance: max absolute deviation across lags."""
+    return jnp.max(jnp.abs(a - b))
+
+
+def msmape(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Modified symmetric MAPE (paper §2.3), with the expanding-window
+    mean-absolute-deviation stabilizer ``S_i``."""
+    n = a.shape[0]
+    idx = jnp.arange(1, n + 1, dtype=a.dtype)
+    csum = jnp.cumsum(a)
+    # expanding mean of a_1..a_{i-1}; define S_1 = 0.
+    prev_mean = jnp.where(idx > 1, (csum - a) / jnp.maximum(idx - 1, 1), 0.0)
+    # expanding mean absolute deviation around the running mean (approximate
+    # the paper's S_i with a causal cumulative form).
+    dev = jnp.abs(a - prev_mean)
+    cdev = jnp.cumsum(dev)
+    s = jnp.where(idx > 1, (cdev - dev) / jnp.maximum(idx - 1, 1), 0.0)
+    denom = jnp.abs(a + b) / 2.0 + s
+    denom = jnp.maximum(denom, 1e-12)
+    return jnp.mean(jnp.abs(a - b) / denom)
+
+
+def psnr(a: jax.Array, b: jax.Array) -> jax.Array:
+    rng = jnp.max(a) - jnp.min(a)
+    m = jnp.mean((a - b) ** 2)
+    return 10.0 * jnp.log10(jnp.maximum(rng * rng, 1e-30) / jnp.maximum(m, 1e-30))
+
+
+_MEASURES = {
+    "mae": mae,
+    "rmse": rmse,
+    "nrmse": nrmse,
+    "mape": mape,
+    "cheb": cheb,
+    "msmape": msmape,
+}
+
+
+def get_measure(name: str):
+    try:
+        return _MEASURES[name]
+    except KeyError:
+        raise ValueError(f"unknown measure {name!r}; have {sorted(_MEASURES)}")

@@ -1,0 +1,84 @@
+"""Deterministic, restart-consistent data pipeline.
+
+Batches are pure functions of (seed, step) — after a preemption/restart the
+loop resumes at the checkpointed step and sees exactly the data it would
+have seen (no loader state to checkpoint; the straggler/elastic story in
+DESIGN.md §5 relies on this).
+
+Two front doors:
+
+* ``token_batch``      — synthetic LM token batches for the assigned archs.
+* ``SeriesTokenizer``  — the CAMEO data plane: real/synthetic sensor series
+  -> (optionally CAMEO-compressed) -> binned into vocab tokens -> windows,
+  used by the forecasting examples and benchmarks (paper §5.8).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro import sharding as shd
+
+
+def token_batch(cfg: ModelConfig, batch: int, seq: int, step: int,
+                seed: int = 0):
+    """Synthetic LM batch for smoke/e2e runs; deterministic in (seed, step)."""
+    key = jax.random.fold_in(jax.random.PRNGKey(seed), step)
+    toks = jax.random.randint(key, (batch, seq), 0, cfg.vocab, jnp.int32)
+    out = {"tokens": toks}
+    if cfg.frontend == "vision_stub" and cfg.n_patches:
+        pk = jax.random.fold_in(key, 1)
+        out["patch_embeds"] = 0.02 * jax.random.normal(
+            pk, (batch, cfg.n_patches, cfg.d_model), jnp.float32)
+    return out
+
+
+@dataclasses.dataclass
+class SeriesTokenizer:
+    """Uniform-bin quantizer mapping a scalar series into LM tokens.
+
+    Fit on the raw series (min/max), so compressed and raw variants of the
+    same series share a codebook — forecasting comparisons stay apples-to-
+    apples (paper §5.8 trains models on compressed data, evaluates on raw).
+    """
+    vocab: int
+    lo: float = 0.0
+    hi: float = 1.0
+
+    @classmethod
+    def fit(cls, x, vocab: int) -> "SeriesTokenizer":
+        x = np.asarray(x)
+        lo, hi = float(np.min(x)), float(np.max(x))
+        if hi <= lo:
+            hi = lo + 1.0
+        return cls(vocab=vocab, lo=lo, hi=hi)
+
+    def encode(self, x) -> np.ndarray:
+        x = np.asarray(x)
+        t = (x - self.lo) / (self.hi - self.lo)
+        return np.clip((t * (self.vocab - 1)).round(), 0,
+                       self.vocab - 1).astype(np.int32)
+
+    def decode(self, tokens) -> np.ndarray:
+        t = np.asarray(tokens, np.float64) / (self.vocab - 1)
+        return t * (self.hi - self.lo) + self.lo
+
+
+def series_windows(tokens: np.ndarray, window: int, stride: int) -> np.ndarray:
+    """[n] token stream -> [num_windows, window] training rows."""
+    n = tokens.shape[0]
+    starts = np.arange(0, n - window + 1, stride)
+    return np.stack([tokens[s:s + window] for s in starts])
+
+
+def forecast_batches(windows: np.ndarray, batch: int, step: int,
+                     seed: int = 0):
+    """Deterministic batch of windows for a given step."""
+    rng = np.random.default_rng(seed + step)
+    idx = rng.integers(0, windows.shape[0], size=batch)
+    return {"tokens": jnp.asarray(windows[idx])}

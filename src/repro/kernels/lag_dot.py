@@ -1,0 +1,75 @@
+"""Pallas TPU kernel for the lagged self-products ``sxx_l`` (Eq. 7).
+
+ExtractAggregates is O(nL), dominated by ``sxx_l = sum_t y_t * y_{t+l}``
+(paper §4.2); the four moment sums are O(n + L) prefix work and stay in XLA.
+The kernel streams the series through VMEM in blocks along the time axis and
+accumulates the [L] partial products across sequential grid steps (TPU grid
+iteration is sequential, so accumulation into the output block is safe).
+
+Each block loads ``[B + L]`` values (B-aligned slab + L halo from the next
+slab — zero past the series end, which also masks the invalid lag pairs) and
+runs an L-step loop of [1, B] multiply-reduce ops on the VPU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def lag_dot_kernel(y_ref, yh_ref, out_ref, *, L: int, B: int, Lpad: int):
+    pid = pl.program_id(0)
+
+    @pl.when(pid == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    y_blk = y_ref[...].reshape(1, B)          # this slab
+
+    def lag_body(lag, acc):
+        seg = yh_ref[0, pl.dslice(lag, B)].reshape(1, B)  # slab + halo ref
+        acc = acc.at[lag - 1].add(jnp.sum(y_blk * seg))
+        return acc
+
+    partial = jax.lax.fori_loop(
+        1, L + 1, lag_body, jnp.zeros((Lpad,), out_ref.dtype))
+    out_ref[...] += partial
+
+
+@functools.partial(jax.jit, static_argnames=("L", "block", "interpret"))
+def lag_dot_pallas(y, *, L: int, block: int = 4096, interpret: bool = False):
+    """``sxx[l-1] = sum_{t<=n-1-l} y_t y_{t+l}`` for l in 1..L, shape [L]."""
+    n = y.shape[0]
+    dtype = y.dtype
+    B = block
+    pad = (-n) % B
+    npad = n + pad
+    Lpad = max(128, ((L + 127) // 128) * 128)   # lane-aligned accumulator
+    y_main = jnp.pad(y, (0, pad))
+    y_halo = jnp.pad(y, (0, pad + Lpad))        # slab + L halo reads
+
+    grid = (npad // B,)
+    kernel = functools.partial(lag_dot_kernel, L=L, B=B, Lpad=Lpad)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((B,), lambda i: (i,)),
+            # pre-materialized per-block halo slabs, one row per grid step
+            pl.BlockSpec((1, B + Lpad), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((Lpad,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((Lpad,), dtype),
+        interpret=interpret,
+    )(y_main, _halo_view(y_halo, npad, B, Lpad))
+    return out[:L]
+
+
+def _halo_view(y_halo, npad: int, B: int, Lpad: int):
+    """Materialize per-block halo slabs [nblocks, B + Lpad] so BlockSpec
+    indexing stays non-overlapping (Pallas blocks must tile the input)."""
+    nblocks = npad // B
+    idx = (jnp.arange(nblocks) * B)[:, None] + jnp.arange(B + Lpad)[None, :]
+    return y_halo[idx]

@@ -1,0 +1,45 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+On TPU the compiled kernels run natively; everywhere else (this CPU
+container) they execute in ``interpret=True`` mode, which runs the kernel
+body through XLA on CPU — bit-faithful to the kernel semantics, so the
+tests' allclose-vs-oracle checks validate the real kernel logic.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.acf import Aggregates
+from repro.kernels.acf_impact import acf_impact_pallas
+from repro.kernels.lag_dot import lag_dot_pallas
+from repro.kernels import ref as _ref
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def agg_to_table(agg: Aggregates) -> jax.Array:
+    return jnp.stack([agg.sx, agg.sxl, agg.sx2, agg.sxl2, agg.sxx])
+
+
+def acf_impact(y, dval, agg, p0, *, measure: str = "mae",
+               block: int = 1024, use_kernel: bool = True):
+    """Algorithm-2 impacts for all points: D(ACF_after_delta_i, P0), [n]."""
+    L = p0.shape[0]
+    table = agg_to_table(agg) if isinstance(agg, Aggregates) else agg
+    if not use_kernel:
+        return _ref.acf_impact_ref(y, dval, table, p0, L=L, measure=measure)
+    return acf_impact_pallas(
+        y, dval, table, p0, L=L, measure=measure, block=block,
+        interpret=_interpret())
+
+
+def lag_dot(y, L: int, *, block: int = 4096, use_kernel: bool = True):
+    """Lagged self-products sxx_l for l=1..L, [L]."""
+    if not use_kernel:
+        return _ref.lag_dot_ref(y, L=L)
+    return lag_dot_pallas(y, L=L, block=block, interpret=_interpret())

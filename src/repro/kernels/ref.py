@@ -1,0 +1,41 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose targets in tests)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.acf import Aggregates
+from repro.core.aggregates import acf_after_single_delta
+
+
+@functools.partial(jax.jit, static_argnames=("L", "measure"))
+def acf_impact_ref(y, dval, agg_table, p0, *, L: int, measure: str = "mae"):
+    """Oracle for kernels.acf_impact: Algorithm-2 impacts for all points."""
+    n = y.shape[0]
+    agg = Aggregates(sx=agg_table[0], sxl=agg_table[1], sx2=agg_table[2],
+                     sxl2=agg_table[3], sxx=agg_table[4])
+    idx = jnp.arange(n, dtype=jnp.int32)
+    rows = acf_after_single_delta(agg, y, idx, dval)     # [n, L]
+    diff = rows - p0[None, :]
+    if measure == "mae":
+        return jnp.mean(jnp.abs(diff), axis=1)
+    if measure == "rmse":
+        return jnp.sqrt(jnp.mean(diff * diff, axis=1))
+    if measure == "cheb":
+        return jnp.max(jnp.abs(diff), axis=1)
+    raise ValueError(measure)
+
+
+@functools.partial(jax.jit, static_argnames=("L",))
+def lag_dot_ref(y, *, L: int):
+    """Oracle for kernels.lag_dot: sxx[l-1] = sum_t y_t y_{t+l}."""
+    n = y.shape[0]
+
+    def one(l):
+        shifted = jnp.roll(y, -l)
+        mask = jnp.arange(n) <= (n - 1 - l)
+        return jnp.sum(jnp.where(mask, y * shifted, 0.0))
+
+    return jax.vmap(one)(jnp.arange(1, L + 1))

@@ -1,0 +1,275 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import (jax locks the device
+# count at first init).  Everything below is ordinary.
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+production mesh(es); record memory analysis, cost analysis, and collective
+traffic for the roofline (EXPERIMENTS.md §Dry-run / §Roofline).
+
+Usage:
+  python -m repro.launch.dryrun --arch smollm-135m --shape train_4k
+  python -m repro.launch.dryrun --arch gemma3-27b --shape long_500k --multi-pod
+  python -m repro.launch.dryrun --all            # subprocess per cell
+"""
+import argparse
+import json
+import subprocess
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro import sharding as shd
+from repro.configs.base import SHAPES
+from repro.configs.registry import (LONG_CONTEXT_ARCHS, ARCH_IDS, cells,
+                                    get_config, active_param_count)
+from repro.launch.hlo import collective_summary, module_cost
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import (batch_specs, default_train_config,
+                                opt_state_abstract, params_abstract)
+from repro.models.model import decode_step, prefill
+from repro.train.step import build_train_step
+
+# TPU v5e-class hardware model (per chip)
+HW = {"peak_flops": 197e12, "hbm_bw": 819e9, "link_bw": 50e9}
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__),
+                           "..", "..", "..", "benchmarks", "results", "dryrun")
+
+
+def _arg_bytes(tree, mesh) -> int:
+    """Per-device bytes of abstract inputs (sharded sizes)."""
+    total = 0
+    for leaf in jax.tree.leaves(tree):
+        n = 1
+        for d in leaf.shape:
+            n *= d
+        shards = 1
+        sh = getattr(leaf, "sharding", None)
+        if sh is not None and hasattr(sh, "num_devices") and sh.num_devices:
+            # per-device shard size = global size / number of distinct shards
+            try:
+                shard_shape = sh.shard_shape(leaf.shape)
+                n = 1
+                for d in shard_shape:
+                    n *= d
+            except Exception:
+                pass
+        total += n * jnp.dtype(leaf.dtype).itemsize
+    return total
+
+
+def _memory_analysis(compiled):
+    try:
+        ma = compiled.memory_analysis()
+        return {
+            "argument_bytes": getattr(ma, "argument_size_in_bytes", None),
+            "output_bytes": getattr(ma, "output_size_in_bytes", None),
+            "temp_bytes": getattr(ma, "temp_size_in_bytes", None),
+            "generated_code_bytes": getattr(ma, "generated_code_size_in_bytes",
+                                            None),
+            "alias_bytes": getattr(ma, "alias_size_in_bytes", None),
+        }
+    except Exception as e:  # CPU backend may not implement it
+        return {"error": str(e)}
+
+
+def _parse_override(kv: str):
+    k, v = kv.split("=", 1)
+    for cast in (int, float):
+        try:
+            return k, cast(v)
+        except ValueError:
+            pass
+    if v in ("True", "False"):
+        return k, v == "True"
+    if v == "None":
+        return k, None
+    return k, v
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             extra_rules: dict | None = None, save: bool = True,
+             overrides: dict | None = None, tag: str = "") -> dict:
+    import dataclasses
+    cfg = get_config(arch)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    info = SHAPES[shape_name]
+    chips = 512 if multi_pod else 256
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = shd.default_rules(multi_pod=multi_pod, fsdp=True)
+    if shape_name == "long_500k":
+        rules["act_cache_seq"] = "data"   # 512k caches sharded over data
+    if extra_rules:
+        rules.update(extra_rules)
+
+    t0 = time.time()
+    with shd.use_sharding(mesh, rules):
+        kind = info["kind"]
+        if kind == "train":
+            tcfg = default_train_config(cfg)
+            params = params_abstract(cfg, mesh, rules)
+            opt = opt_state_abstract(params, tcfg, mesh)
+            batch = batch_specs(cfg, shape_name, mesh, rules)
+            step_fn = build_train_step(cfg, tcfg)
+            step = jax.ShapeDtypeStruct((), jnp.int32)
+            lowered = jax.jit(step_fn).lower(params, opt, batch, step)
+            step_kind = "train_step"
+            tokens = info["global_batch"] * info["seq_len"]
+            model_flops = 6.0 * active_param_count(cfg) * tokens
+        elif kind == "prefill":
+            params = params_abstract(cfg, mesh, rules)
+            batch = batch_specs(cfg, shape_name, mesh, rules)
+            fn = lambda p, b: prefill(p, cfg, b)
+            lowered = jax.jit(fn).lower(params, batch)
+            step_kind = "prefill_step"
+            tokens = info["global_batch"] * info["seq_len"]
+            model_flops = 2.0 * active_param_count(cfg) * tokens
+        else:  # decode
+            params = params_abstract(cfg, mesh, rules)
+            spec = batch_specs(cfg, shape_name, mesh, rules)
+            fn = lambda p, c, t, pos: decode_step(p, cfg, t, c, pos)
+            lowered = jax.jit(fn).lower(
+                params, spec["caches"], spec["token"], spec["pos"])
+            step_kind = "serve_step"
+            tokens = info["global_batch"]   # one token per sequence
+            model_flops = 2.0 * active_param_count(cfg) * tokens
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    xla_flops = float(cost.get("flops", -1.0))
+    xla_bytes = float(cost.get("bytes accessed", -1.0))
+    mem = _memory_analysis(compiled)
+    hlo = compiled.as_text()
+    colls = collective_summary(hlo, chips, default_trip=cfg.n_blocks)
+    # XLA's cost_analysis counts while (scan) bodies once, and re-multiplying
+    # the HLO text fights XLA's loop-widening transforms — so compute/memory
+    # terms come from the exact analytic per-arch model (launch.analytic),
+    # cross-checked against the XLA per-body count recorded alongside.
+    from repro.launch.analytic import step_flops, step_hbm_bytes
+    model_par = mesh.shape.get("model", 1)
+    fl = step_flops(cfg, shape_name)
+    flops = fl["flops_global"] / chips
+    hb = step_hbm_bytes(cfg, shape_name, chips, model_par=model_par)
+    bytes_acc = hb["hbm_bytes_per_device"]
+
+    compute_term = flops / HW["peak_flops"]
+    memory_term = bytes_acc / HW["hbm_bw"]
+    collective_term = colls["per_device_wire_bytes"] / HW["link_bw"]
+    terms = {"compute_s": compute_term, "memory_s": memory_term,
+             "collective_s": collective_term}
+    dominant = max(terms, key=terms.get)
+    step_time = max(terms.values())
+    mf_per_device = model_flops / chips
+    useful_ratio = mf_per_device / flops if flops > 0 else None
+    roofline_fraction = (mf_per_device / HW["peak_flops"]) / step_time \
+        if step_time > 0 else None
+
+    result = {
+        "arch": arch, "shape": shape_name, "step": step_kind,
+        "mesh": "2x16x16" if multi_pod else "16x16", "chips": chips,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "per_device": {
+            "hlo_flops": flops, "hlo_bytes": bytes_acc,
+            "xla_cost_flops": xla_flops, "xla_cost_bytes": xla_bytes,
+            "collective_wire_bytes": colls["per_device_wire_bytes"],
+            "arg_bytes": _arg_bytes(
+                params if kind != "train" else (params, opt), mesh),
+        },
+        "collectives": {"by_kind": colls["by_kind_bytes"],
+                        "op_counts": colls["op_counts"]},
+        "memory_analysis": mem,
+        "roofline": {
+            **terms,
+            "dominant": dominant,
+            "model_flops_global": model_flops,
+            "model_flops_per_device": mf_per_device,
+            "useful_flops_ratio": useful_ratio,
+            "roofline_fraction": roofline_fraction,
+        },
+    }
+    if save:
+        os.makedirs(RESULTS_DIR, exist_ok=True)
+        fname = f"{arch}_{shape_name}_{'2x16x16' if multi_pod else '16x16'}"
+        if tag:
+            fname += f"__{tag}"
+            result["variant"] = tag
+        with open(os.path.join(RESULTS_DIR, fname + ".json"), "w") as f:
+            json.dump(result, f, indent=1)
+    return result
+
+
+def _print_result(r: dict):
+    rf = r["roofline"]
+    print(f"[dryrun] {r['arch']} x {r['shape']} on {r['mesh']} ({r['step']})")
+    print(f"  lower {r['lower_s']}s  compile {r['compile_s']}s")
+    print(f"  per-device: {r['per_device']['hlo_flops']:.3e} flops, "
+          f"{r['per_device']['hlo_bytes']:.3e} bytes, "
+          f"{r['per_device']['collective_wire_bytes']:.3e} coll bytes")
+    print(f"  memory_analysis: {r['memory_analysis']}")
+    print(f"  roofline: compute {rf['compute_s']:.4f}s | memory "
+          f"{rf['memory_s']:.4f}s | collective {rf['collective_s']:.4f}s "
+          f"-> dominant {rf['dominant']}")
+    print(f"  useful-flops ratio {rf['useful_flops_ratio'] and round(rf['useful_flops_ratio'], 3)}; "
+          f"roofline fraction {rf['roofline_fraction'] and round(rf['roofline_fraction'], 4)}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=tuple(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true",
+                    help="run every runnable cell in subprocesses")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--timeout", type=int, default=3600)
+    ap.add_argument("--set", action="append", default=[],
+                    help="config override key=value (e.g. moe_impl=a2a)")
+    ap.add_argument("--rule", action="append", default=[],
+                    help="sharding-rule override key=value "
+                         "(e.g. fsdp=None, act_seq=model)")
+    ap.add_argument("--tag", default="",
+                    help="variant tag for the result filename (perf log)")
+    args = ap.parse_args()
+
+    if args.all:
+        meshes = [False, True] if args.both_meshes else [args.multi_pod]
+        failures = []
+        for arch, shape, runnable in cells(include_skipped=False):
+            for mp in meshes:
+                cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                       "--arch", arch, "--shape", shape] + \
+                    (["--multi-pod"] if mp else [])
+                print(f"=== {arch} x {shape} ({'2x16x16' if mp else '16x16'}) ===",
+                      flush=True)
+                rc = subprocess.run(cmd, timeout=args.timeout).returncode
+                if rc != 0:
+                    failures.append((arch, shape, mp))
+        if failures:
+            print("FAILURES:", failures)
+            sys.exit(1)
+        print("ALL CELLS COMPILED")
+        return
+
+    if not args.arch or not args.shape:
+        ap.error("--arch and --shape required (or --all)")
+    if args.shape == "long_500k" and args.arch not in LONG_CONTEXT_ARCHS:
+        print(f"[dryrun] SKIP {args.arch} x long_500k: pure full-attention "
+              f"arch (see DESIGN.md §Arch-applicability)")
+        return
+    overrides = dict(_parse_override(kv) for kv in args.set)
+    extra_rules = dict(_parse_override(kv) for kv in args.rule) or None
+    r = run_cell(args.arch, args.shape, args.multi_pod,
+                 extra_rules=extra_rules, overrides=overrides, tag=args.tag)
+    _print_result(r)
+
+
+if __name__ == "__main__":
+    main()

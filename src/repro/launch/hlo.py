@@ -1,0 +1,351 @@
+"""Post-SPMD HLO analysis: per-device collective traffic for the roofline.
+
+``cost_analysis()`` gives FLOPs and memory bytes but not collective volume,
+so we parse the optimized (partitioned) HLO text:
+
+* every ``all-gather / all-reduce / reduce-scatter / all-to-all /
+  collective-permute`` instruction's operand/output bytes,
+* its replica-group size g (both ``{{0,1},...}`` and iota
+  ``[groups,size]<=[N]`` forms),
+* the *loop multiplier*: collectives inside a ``while`` body (scan over
+  blocks, microbatch loops) execute once per iteration — trip counts come
+  from XLA's ``known_trip_count`` backend config, with a caller-provided
+  fallback for bodies XLA didn't annotate.
+
+Ring-model bytes-on-the-wire per device:
+  all-gather: O*(g-1)/g       (O = per-device output bytes)
+  reduce-scatter: O*(g-1)     (O = per-device scattered output)
+  all-reduce: 2*Z*(g-1)/g
+  all-to-all: Z*(g-1)/g
+  collective-permute: Z
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLL_KINDS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+?)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Total bytes of a shape string like 'f32[128,1024]' or a tuple
+    '(f32[8], bf16[4,4])'."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str, total_devices: int) -> int:
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]<=\[", line)
+    if m:
+        return int(m.group(2))
+    m = re.search(r"replica_groups=\{\{([^}]*)\}", line)
+    if m:
+        first = m.group(1).strip()
+        return len(first.split(",")) if first else 1
+    m = re.search(r"replica_groups=\{\}", line)
+    if m:
+        return total_devices
+    return total_devices
+
+
+@dataclasses.dataclass
+class Collective:
+    kind: str
+    bytes_buffer: int       # per-device buffer bytes (shape on the line)
+    group: int
+    computation: str
+    multiplier: int         # loop trip count product
+
+    @property
+    def wire_bytes(self) -> float:
+        g = max(self.group, 1)
+        z = self.bytes_buffer
+        if self.kind == "all-gather":
+            return z * (g - 1) / g
+        if self.kind == "reduce-scatter":
+            return z * (g - 1)
+        if self.kind == "all-reduce":
+            return 2.0 * z * (g - 1) / g
+        if self.kind == "all-to-all":
+            return z * (g - 1) / g
+        return float(z)     # collective-permute
+
+
+def _computations(hlo: str) -> Dict[str, List[str]]:
+    """computation name -> list of instruction lines."""
+    comps: Dict[str, List[str]] = {}
+    current = None
+    for line in hlo.splitlines():
+        stripped = line.strip()
+        if stripped.endswith("{") and ") -> " in stripped:
+            m = re.match(r"(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(", stripped)
+            if m:
+                current = m.group(1)
+                comps[current] = []
+                continue
+        if stripped.startswith("}"):
+            current = None
+            continue
+        if current is not None and (stripped.startswith("%")
+                                    or stripped.startswith("ROOT")):
+            comps[current].append(stripped)
+    return comps
+
+
+def _entry_name(hlo: str) -> Optional[str]:
+    m = re.search(r"ENTRY\s+%?([\w\.\-]+)", hlo)
+    return m.group(1) if m else None
+
+
+def parse_collectives(hlo: str, total_devices: int,
+                      default_trip: int = 1) -> List[Collective]:
+    comps = _computations(hlo)
+    entry = _entry_name(hlo)
+
+    # while-op edges: caller computation -> (body name, trip count)
+    body_trip: Dict[str, int] = {}
+    call_edges: Dict[str, List[str]] = {c: [] for c in comps}
+    for cname, lines in comps.items():
+        for line in lines:
+            if re.search(r"=\s*\S*\s*while\(", line) or " while(" in line:
+                mb = re.search(r"body=%?([\w\.\-]+)", line)
+                mt = re.search(r'known_trip_count[="\{:\s]+"?n"?[":\s]+"?(\d+)',
+                               line)
+                if mb:
+                    trip = int(mt.group(1)) if mt else default_trip
+                    body_trip[mb.group(1)] = trip
+                    call_edges[cname].append(mb.group(1))
+                mc = re.search(r"condition=%?([\w\.\-]+)", line)
+                if mc:
+                    call_edges[cname].append(mc.group(1))
+            else:
+                for attr in ("to_apply", "body", "condition", "branch_computations"):
+                    for mm in re.finditer(attr + r"=%?([\w\.\-]+)", line):
+                        call_edges[cname].append(mm.group(1))
+                for mm in re.finditer(r"calls=%?([\w\.\-]+)", line):
+                    call_edges[cname].append(mm.group(1))
+
+    # propagate multipliers from entry through the call graph
+    mult: Dict[str, int] = {}
+
+    def visit(name: str, m: int):
+        if name not in comps:
+            return
+        mult[name] = max(mult.get(name, 0), m)
+        for callee in call_edges.get(name, []):
+            child_m = m * body_trip.get(callee, 1)
+            if mult.get(callee, 0) < child_m:
+                visit(callee, child_m)
+
+    if entry:
+        visit(entry, 1)
+    else:
+        for c in comps:
+            mult.setdefault(c, 1)
+
+    out: List[Collective] = []
+    for cname, lines in comps.items():
+        m = mult.get(cname, default_trip)
+        for line in lines:
+            for kind in _COLL_KINDS:
+                # match `kind(` as the opcode (avoid -start/-done dupes:
+                # count only the -start or the plain form)
+                op_m = re.search(rf"\s{kind}(-start)?\(", line)
+                if op_m and f"{kind}-done" not in line:
+                    # shape(s) live between '=' and the opcode; tuple shapes
+                    # (e.g. variadic all-to-all) parse element-wise
+                    eq = line.find("=")
+                    shape_part = line[eq + 1: op_m.start() + 1] if eq >= 0 \
+                        else line[: op_m.start() + 1]
+                    nbytes = _shape_bytes(shape_part)
+                    g = _group_size(line, total_devices)
+                    out.append(Collective(kind=kind, bytes_buffer=nbytes,
+                                          group=g, computation=cname,
+                                          multiplier=m))
+                    break
+    return out
+
+
+# ---------------------------------------------------------------------------
+# analytic module cost (XLA's cost_analysis counts while bodies ONCE; we
+# re-derive flops/bytes with loop-trip multipliers from the same text)
+# ---------------------------------------------------------------------------
+
+_INSTR_RE = re.compile(
+    r"^(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(.+?)\s+([a-z][\w\-]*)\((.*)$")
+
+_SKIP_BYTES_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota",
+}
+
+
+def _call_graph(comps: Dict[str, List[str]], default_trip: int):
+    """Returns (multipliers, fusion_bodies) over the computation graph."""
+    body_trip: Dict[str, int] = {}
+    call_edges: Dict[str, List[str]] = {c: [] for c in comps}
+    fusion_bodies = set()
+    for cname, lines in comps.items():
+        for line in lines:
+            if re.search(r"\swhile\(", line):
+                mb = re.search(r"body=%?([\w\.\-]+)", line)
+                mt = re.search(
+                    r'known_trip_count[="\{:\s]+"?n"?[":\s]+"?(\d+)', line)
+                if mb:
+                    body_trip[mb.group(1)] = int(mt.group(1)) if mt \
+                        else default_trip
+                    call_edges[cname].append(mb.group(1))
+                mc = re.search(r"condition=%?([\w\.\-]+)", line)
+                if mc:
+                    call_edges[cname].append(mc.group(1))
+                continue
+            is_fusion = re.search(r"\sfusion\(", line) is not None
+            for mm in re.finditer(r"(?:calls|to_apply)=%?([\w\.\-]+)", line):
+                call_edges[cname].append(mm.group(1))
+                if is_fusion:
+                    fusion_bodies.add(mm.group(1))
+            for mm in re.finditer(r"branch_computations=\{([^}]*)\}", line):
+                for b in mm.group(1).split(","):
+                    call_edges[cname].append(b.strip().lstrip("%"))
+    return body_trip, call_edges, fusion_bodies
+
+
+def _multipliers(hlo: str, comps, default_trip: int):
+    body_trip, call_edges, fusion_bodies = _call_graph(comps, default_trip)
+    entry = _entry_name(hlo)
+    mult: Dict[str, int] = {}
+
+    def visit(name: str, m: int):
+        if name not in comps:
+            return
+        if mult.get(name, 0) >= m:
+            return
+        mult[name] = m
+        for callee in call_edges.get(name, []):
+            visit(callee, m * body_trip.get(callee, 1))
+
+    if entry:
+        visit(entry, 1)
+    for c in comps:
+        mult.setdefault(c, 1)
+    return mult, fusion_bodies
+
+
+def _parse_dims(shape_str: str):
+    """First shape in the string -> (dtype, [dims])."""
+    m = _SHAPE_RE.search(shape_str)
+    if not m:
+        return None, []
+    dims = [int(d) for d in m.group(2).split(",")] if m.group(2) else []
+    return m.group(1), dims
+
+
+def module_cost(hlo: str, default_trip: int = 1) -> dict:
+    """Per-device (flops, hbm_bytes) with while-loop multipliers.
+
+    flops: dot/convolution ops (2 * out_elems * contracted), counted in every
+    computation (fusion bodies inherit their caller's multiplier).
+    hbm_bytes: operand+output bytes of every top-level (post-fusion)
+    instruction — each fusion reads its inputs and writes its outputs from/to
+    HBM exactly once, so this is the natural traffic model.
+    """
+    comps = _computations(hlo)
+    mult, fusion_bodies = _multipliers(hlo, comps, default_trip)
+
+    # def-site shape maps: per computation, name -> (dtype, dims, bytes)
+    defs: Dict[str, Dict[str, tuple]] = {}
+    global_defs: Dict[str, tuple] = {}
+    parsed: Dict[str, List[tuple]] = {}
+    for cname, lines in comps.items():
+        dmap = {}
+        plist = []
+        for line in lines:
+            m = _INSTR_RE.match(line)
+            if not m:
+                continue
+            name, shape_str, opcode, rest = m.groups()
+            nbytes = _shape_bytes(shape_str)
+            dt, dims = _parse_dims(shape_str)
+            dmap[name] = (dt, dims, nbytes)
+            global_defs.setdefault(name, (dt, dims, nbytes))
+            plist.append((name, shape_str, opcode, rest, line))
+        defs[cname] = dmap
+        parsed[cname] = plist
+
+    def lookup(cname, opname):
+        return defs[cname].get(opname) or global_defs.get(opname) \
+            or (None, [], 0)
+
+    flops = 0.0
+    hbm = 0.0
+    for cname, plist in parsed.items():
+        m = mult.get(cname, 1)
+        top_level = cname not in fusion_bodies
+        for name, shape_str, opcode, rest, line in plist:
+            if opcode == "dot":
+                _, out_dims, _ = lookup(cname, name)
+                ops = re.findall(r"%([\w\.\-]+)", rest)
+                lhs_dims = lookup(cname, ops[0])[1] if ops else []
+                mcd = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", line)
+                contracted = 1
+                if mcd and mcd.group(1):
+                    for d in mcd.group(1).split(","):
+                        if int(d) < len(lhs_dims):
+                            contracted *= lhs_dims[int(d)]
+                out_elems = 1
+                for d in out_dims:
+                    out_elems *= d
+                flops += 2.0 * out_elems * contracted * m
+            elif opcode == "convolution":
+                _, out_dims, _ = lookup(cname, name)
+                mw = re.search(r"window=\{size=([\dx]+)", line)
+                ksize = 1
+                if mw:
+                    for d in mw.group(1).split("x"):
+                        ksize *= int(d)
+                out_elems = 1
+                for d in out_dims:
+                    out_elems *= d
+                flops += 2.0 * out_elems * ksize * m
+            if top_level and opcode not in _SKIP_BYTES_OPS:
+                _, _, out_bytes = lookup(cname, name)
+                total = out_bytes
+                for op in re.findall(r"%([\w\.\-]+)", rest.split("),")[0]):
+                    total += lookup(cname, op)[2]
+                hbm += total * m
+    return {"flops": flops, "hbm_bytes": hbm}
+
+
+def collective_summary(hlo: str, total_devices: int,
+                       default_trip: int = 1) -> dict:
+    colls = parse_collectives(hlo, total_devices, default_trip)
+    by_kind: Dict[str, float] = {}
+    count: Dict[str, int] = {}
+    for c in colls:
+        by_kind[c.kind] = by_kind.get(c.kind, 0.0) + c.wire_bytes * c.multiplier
+        count[c.kind] = count.get(c.kind, 0) + c.multiplier
+    return {
+        "per_device_wire_bytes": sum(by_kind.values()),
+        "by_kind_bytes": by_kind,
+        "op_counts": count,
+        "n_sites": len(colls),
+    }

@@ -1,0 +1,43 @@
+"""Serving launcher: ``python -m repro.launch.serve --arch <id> [...]``."""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.registry import ARCH_IDS, get_config, get_reduced
+from repro.models.model import model_defs
+from repro.models.params import init_params
+from repro.serving.engine import Engine, ServeConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=ARCH_IDS)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--new-tokens", type=int, default=64)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--reduced", action="store_true", default=None)
+    args = ap.parse_args()
+
+    on_cpu = jax.default_backend() == "cpu"
+    reduced = args.reduced if args.reduced is not None else on_cpu
+    cfg = get_reduced(args.arch) if reduced else get_config(args.arch)
+    params = init_params(model_defs(cfg), jax.random.PRNGKey(0))
+    eng = Engine(cfg, params, ServeConfig(max_new_tokens=args.new_tokens,
+                                          temperature=args.temperature))
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(
+        0, cfg.vocab, size=(args.batch, args.prompt_len)).astype(np.int32)
+    eng.generate(prompts)
+    t0 = time.perf_counter()
+    eng.generate(prompts)
+    dt = time.perf_counter() - t0
+    print(f"{cfg.name}: {args.batch * args.new_tokens / dt:.1f} tok/s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,108 @@
+"""ShapeDtypeStruct input stand-ins for every (arch x shape) dry-run cell.
+
+Follows the shannon/kernels pattern: weak-type-correct, shardable, zero
+allocation.  ``train_*`` shapes feed ``train_step``; ``prefill_*`` feed
+``prefill``; ``decode_*`` / ``long_*`` feed ``serve_step`` (one token
+against a seq_len cache).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import sharding as shd
+from repro.configs.base import SHAPES, ModelConfig
+from repro.models.model import cache_specs, model_defs
+from repro.models.params import abstract_params, param_specs
+from repro.optim.adafactor import AdafactorConfig, _factored
+from repro.train.step import TrainConfig
+
+
+def _sds(shape, dtype, axes, mesh, rules):
+    return jax.ShapeDtypeStruct(
+        shape, dtype, sharding=shd.named_sharding(shape, axes, mesh, rules))
+
+
+def batch_specs(cfg: ModelConfig, shape_name: str, mesh, rules):
+    info = SHAPES[shape_name]
+    B, S = info["global_batch"], info["seq_len"]
+    kind = info["kind"]
+    if kind in ("train", "prefill"):
+        out = {"tokens": _sds((B, S), jnp.int32,
+                              ("act_batch", "act_seq"), mesh, rules)}
+        if cfg.frontend == "vision_stub" and cfg.n_patches:
+            out["patch_embeds"] = _sds(
+                (B, cfg.n_patches, cfg.d_model), cfg.adtype(),
+                ("act_batch", None, "act_embed"), mesh, rules)
+        return out
+    # decode: one new token against a seq_len cache
+    token = _sds((B, 1), jnp.int32, ("act_batch", None), mesh, rules)
+    caches = cache_specs(cfg, B, S, mesh, rules)
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    return {"token": token, "caches": caches, "pos": pos}
+
+
+def params_abstract(cfg: ModelConfig, mesh, rules):
+    return abstract_params(model_defs(cfg), mesh, rules,
+                           param_dtype=cfg.pdtype())
+
+
+def opt_state_abstract(params_abs, tcfg: TrainConfig, mesh):
+    """Optimizer-state stand-ins mirroring parameter shardings.
+
+    AdamW: m/v mirror params exactly (ZeRO via FSDP rules).  Adafactor:
+    row/col factors inherit the parameter spec minus the reduced dim.
+    """
+    from repro.optim.adamw import AdamWState
+    from repro.optim.adafactor import AdafactorState
+
+    def spec_of(p):
+        return p.sharding.spec if isinstance(p.sharding, NamedSharding) else P()
+
+    if tcfg.optimizer == "adamw":
+        dt = tcfg.adamw.state_dtype
+
+        def mirror(p):
+            return jax.ShapeDtypeStruct(
+                p.shape, jnp.dtype(dt) if dt else p.dtype, sharding=p.sharding)
+
+        step = jax.ShapeDtypeStruct((), jnp.int32,
+                                    sharding=NamedSharding(mesh, P()))
+        return AdamWState(m=jax.tree.map(mirror, params_abs),
+                          v=jax.tree.map(mirror, params_abs), step=step)
+
+    acfg = tcfg.adafactor
+
+    def vr_abs(p):
+        spec = tuple(spec_of(p))
+        if _factored(p.shape, acfg):
+            return jax.ShapeDtypeStruct(
+                p.shape[:-1], jnp.float32,
+                sharding=NamedSharding(mesh, P(*spec[:-1])))
+        return jax.ShapeDtypeStruct(p.shape, jnp.float32, sharding=p.sharding)
+
+    def vc_abs(p):
+        spec = tuple(spec_of(p))
+        if _factored(p.shape, acfg):
+            return jax.ShapeDtypeStruct(
+                p.shape[:-2] + p.shape[-1:], jnp.float32,
+                sharding=NamedSharding(mesh, P(*(spec[:-2] + spec[-1:]))))
+        return jax.ShapeDtypeStruct((1,), jnp.float32,
+                                    sharding=NamedSharding(mesh, P()))
+
+    step = jax.ShapeDtypeStruct((), jnp.int32,
+                                sharding=NamedSharding(mesh, P()))
+    return AdafactorState(vr=jax.tree.map(vr_abs, params_abs),
+                          vc=jax.tree.map(vc_abs, params_abs), step=step)
+
+
+def default_train_config(cfg: ModelConfig) -> TrainConfig:
+    """Per-arch training substrate defaults: the >=200B MoE/hybrid cells use
+    Adafactor (factored second moments) so optimizer state fits the pod."""
+    if cfg.n_experts and cfg.name.startswith(("kimi", "jamba", "qwen3-moe")):
+        return TrainConfig(optimizer="adafactor")
+    return TrainConfig(optimizer="adamw")

@@ -1,0 +1,66 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [...]``.
+
+On real hardware this builds the production mesh and jits with the sharding
+rules; on this container it runs reduced configs on the local device(s).
+Fault tolerance (resume/SIGTERM checkpointing) comes from train.loop.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro import sharding as shd
+from repro.configs.registry import ARCH_IDS, get_config, get_reduced
+from repro.data.pipeline import token_batch
+from repro.launch.mesh import make_production_mesh
+from repro.models.model import model_defs
+from repro.models.params import init_params
+from repro.train.loop import LoopConfig, train_loop
+from repro.train.step import TrainConfig
+from repro.launch.specs import default_train_config
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=ARCH_IDS)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--reduced", action="store_true", default=None,
+                    help="use the reduced config (default on CPU)")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--peak-lr", type=float, default=3e-4)
+    args = ap.parse_args()
+
+    on_cpu = jax.default_backend() == "cpu"
+    reduced = args.reduced if args.reduced is not None else on_cpu
+    cfg = get_reduced(args.arch) if reduced else get_config(args.arch)
+    tcfg = default_train_config(cfg)
+    tcfg = TrainConfig(optimizer=tcfg.optimizer, peak_lr=args.peak_lr,
+                       warmup=max(args.steps // 20, 2),
+                       total_steps=args.steps)
+
+    use_mesh = len(jax.devices()) >= 256
+    ctx_mesh = make_production_mesh(multi_pod=args.multi_pod) if use_mesh \
+        else None
+    rules = shd.default_rules(multi_pod=args.multi_pod) if use_mesh else None
+
+    def batch_fn(step):
+        return token_batch(cfg, args.batch, args.seq, step)
+
+    with shd.use_sharding(ctx_mesh, rules):
+        params = init_params(model_defs(cfg), jax.random.PRNGKey(0))
+        lcfg = LoopConfig(steps=args.steps, ckpt_dir=args.ckpt_dir,
+                          ckpt_every=max(args.steps // 4, 10),
+                          log_every=max(args.steps // 20, 1))
+        train_loop(cfg, tcfg, lcfg, params, batch_fn,
+                   log_fn=lambda s, m: print(
+                       f"step {s:5d} loss {m['loss']:.4f} "
+                       f"gnorm {m['grad_norm']:.3f} lr {m['lr']:.2e}"))
+
+
+if __name__ == "__main__":
+    main()

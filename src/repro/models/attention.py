@@ -1,0 +1,292 @@
+"""Grouped-query attention: training/prefill (full or chunked flash-style)
+and single-token decode against a (possibly windowed ring) KV cache.
+
+Sharding: query heads are tensor-parallel over ``model``; KV heads are
+sharded only when divisible (else replicated — the divisibility guard in
+repro.sharding).  Softmax statistics are always f32.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import sharding as shd
+from repro.models.layers import apply_mrope, apply_rope, rmsnorm, rmsnorm_defs
+from repro.models.params import ParamDef
+
+NEG_INF = -1e30
+
+
+def attention_defs(d: int, n_heads: int, n_kv: int, head_dim: int,
+                   qk_norm: bool = False, qkv_bias: bool = False):
+    defs = {
+        "q": ParamDef((d, n_heads, head_dim), ("fsdp", "tp", None)),
+        "k": ParamDef((d, n_kv, head_dim), ("fsdp", "kv_tp", None)),
+        "v": ParamDef((d, n_kv, head_dim), ("fsdp", "kv_tp", None)),
+        "o": ParamDef((n_heads, head_dim, d), ("tp", None, "fsdp")),
+    }
+    if qkv_bias:
+        defs["q_bias"] = ParamDef((n_heads, head_dim), ("tp", None), init="zeros")
+        defs["k_bias"] = ParamDef((n_kv, head_dim), ("kv_tp", None), init="zeros")
+        defs["v_bias"] = ParamDef((n_kv, head_dim), ("kv_tp", None), init="zeros")
+    if qk_norm:
+        defs["q_norm"] = rmsnorm_defs(head_dim)
+        defs["k_norm"] = rmsnorm_defs(head_dim)
+    return defs
+
+
+def _project_qkv(p, x, spec):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["q"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["k"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["v"])
+    if "q_bias" in p:
+        q = q + p["q_bias"]
+        k = k + p["k_bias"]
+        v = v + p["v_bias"]
+    if "q_norm" in p:
+        q = rmsnorm(p["q_norm"], q)
+        k = rmsnorm(p["k_norm"], k)
+    q = shd.constrain(q, "act_batch", "act_seq", "act_heads", None)
+    k = shd.constrain(k, "act_batch", "act_seq", "act_kv_heads", None)
+    v = shd.constrain(v, "act_batch", "act_seq", "act_kv_heads", None)
+    return q, k, v
+
+
+def _rope_qk(q, k, positions, spec):
+    if spec.pos == "rope":
+        q = apply_rope(q, positions, spec.rope_theta)
+        k = apply_rope(k, positions, spec.rope_theta)
+    elif spec.pos == "mrope":
+        # positions: [3, B, S]
+        q = apply_mrope(q, positions, spec.mrope_sections, spec.rope_theta)
+        k = apply_mrope(k, positions, spec.mrope_sections, spec.rope_theta)
+    return q, k
+
+
+def _mask(q_pos, k_pos, window: Optional[int]):
+    """causal (+ sliding window) mask: [..., S_q, S_k] boolean (True=keep)."""
+    ok = k_pos[..., None, :] <= q_pos[..., :, None]
+    if window is not None:
+        ok &= (q_pos[..., :, None] - k_pos[..., None, :]) < window
+    return ok
+
+
+def _sdpa(q, k, v, mask, scale):
+    """q [B,Sq,H,dh], k/v [B,Sk,K,dh], mask [B,Sq,Sk] -> [B,Sq,H,dh]."""
+    B, Sq, H, dh = q.shape
+    K = k.shape[2]
+    G = H // K
+    qg = q.reshape(B, Sq, K, G, dh)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    scores = jnp.where(mask[:, None, None, :, :], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", w, v.astype(jnp.float32))
+    return out.reshape(B, Sq, H, dh)
+
+
+def _sdpa_chunked(q, k, v, q_pos, k_pos, window, scale, q_chunk, kv_chunk):
+    """Flash-style online-softmax attention: O(S) memory, scan over chunks."""
+    B, S, H, dh = q.shape
+    K = k.shape[2]
+    G = H // K
+    nq = S // q_chunk
+    nk = S // kv_chunk
+    qg = q.reshape(B, nq, q_chunk, K, G, dh)
+    qp = q_pos.reshape(B, nq, q_chunk) if q_pos.ndim == 2 else \
+        q_pos.reshape(nq, q_chunk)
+    kc = k.reshape(B, nk, kv_chunk, K, dh)
+    vc = v.reshape(B, nk, kv_chunk, K, dh)
+    kp = k_pos.reshape(B, nk, kv_chunk) if k_pos.ndim == 2 else \
+        k_pos.reshape(nk, kv_chunk)
+
+    def q_block(qi_and_pos):
+        qi, qpos = qi_and_pos  # [B,qc,K,G,dh], [B,qc] or [qc]
+
+        def kv_step(carry, kv):
+            m, l, acc = carry
+            kj, vj, kpos = kv
+            if qpos.ndim == 1:
+                msk = _mask(qpos, kpos, window)[None]          # [1,qc,kc]
+            else:
+                msk = _mask(qpos, kpos, window)                 # [B,qc,kc]
+            s = jnp.einsum("bqkgd,btkd->bkgqt", qi.astype(jnp.float32),
+                           kj.astype(jnp.float32)) * scale
+            s = jnp.where(msk[:, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bkgqt,btkd->bkgqd", p, vj.astype(jnp.float32))
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, K, G, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, K, G, q_chunk), jnp.float32)
+        a0 = jnp.zeros((B, K, G, q_chunk, dh), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0),
+            (kc.swapaxes(0, 1), vc.swapaxes(0, 1),
+             kp.swapaxes(0, 1) if kp.ndim == 3 else kp))
+        out = acc / jnp.maximum(l[..., None], 1e-30)            # [B,K,G,qc,dh]
+        return jnp.einsum("bkgqd->bqkgd", out)
+
+    qg_t = qg.swapaxes(0, 1)                                    # [nq,B,qc,K,G,dh]
+    qp_t = qp.swapaxes(0, 1) if qp.ndim == 3 else qp
+    out = jax.lax.map(q_block, (qg_t, qp_t))                    # [nq,B,qc,K,G,dh]
+    out = out.swapaxes(0, 1).reshape(B, S, H, dh)
+    return out
+
+
+def attend_train(p, x, positions, spec):
+    """Full-sequence attention for train/prefill.  Returns (out, (k, v))."""
+    B, S, _ = x.shape
+    q, k, v = _project_qkv(p, x, spec)
+    q, k = _rope_qk(q, k, positions, spec)
+    scale = 1.0 / np.sqrt(q.shape[-1])
+    pos = positions if positions.ndim == 2 else positions[0]   # mrope: use t
+    if spec.attn_chunk is not None and S > spec.attn_chunk:
+        out = _sdpa_chunked(q, k, v, pos, pos, spec.window, scale,
+                            q_chunk=spec.attn_chunk, kv_chunk=spec.attn_chunk)
+    else:
+        mask = _mask(pos, pos, spec.window)
+        out = _sdpa(q, k, v, mask, scale)
+    out = out.astype(x.dtype)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["o"])
+    return shd.constrain(y, "act_batch", "act_res_seq", "act_embed"), (k, v)
+
+
+# ---------------------------------------------------------------------------
+# decode with (windowed ring) KV cache
+# ---------------------------------------------------------------------------
+
+class KVCache(NamedTuple):
+    k: jax.Array        # [B, size, K, dh] (activ dtype, or int8 quantized)
+    v: jax.Array        # [B, size, K, dh]
+    pos_ids: jax.Array  # [B, size] int32, -1 where empty
+    k_scale: jax.Array  # [B, size, K, 1] f32 when int8, else [1] placeholder
+    v_scale: jax.Array
+
+
+def kv_cache_size(spec, max_len: int) -> int:
+    if spec.window is not None:
+        return min(spec.window, max_len)
+    prune = max(getattr(spec, "kv_prune", 1), 1)
+    return max(max_len // prune, 1)
+
+
+def _quantized(spec) -> bool:
+    return getattr(spec, "kv_cache_dtype", "same") == "int8"
+
+
+def _quantize_kv(x):
+    """[..., dh] -> (int8 values, f32 scale[..., 1])."""
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1,
+                    keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-8)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def _dequantize_kv(q, scale, dtype):
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def init_kv_cache(spec, B: int, max_len: int, dtype) -> KVCache:
+    size = kv_cache_size(spec, max_len)
+    shape = (B, size, spec.n_kv, spec.head_dim)
+    if _quantized(spec):
+        return KVCache(
+            k=jnp.zeros(shape, jnp.int8), v=jnp.zeros(shape, jnp.int8),
+            pos_ids=jnp.full((B, size), -1, jnp.int32),
+            k_scale=jnp.ones(shape[:-1] + (1,), jnp.float32),
+            v_scale=jnp.ones(shape[:-1] + (1,), jnp.float32))
+    return KVCache(
+        k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype),
+        pos_ids=jnp.full((B, size), -1, jnp.int32),
+        k_scale=jnp.ones((1,), jnp.float32),
+        v_scale=jnp.ones((1,), jnp.float32))
+
+
+def kv_cache_specs(spec, B: int, max_len: int, dtype, mesh, rules):
+    size = kv_cache_size(spec, max_len)
+    kv_shape = (B, size, spec.n_kv, spec.head_dim)
+    kv_axes = ("act_cache_batch", "act_cache_seq", "act_kv_heads", None)
+    qdt = jnp.int8 if _quantized(spec) else dtype
+
+    def sds(shape, axes, dt):
+        return jax.ShapeDtypeStruct(
+            shape, dt, sharding=shd.named_sharding(shape, axes, mesh, rules))
+
+    if _quantized(spec):
+        sc_shape = kv_shape[:-1] + (1,)
+        k_scale = sds(sc_shape, kv_axes, jnp.float32)
+        v_scale = sds(sc_shape, kv_axes, jnp.float32)
+    else:
+        k_scale = sds((1,), (None,), jnp.float32)
+        v_scale = sds((1,), (None,), jnp.float32)
+    return KVCache(
+        k=sds(kv_shape, kv_axes, qdt), v=sds(kv_shape, kv_axes, qdt),
+        pos_ids=sds((B, size), ("act_cache_batch", None), jnp.int32),
+        k_scale=k_scale, v_scale=v_scale)
+
+
+def attend_decode(p, x, pos, cache: KVCache, spec):
+    """One-token decode: x [B, 1, d], pos scalar int32 (uniform across batch).
+
+    Writes the new KV at ``pos % size`` (ring for windowed layers) and
+    attends over all valid cache entries.  Returns (out [B,1,d], new cache).
+    """
+    B = x.shape[0]
+    q, k_new, v_new = _project_qkv(p, x, spec)
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    if spec.pos == "mrope":
+        positions3 = jnp.broadcast_to(positions[None], (3, B, 1))
+        q, k_new = _rope_qk(q, k_new, positions3, spec)
+    else:
+        q, k_new = _rope_qk(q, k_new, positions, spec)
+
+    size = cache.k.shape[1]
+    slot = jnp.mod(pos, size).astype(jnp.int32)
+    z = jnp.zeros((), jnp.int32)
+    if _quantized(spec):
+        kq, ks = _quantize_kv(k_new)
+        vq, vs = _quantize_kv(v_new)
+        kq8 = jax.lax.dynamic_update_slice(cache.k, kq, (z, slot, z, z))
+        vq8 = jax.lax.dynamic_update_slice(cache.v, vq, (z, slot, z, z))
+        k_scale = jax.lax.dynamic_update_slice(
+            cache.k_scale, ks, (z, slot, z, z))
+        v_scale = jax.lax.dynamic_update_slice(
+            cache.v_scale, vs, (z, slot, z, z))
+        k = _dequantize_kv(kq8, k_scale, x.dtype)
+        v = _dequantize_kv(vq8, v_scale, x.dtype)
+        new_cache_kv = (kq8, vq8, k_scale, v_scale)
+    else:
+        k = jax.lax.dynamic_update_slice(cache.k, k_new, (z, slot, z, z))
+        v = jax.lax.dynamic_update_slice(cache.v, v_new, (z, slot, z, z))
+        new_cache_kv = (k, v, cache.k_scale, cache.v_scale)
+    pos_ids = jax.lax.dynamic_update_slice(
+        cache.pos_ids, positions, (z, slot))
+
+    scale = 1.0 / np.sqrt(q.shape[-1])
+    H = q.shape[2]
+    K = k.shape[2]
+    G = H // K
+    qg = q.reshape(B, K, G, q.shape[-1])
+    scores = jnp.einsum("bkgd,btkd->bkgt", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    valid = (pos_ids >= 0) & (pos_ids <= pos)
+    if spec.window is not None:
+        valid &= (pos - pos_ids) < spec.window
+    scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgt,btkd->bkgd", w, v.astype(jnp.float32))
+    out = out.reshape(B, 1, H, q.shape[-1]).astype(x.dtype)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["o"])
+    y = shd.constrain(y, "act_batch", None, "act_embed")
+    ck, cv, cks, cvs = new_cache_kv
+    return y, KVCache(k=ck, v=cv, pos_ids=pos_ids, k_scale=cks, v_scale=cvs)

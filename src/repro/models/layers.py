@@ -1,0 +1,147 @@
+"""Core layers: RMSNorm, rotary embeddings (RoPE / M-RoPE / sinusoidal),
+embedding, and gated/plain MLPs.  Pure functions over ParamDef trees."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import sharding as shd
+from repro.models.params import ParamDef
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_defs(dim: int, axes=("none",)):
+    return {"scale": ParamDef((dim,), axes, init="ones")}
+
+
+def rmsnorm(p, x, eps: float = 1e-6):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# positions
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float = 10000.0):
+    half = head_dim // 2
+    return 1.0 / (theta ** (np.arange(0, half, dtype=np.float32) / half))
+
+
+def apply_rope(x, positions, theta: float = 10000.0):
+    """x: [..., S, H, dh]; positions: [..., S] int32."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = jnp.asarray(rope_freqs(dh, theta))                # [half]
+    ang = positions[..., None].astype(jnp.float32) * freqs    # [..., S, half]
+    cos = jnp.cos(ang)[..., None, :]                          # [..., S, 1, half]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate(
+        [xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x, positions3, sections, theta: float = 10000.0):
+    """Multimodal RoPE (Qwen2-VL): three position streams (t, h, w) rotate
+    disjoint frequency sections of the head dim.
+
+    x: [B, S, H, dh]; positions3: [3, B, S]; sections: half-dim split,
+    sum(sections) == dh // 2.
+    """
+    dh = x.shape[-1]
+    half = dh // 2
+    assert sum(sections) == half, (sections, half)
+    freqs = jnp.asarray(rope_freqs(dh, theta))                # [half]
+    # pick, per frequency index, which position stream drives it
+    sel = np.concatenate([np.full(s, i) for i, s in enumerate(sections)])
+    pos_per_freq = jnp.take(positions3, jnp.asarray(sel), axis=0)  # [half,B,S]
+    ang = jnp.einsum("fbs,f->bsf", pos_per_freq.astype(jnp.float32), freqs)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(positions, dim: int):
+    """Classic transformer sinusoidal embedding; positions [..., S] -> [..., S, dim]."""
+    half = dim // 2
+    freqs = 1.0 / (10000.0 ** (np.arange(half, dtype=np.float32) / half))
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# embedding / unembedding
+# ---------------------------------------------------------------------------
+
+def embed_defs(vocab: int, d: int):
+    return {"table": ParamDef((vocab, d), ("embed_vocab", "fsdp"),
+                              init="embed", scale=1.0)}
+
+
+def embed(p, tokens, *, scale_by_dim: bool = False):
+    h = jnp.take(p["table"], tokens, axis=0)
+    if scale_by_dim:
+        h = h * jnp.asarray(np.sqrt(p["table"].shape[1]), h.dtype)
+    return shd.constrain(h, "act_batch", "act_res_seq", "act_embed")
+
+
+def unembed_defs(d: int, vocab: int):
+    return {"kernel": ParamDef((d, vocab), ("fsdp", "embed_vocab"))}
+
+
+def unembed(p, h, *, tied_table=None, compute_dtype=jnp.float32):
+    if tied_table is not None:
+        logits = jnp.einsum("...d,vd->...v", h.astype(compute_dtype),
+                            tied_table.astype(compute_dtype))
+    else:
+        logits = jnp.einsum("...d,dv->...v", h.astype(compute_dtype),
+                            p["kernel"].astype(compute_dtype))
+    return shd.constrain(logits, "act_batch", "act_seq", "act_vocab")
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def mlp_defs(d: int, ff: int, kind: str = "swiglu"):
+    if kind == "swiglu":
+        return {
+            "wi_gate": ParamDef((d, ff), ("fsdp", "tp")),
+            "wi_up": ParamDef((d, ff), ("fsdp", "tp")),
+            "wo": ParamDef((ff, d), ("tp", "fsdp")),
+        }
+    if kind == "gelu":
+        return {
+            "wi": ParamDef((d, ff), ("fsdp", "tp")),
+            "wo": ParamDef((ff, d), ("tp", "fsdp")),
+        }
+    raise ValueError(kind)
+
+
+def mlp(p, x, kind: str = "swiglu"):
+    if kind == "swiglu":
+        g = jnp.einsum("...d,df->...f", x, p["wi_gate"])
+        u = jnp.einsum("...d,df->...f", x, p["wi_up"])
+        g = shd.constrain(g, "act_batch", "act_seq", "act_ff")
+        u = shd.constrain(u, "act_batch", "act_seq", "act_ff")
+        h = jax.nn.silu(g) * u
+    else:
+        h = jnp.einsum("...d,df->...f", x, p["wi"])
+        h = shd.constrain(h, "act_batch", "act_seq", "act_ff")
+        h = jax.nn.gelu(h)
+    out = jnp.einsum("...f,fd->...d", h, p["wo"])
+    return shd.constrain(out, "act_batch", "act_res_seq", "act_embed")

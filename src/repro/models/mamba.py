@@ -1,0 +1,238 @@
+"""Mamba2 (state-space duality) block: chunked SSD scan for train/prefill,
+O(1)-state recurrent step for decode (arXiv:2405.21060).
+
+TPU adaptation: the within-chunk quadratic term and the chunk-state
+contraction are einsums (MXU); the inter-chunk recurrence is a lax.scan over
+``T/Q`` chunk states.  All SSD-internal math runs in f32 (exponents are
+non-positive by construction, so everything is bounded by 1).
+
+Tensor-parallel sharding: heads (x/z/dt projections, A, D, gated norm) are
+sharded over ``model``; the group-shared B/C projections are replicated
+(groups are the GQA analogue for SSMs).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import sharding as shd
+from repro.models.layers import rmsnorm_defs
+from repro.models.params import ParamDef
+
+
+def mamba_defs(spec):
+    d, di, gn, hm, wc = (spec.d_model, spec.d_inner, spec.n_groups * spec.d_state,
+                         spec.m_heads, spec.conv_width)
+    return {
+        "in_z": ParamDef((d, di), ("fsdp", "tp")),
+        "in_x": ParamDef((d, di), ("fsdp", "tp")),
+        "in_B": ParamDef((d, gn), ("fsdp", None)),
+        "in_C": ParamDef((d, gn), ("fsdp", None)),
+        "in_dt": ParamDef((d, hm), ("fsdp", "tp")),
+        "conv_x": ParamDef((wc, di), (None, "tp"), scale=0.5),
+        "conv_B": ParamDef((wc, gn), (None, None), scale=0.5),
+        "conv_C": ParamDef((wc, gn), (None, None), scale=0.5),
+        "A_log": ParamDef((hm,), ("tp",), init="ones"),
+        "dt_bias": ParamDef((hm,), ("tp",), init="zeros"),
+        "D": ParamDef((hm,), ("tp",), init="ones"),
+        "norm": rmsnorm_defs(di, axes=("tp",)),
+        "out": ParamDef((di, d), ("tp", "fsdp")),
+    }
+
+
+def _causal_conv(x, kernel):
+    """Depthwise causal conv: x [B, T, C], kernel [w, C]."""
+    w, C = kernel.shape
+    rhs = kernel[:, None, :].astype(x.dtype)       # [w, 1, C]
+    return jax.lax.conv_general_dilated(
+        x, rhs, window_strides=(1,), padding=[(w - 1, 0)],
+        dimension_numbers=("NWC", "WIO", "NWC"), feature_group_count=C)
+
+
+def _gated_norm(p, y, z, eps=1e-6):
+    g = y * jax.nn.silu(z)
+    gf = g.astype(jnp.float32)
+    var = jnp.mean(gf * gf, axis=-1, keepdims=True)
+    return (gf * jax.lax.rsqrt(var + eps)
+            * p["scale"].astype(jnp.float32)).astype(y.dtype)
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, D, Q: int, s0=None):
+    """Chunked SSD.  x [B,T,H,P] f32, dt [B,T,H] (post-softplus), A [H] (<0),
+    Bm/Cm [B,T,G,N].  Returns (y [B,T,H,P], final_state [B,H,P,N]).
+
+    Single lax.scan over chunks: the quadratic within-chunk term (L matrix,
+    O(Q^2) memory) only ever exists for ONE chunk at a time — essential at
+    32k+ sequence lengths (materializing all chunks would be TBs)."""
+    B_, T, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    rep = H // G
+    nc = T // Q
+    assert nc * Q == T, (T, Q)
+
+    Ah = A.reshape(G, rep)
+    Dh = D.reshape(G, rep)
+    causal = jnp.tril(jnp.ones((Q, Q), x.dtype))
+    if s0 is None:
+        s0 = jnp.zeros((B_, G, rep, P, N), x.dtype)
+
+    # chunk-major inputs for the scan: [nc, B, Q, ...]
+    xq = x.reshape(B_, nc, Q, G, rep, P).swapaxes(0, 1)
+    dtq = dt.reshape(B_, nc, Q, G, rep).swapaxes(0, 1)
+    Bq = Bm.reshape(B_, nc, Q, G, N).swapaxes(0, 1)
+    Cq = Cm.reshape(B_, nc, Q, G, N).swapaxes(0, 1)
+
+    def chunk_step(s, inp):
+        xc, dtc, Bc, Cc = inp                       # [B,Q,...]
+        dA = dtc * Ah                               # [B,Q,G,rep] (<=0)
+        cum = jnp.cumsum(dA, axis=1)
+        # within-chunk quadratic term
+        diff = cum[:, :, None] - cum[:, None, :]    # [B,Qi,Qj,G,rep]
+        Lmat = jnp.exp(diff) * causal[None, :, :, None, None]
+        scores = jnp.einsum("bign,bjgn->bijg", Cc, Bc)
+        xt = xc * dtc[..., None]                    # x_j * dt_j
+        y_diag = jnp.einsum("bijg,bijgr,bjgrp->bigrp", scores, Lmat, xt)
+        # contribution of the carried state
+        decay_in = jnp.exp(cum)                     # [B,Q,G,rep]
+        y_off = jnp.einsum("bign,bgrpn->bigrp", Cc, s) * decay_in[..., None]
+        # new chunk state
+        decay_end = jnp.exp(cum[:, -1:] - cum)      # [B,Q,G,rep]
+        st = jnp.einsum("bjgn,bjgrp->bgrpn", Bc, xt * decay_end[..., None])
+        chunk_decay = jnp.exp(cum[:, -1])           # [B,G,rep]
+        s_new = s * chunk_decay[..., None, None] + st
+        y = y_diag + y_off + Dh[..., None] * xc
+        return s_new, y
+
+    s_final, ys = jax.lax.scan(chunk_step, s0, (xq, dtq, Bq, Cq))
+    y = ys.swapaxes(0, 1).reshape(B_, T, H, P)
+    return y, s_final.reshape(B_, H, P, N)
+
+
+class MambaCache(NamedTuple):
+    ssm: jax.Array      # [B, H, P, N] f32
+    conv_x: jax.Array   # [B, w-1, d_inner]
+    conv_B: jax.Array   # [B, w-1, G*N]
+    conv_C: jax.Array   # [B, w-1, G*N]
+
+
+def init_mamba_cache(spec, B: int, dtype) -> MambaCache:
+    w = spec.conv_width
+    return MambaCache(
+        ssm=jnp.zeros((B, spec.m_heads, spec.headdim, spec.d_state),
+                      jnp.float32),
+        conv_x=jnp.zeros((B, w - 1, spec.d_inner), dtype),
+        conv_B=jnp.zeros((B, w - 1, spec.n_groups * spec.d_state), dtype),
+        conv_C=jnp.zeros((B, w - 1, spec.n_groups * spec.d_state), dtype),
+    )
+
+
+def mamba_cache_specs(spec, B: int, dtype, mesh, rules):
+    w = spec.conv_width
+
+    def sds(shape, axes, dt):
+        return jax.ShapeDtypeStruct(
+            shape, dt, sharding=shd.named_sharding(shape, axes, mesh, rules))
+
+    gn = spec.n_groups * spec.d_state
+    return MambaCache(
+        ssm=sds((B, spec.m_heads, spec.headdim, spec.d_state),
+                ("act_cache_batch", "act_heads", None, None), jnp.float32),
+        conv_x=sds((B, w - 1, spec.d_inner),
+                   ("act_cache_batch", None, "act_inner"), dtype),
+        conv_B=sds((B, w - 1, gn), ("act_cache_batch", None, None), dtype),
+        conv_C=sds((B, w - 1, gn), ("act_cache_batch", None, None), dtype),
+    )
+
+
+def _projections(p, x):
+    z = jnp.einsum("btd,de->bte", x, p["in_z"])
+    xx = jnp.einsum("btd,de->bte", x, p["in_x"])
+    Bp = jnp.einsum("btd,de->bte", x, p["in_B"])
+    Cp = jnp.einsum("btd,de->bte", x, p["in_C"])
+    dt = jnp.einsum("btd,dh->bth", x, p["in_dt"])
+    z = shd.constrain(z, "act_batch", "act_seq", "act_inner")
+    xx = shd.constrain(xx, "act_batch", "act_seq", "act_inner")
+    return z, xx, Bp, Cp, dt
+
+
+def mamba_train(p, x, spec, s0=None):
+    """Full-sequence Mamba2 block.  x [B, T, d] -> (y, final MambaCache)."""
+    B_, T, d = x.shape
+    H, P, G, N = spec.m_heads, spec.headdim, spec.n_groups, spec.d_state
+
+    z, xx, Bp, Cp, dt = _projections(p, x)
+    xx_conv_in, Bp_in, Cp_in = xx, Bp, Cp
+    xx = jax.nn.silu(_causal_conv(xx, p["conv_x"]))
+    Bp = jax.nn.silu(_causal_conv(Bp, p["conv_B"]))
+    Cp = jax.nn.silu(_causal_conv(Cp, p["conv_C"]))
+
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    dt_f = jax.nn.softplus(dt.astype(jnp.float32)
+                           + p["dt_bias"].astype(jnp.float32))
+    # pad T to a chunk multiple; padded steps have dt=0 => identity updates
+    Q = spec.mamba_chunk
+    pad = (-T) % Q
+    Tp = T + pad
+    padt = lambda a: jnp.pad(a, ((0, 0), (0, pad)) + ((0, 0),) * (a.ndim - 2))
+    y, s_fin = ssd_chunked(
+        padt(xx.astype(jnp.float32)).reshape(B_, Tp, H, P),
+        padt(dt_f) * (jnp.arange(Tp) < T)[None, :, None], A,
+        padt(Bp.astype(jnp.float32)).reshape(B_, Tp, G, N),
+        padt(Cp.astype(jnp.float32)).reshape(B_, Tp, G, N),
+        p["D"].astype(jnp.float32), Q=Q,
+        s0=None if s0 is None else s0.astype(jnp.float32))
+    y = y[:, :T].reshape(B_, T, H * P).astype(x.dtype)
+    y = _gated_norm(p["norm"], y, z)
+    out = jnp.einsum("bte,ed->btd", y, p["out"])
+    w = spec.conv_width
+    cache = MambaCache(
+        ssm=s_fin,
+        conv_x=xx_conv_in[:, T - (w - 1):, :],
+        conv_B=Bp_in[:, T - (w - 1):, :],
+        conv_C=Cp_in[:, T - (w - 1):, :],
+    )
+    return shd.constrain(out, "act_batch", "act_res_seq", "act_embed"), cache
+
+
+def mamba_decode(p, x, cache: MambaCache, spec):
+    """Single-token recurrent step.  x [B, 1, d] -> (y [B, 1, d], cache)."""
+    B_ = x.shape[0]
+    H, P, G, N = spec.m_heads, spec.headdim, spec.n_groups, spec.d_state
+    w = spec.conv_width
+
+    z, xx, Bp, Cp, dt = _projections(p, x)
+
+    def conv_step(cache_c, new, kernel):
+        window = jnp.concatenate([cache_c, new], axis=1)        # [B, w, C]
+        out = jnp.einsum("bwc,wc->bc", window.astype(jnp.float32),
+                         kernel.astype(jnp.float32))
+        return jax.nn.silu(out).astype(new.dtype), window[:, 1:, :]
+
+    xx1, ncx = conv_step(cache.conv_x, xx, p["conv_x"])
+    Bp1, ncb = conv_step(cache.conv_B, Bp, p["conv_B"])
+    Cp1, ncc = conv_step(cache.conv_C, Cp, p["conv_C"])
+
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))                 # [H]
+    dt_f = jax.nn.softplus(dt[:, 0].astype(jnp.float32)
+                           + p["dt_bias"].astype(jnp.float32))   # [B,H]
+    xh = xx1.astype(jnp.float32).reshape(B_, H, P)
+    Bh = Bp1.astype(jnp.float32).reshape(B_, G, N)
+    Ch = Cp1.astype(jnp.float32).reshape(B_, G, N)
+    rep = H // G
+
+    decay = jnp.exp(dt_f * A)                                    # [B,H]
+    # state' = state*decay + (dt*x) outer B
+    xdt = (xh * dt_f[..., None]).reshape(B_, G, rep, P)
+    upd = jnp.einsum("bgn,bgrp->bgrpn", Bh, xdt).reshape(B_, H, P, N)
+    s = cache.ssm * decay[..., None, None] + upd
+    y = jnp.einsum("bgn,bgrpn->bgrp", Ch,
+                   s.reshape(B_, G, rep, P, N)).reshape(B_, H, P)
+    y = y + p["D"].astype(jnp.float32)[None, :, None] * xh
+    y = y.reshape(B_, 1, H * P).astype(x.dtype)
+    y = _gated_norm(p["norm"], y, z)
+    out = jnp.einsum("bte,ed->btd", y, p["out"])
+    out = shd.constrain(out, "act_batch", None, "act_embed")
+    return out, MambaCache(ssm=s, conv_x=ncx, conv_B=ncb, conv_C=ncc)

@@ -1,0 +1,350 @@
+"""Composable decoder model over block patterns (dense / MoE / SSM / hybrid).
+
+* ``model_defs``      — ParamDef tree (stacked block params for scan).
+* ``forward``         — train-time logits (+ aux losses).
+* ``prefill``         — logits + per-layer caches for serving.
+* ``decode_step``     — one-token step against stacked caches (``serve_step``
+                        in the dry-run lowers this).
+
+The repeated block pattern is scanned (HLO size independent of depth);
+remainder layers are applied unrolled.  Remat policy is configurable.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import sharding as shd
+from repro.configs.base import LayerCtx, LayerSpec, ModelConfig, layer_ctx
+from repro.models import attention as attn
+from repro.models import mamba as mb
+from repro.models import moe as moe_mod
+from repro.models.layers import (
+    embed, embed_defs, mlp, mlp_defs, rmsnorm, rmsnorm_defs,
+    sinusoidal_positions, unembed, unembed_defs,
+)
+from repro.models.params import ParamDef, stack_defs
+
+
+# ---------------------------------------------------------------------------
+# definitions
+# ---------------------------------------------------------------------------
+
+def layer_defs(cfg: ModelConfig, ls: LayerSpec):
+    ctx = layer_ctx(cfg, ls)
+    d = {"pre_norm": rmsnorm_defs(cfg.d_model)}
+    if ls.kind == "attn":
+        d["attn"] = attn.attention_defs(
+            cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim,
+            qk_norm=cfg.qk_norm, qkv_bias=cfg.qkv_bias)
+    elif ls.kind == "mamba":
+        d["mamba"] = mb.mamba_defs(ctx)
+    else:
+        raise ValueError(ls.kind)
+    if cfg.sandwich_norm:
+        d["post_mix_norm"] = rmsnorm_defs(cfg.d_model)
+    if ls.moe or ls.mlp:
+        d["mlp_norm"] = rmsnorm_defs(cfg.d_model)
+        if ls.moe:
+            d["moe"] = moe_mod.moe_defs(
+                cfg.d_model, cfg.d_ff_expert, cfg.n_experts,
+                cfg.n_shared_experts)
+        else:
+            d["mlp"] = mlp_defs(cfg.d_model, cfg.d_ff, kind=cfg.mlp_kind)
+        if cfg.sandwich_norm:
+            d["post_mlp_norm"] = rmsnorm_defs(cfg.d_model)
+    return d
+
+
+def model_defs(cfg: ModelConfig):
+    block = {f"sub{j}": layer_defs(cfg, ls)
+             for j, ls in enumerate(cfg.pattern)}
+    defs = {
+        "embed": embed_defs(cfg.vocab, cfg.d_model),
+        "blocks": stack_defs(block, cfg.n_blocks),
+        "final_norm": rmsnorm_defs(cfg.d_model),
+    }
+    for j, ls in enumerate(cfg.remainder):
+        defs[f"rem{j}"] = layer_defs(cfg, ls)
+    if not cfg.tie_embeddings:
+        defs["lm_head"] = unembed_defs(cfg.d_model, cfg.vocab)
+    return defs
+
+
+# ---------------------------------------------------------------------------
+# layer application
+# ---------------------------------------------------------------------------
+
+def _apply_layer_full(cfg, ls, p, h, positions, want_cache: bool,
+                      max_len: Optional[int] = None):
+    """Full-sequence layer (train/prefill). Returns (h, aux, cache|None)."""
+    ctx = layer_ctx(cfg, ls)
+    res = h
+    u = rmsnorm(p["pre_norm"], h, cfg.norm_eps)
+    cache = None
+    if ls.kind == "attn":
+        mix, (k, v) = attn.attend_train(p["attn"], u, positions, ctx)
+        if want_cache:
+            pos2 = positions if positions.ndim == 2 else positions[0]
+            cache = _kv_cache_from_prefill(ctx, k, v, pos2, cfg, max_len)
+    else:
+        mix, mcache = mb.mamba_train(p["mamba"], u, ctx)
+        if want_cache:
+            cache = mcache
+    if cfg.sandwich_norm:
+        mix = rmsnorm(p["post_mix_norm"], mix, cfg.norm_eps)
+    h = res + mix
+    aux = jnp.asarray(0.0, jnp.float32)
+    if not (ls.moe or ls.mlp):
+        return h, aux, cache
+    res = h
+    u = rmsnorm(p["mlp_norm"], h, cfg.norm_eps)
+    if ls.moe:
+        from repro.models.moe_a2a import moe_apply as moe_dispatch
+        y, aux = moe_dispatch(p["moe"], u, ctx, impl=cfg.moe_impl)
+    else:
+        y = mlp(p["mlp"], u, kind=cfg.mlp_kind)
+    if cfg.sandwich_norm:
+        y = rmsnorm(p["post_mlp_norm"], y, cfg.norm_eps)
+    return res + y, aux, cache
+
+
+def _kv_cache_from_prefill(ctx, k, v, positions, cfg, max_len=None):
+    """Place prefill K/V (already rotated) into a ring cache of the layer's
+    cache size (capacity ``max_len``), slotting position p at p % size."""
+    B, S = positions.shape
+    size = attn.kv_cache_size(ctx, max_len or S)
+    if size >= S:
+        pad = size - S
+        kc = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        vc = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        pc = jnp.pad(positions.astype(jnp.int32), ((0, 0), (0, pad)),
+                     constant_values=-1)
+    else:
+        # windowed/pruned layer: keep the last `size` tokens, ring-placed
+        k_tail = k[:, S - size:, :, :]
+        v_tail = v[:, S - size:, :, :]
+        pos_tail = positions[:, S - size:].astype(jnp.int32)
+        slots = jnp.mod(pos_tail, size)                   # [B, size]
+        bidx = jnp.broadcast_to(jnp.arange(B)[:, None], (B, size))
+        kc = jnp.zeros_like(k_tail).at[bidx, slots].set(k_tail)
+        vc = jnp.zeros_like(v_tail).at[bidx, slots].set(v_tail)
+        pc = jnp.full((B, size), -1, jnp.int32).at[bidx, slots].set(pos_tail)
+    if attn._quantized(ctx):
+        kq, ks = attn._quantize_kv(kc)
+        vq, vs = attn._quantize_kv(vc)
+        return attn.KVCache(k=kq, v=vq, pos_ids=pc, k_scale=ks, v_scale=vs)
+    one = jnp.ones((1,), jnp.float32)
+    return attn.KVCache(k=kc, v=vc, pos_ids=pc, k_scale=one, v_scale=one)
+
+
+def _apply_layer_decode(cfg, ls, p, h, pos, cache):
+    ctx = layer_ctx(cfg, ls)
+    res = h
+    u = rmsnorm(p["pre_norm"], h, cfg.norm_eps)
+    if ls.kind == "attn":
+        mix, cache = attn.attend_decode(p["attn"], u, pos, cache, ctx)
+    else:
+        mix, cache = mb.mamba_decode(p["mamba"], u, cache, ctx)
+    if cfg.sandwich_norm:
+        mix = rmsnorm(p["post_mix_norm"], mix, cfg.norm_eps)
+    h = res + mix
+    if not (ls.moe or ls.mlp):
+        return h, cache
+    res = h
+    u = rmsnorm(p["mlp_norm"], h, cfg.norm_eps)
+    if ls.moe:
+        from repro.models.moe_a2a import moe_apply as moe_dispatch
+        y, _ = moe_dispatch(p["moe"], u, ctx, impl=cfg.moe_impl)
+    else:
+        y = mlp(p["mlp"], u, kind=cfg.mlp_kind)
+    if cfg.sandwich_norm:
+        y = rmsnorm(p["post_mlp_norm"], y, cfg.norm_eps)
+    return res + y, cache
+
+
+def _remat_wrap(cfg, fn):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "full":
+        return jax.checkpoint(fn)
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    raise ValueError(cfg.remat)
+
+
+# ---------------------------------------------------------------------------
+# embedding / head
+# ---------------------------------------------------------------------------
+
+def _embed_inputs(cfg, params, batch):
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    h = embed(params["embed"], tokens, scale_by_dim=cfg.scale_embed)
+    h = h.astype(cfg.adtype())
+    if cfg.frontend == "vision_stub" and "patch_embeds" in batch:
+        pe = batch["patch_embeds"].astype(cfg.adtype())   # [B, n_patches, d]
+        h = jnp.concatenate([pe, h[:, pe.shape[1]:, :]], axis=1)
+    if cfg.pos == "mrope":
+        positions = batch.get("positions")
+        if positions is None:
+            base = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+            positions = jnp.broadcast_to(base[None], (3, B, S))
+    else:
+        positions = batch.get("positions")
+        if positions is None:
+            positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        if cfg.pos == "sinusoidal":
+            h = h + sinusoidal_positions(positions, cfg.d_model).astype(h.dtype)
+    return h, positions
+
+
+def _head(cfg, params, h):
+    h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    tied = params["embed"]["table"] if cfg.tie_embeddings else None
+    return unembed(params.get("lm_head"), h, tied_table=tied)
+
+
+# ---------------------------------------------------------------------------
+# public entry points
+# ---------------------------------------------------------------------------
+
+def forward(params, cfg: ModelConfig, batch):
+    """Training forward: logits [B, S, V] f32 + scalar aux loss."""
+    h, positions = _embed_inputs(cfg, params, batch)
+
+    def block_body(carry, block_params):
+        hh, aux = carry
+        for j, ls in enumerate(cfg.pattern):
+            hh, a, _ = _apply_layer_full(cfg, ls, block_params[f"sub{j}"],
+                                         hh, positions, want_cache=False)
+            aux = aux + a
+        return (hh, aux), None
+
+    body = _remat_wrap(cfg, block_body)
+    (h, aux), _ = jax.lax.scan(body, (h, jnp.asarray(0.0, jnp.float32)),
+                               params["blocks"])
+    for j, ls in enumerate(cfg.remainder):
+        h, a, _ = _apply_layer_full(cfg, ls, params[f"rem{j}"], h,
+                                    positions, want_cache=False)
+        aux = aux + a
+    return _head(cfg, params, h), aux
+
+
+def prefill(params, cfg: ModelConfig, batch, max_len: Optional[int] = None):
+    """Prefill: last-position logits + caches (stacked for the scan blocks).
+
+    ``max_len`` sets cache capacity for subsequent decode steps."""
+    h, positions = _embed_inputs(cfg, params, batch)
+
+    def block_body(carry, block_params):
+        hh = carry
+        caches = {}
+        for j, ls in enumerate(cfg.pattern):
+            hh, _, c = _apply_layer_full(cfg, ls, block_params[f"sub{j}"],
+                                         hh, positions, want_cache=True,
+                                         max_len=max_len)
+            caches[f"sub{j}"] = c
+        return hh, caches
+
+    h, block_caches = jax.lax.scan(block_body, h, params["blocks"])
+    caches = {"blocks": block_caches}
+    for j, ls in enumerate(cfg.remainder):
+        h, _, c = _apply_layer_full(cfg, ls, params[f"rem{j}"], h,
+                                    positions, want_cache=True,
+                                    max_len=max_len)
+        caches[f"rem{j}"] = c
+    logits = _head(cfg, params, h[:, -1:, :])
+    return logits, caches
+
+
+def decode_step(params, cfg: ModelConfig, token, caches, pos):
+    """One decode step: token [B, 1] int32, pos scalar int32.
+
+    Returns (logits [B, 1, V], new caches).  This is ``serve_step``.
+    """
+    batch = {"tokens": token}
+    h = embed(params["embed"], token, scale_by_dim=cfg.scale_embed)
+    h = h.astype(cfg.adtype())
+    if cfg.pos == "sinusoidal":
+        p1 = jnp.full((token.shape[0], 1), pos, jnp.int32)
+        h = h + sinusoidal_positions(p1, cfg.d_model).astype(h.dtype)
+
+    def block_body(carry, xs):
+        hh = carry
+        block_params, block_cache = xs
+        new_cache = {}
+        for j, ls in enumerate(cfg.pattern):
+            hh, c = _apply_layer_decode(cfg, ls, block_params[f"sub{j}"],
+                                        hh, pos, block_cache[f"sub{j}"])
+            new_cache[f"sub{j}"] = c
+        return hh, new_cache
+
+    h, new_block_caches = jax.lax.scan(
+        block_body, h, (params["blocks"], caches["blocks"]))
+    out_caches = {"blocks": new_block_caches}
+    for j, ls in enumerate(cfg.remainder):
+        h, c = _apply_layer_decode(cfg, ls, params[f"rem{j}"], h, pos,
+                                   caches[f"rem{j}"])
+        out_caches[f"rem{j}"] = c
+    logits = _head(cfg, params, h)
+    return logits, out_caches
+
+
+# ---------------------------------------------------------------------------
+# cache initialization / dry-run specs
+# ---------------------------------------------------------------------------
+
+def init_caches(cfg: ModelConfig, B: int, max_len: int, dtype=None):
+    dtype = dtype or cfg.adtype()
+
+    def one(ls: LayerSpec):
+        ctx = layer_ctx(cfg, ls)
+        if ls.kind == "attn":
+            return attn.init_kv_cache(ctx, B, max_len, dtype)
+        return mb.init_mamba_cache(ctx, B, dtype)
+
+    def stack(c):
+        return jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (cfg.n_blocks,) + a.shape), c)
+
+    caches = {"blocks": {f"sub{j}": stack(one(ls))
+                         for j, ls in enumerate(cfg.pattern)}}
+    for j, ls in enumerate(cfg.remainder):
+        caches[f"rem{j}"] = one(ls)
+    return caches
+
+
+def cache_specs(cfg: ModelConfig, B: int, max_len: int, mesh, rules,
+                dtype=None):
+    """ShapeDtypeStructs (with shardings) for the dry-run serve_step."""
+    dtype = dtype or cfg.adtype()
+
+    def one(ls: LayerSpec):
+        ctx = layer_ctx(cfg, ls)
+        if ls.kind == "attn":
+            return attn.kv_cache_specs(ctx, B, max_len, dtype, mesh, rules)
+        return mb.mamba_cache_specs(ctx, B, dtype, mesh, rules)
+
+    def stack(c):
+        return jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(
+                (cfg.n_blocks,) + s.shape, s.dtype,
+                sharding=_stacked_sharding(s, mesh)), c)
+
+    caches = {"blocks": {f"sub{j}": stack(one(ls))
+                         for j, ls in enumerate(cfg.pattern)}}
+    for j, ls in enumerate(cfg.remainder):
+        caches[f"rem{j}"] = one(ls)
+    return caches
+
+
+def _stacked_sharding(s: jax.ShapeDtypeStruct, mesh):
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    spec = s.sharding.spec if hasattr(s.sharding, "spec") else P()
+    return NamedSharding(mesh, P(*((None,) + tuple(spec))))

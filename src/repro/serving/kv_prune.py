@@ -1,0 +1,108 @@
+"""CAMEO-style KV-cache pruning (beyond-paper, DESIGN.md §4).
+
+The paper keeps the *statistically important points* of a series and lets
+interpolation carry the rest.  A KV cache is a time series of per-position
+keys; its "signal" for attention purposes is well summarized by the
+per-position key-norm sequence.  We rank cache positions with CAMEO's exact
+greedy machinery (Def. 3, compression-centric: keep n/keep_ratio points
+that best preserve the key-norm ACF — i.e. the temporal structure of what
+the model attends to) and compact the cache to the kept slots.
+
+The roofline effect is structural: a serve_step lowered against a cache of
+``S/keep_ratio`` entries reads 1/keep_ratio of the bytes (dry-run
+``kv_prune`` config knob); this module provides the actual selection +
+compaction so the pruned serve path is runnable, and the tests pin the
+mechanism (no-op prune is exact; impulse positions survive pruning).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.cameo import CameoConfig, compress_rounds
+from repro.models.attention import KVCache
+
+
+def importance_series(cache: KVCache) -> jax.Array:
+    """Per-position signal: mean key L2 norm across KV heads.  [B, S]."""
+    k = cache.k.astype(jnp.float32)
+    if cache.k_scale.ndim == 4:      # int8 cache
+        k = k * cache.k_scale
+    return jnp.sqrt(jnp.mean(jnp.sum(k * k, axis=-1), axis=-1))
+
+
+def select_positions(cache: KVCache, keep: int, lags: int = 16):
+    """CAMEO Def.-3 selection on the key-norm series.  Returns kept slot
+    indices [B, keep] (sorted by position)."""
+    B, S = cache.pos_ids.shape
+    sig = importance_series(cache)
+    cr = max(S / keep, 1.0 + 1e-6)
+    cfg = CameoConfig(lags=min(lags, S // 4), target_cr=float(cr),
+                      mode="rounds", dtype="float32", max_rounds=64)
+    res = jax.vmap(lambda row: compress_rounds(row, cfg))(sig)
+    kept = np.asarray(res.kept)                     # [B, S] bool
+    idx = np.zeros((B, keep), np.int32)
+    for b in range(B):
+        sel = np.nonzero(kept[b])[0]
+        if len(sel) >= keep:
+            # drop lowest-importance interior picks down to `keep`
+            order = np.argsort(np.asarray(sig)[b][sel])
+            drop = len(sel) - keep
+            interior = order[(sel[order] != 0) & (sel[order] != S - 1)]
+            sel = np.sort(np.setdiff1d(sel, sel[interior[:drop]]))
+        else:
+            # top-up with the highest-importance unkept positions
+            unsel = np.setdiff1d(np.arange(S), sel)
+            extra = unsel[np.argsort(-np.asarray(sig)[b][unsel])][: keep - len(sel)]
+            sel = np.sort(np.concatenate([sel, extra]))
+        idx[b] = sel[:keep]
+    return jnp.asarray(idx)
+
+
+def compact_cache(cache: KVCache, idx: jax.Array) -> KVCache:
+    """Gather the kept slots into a cache of size keep (per layer leaf)."""
+    B = idx.shape[0]
+    bidx = jnp.arange(B)[:, None]
+
+    def take(a):
+        if a.ndim >= 2 and a.shape[0] == B and a.shape[1] == cache.pos_ids.shape[1]:
+            return a[bidx, idx]
+        return a
+
+    return KVCache(k=take(cache.k), v=take(cache.v),
+                   pos_ids=take(cache.pos_ids),
+                   k_scale=take(cache.k_scale), v_scale=take(cache.v_scale))
+
+
+def prune_tree(caches, keep: int, lags: int = 16):
+    """Apply selection+compaction to every attention KVCache in a cache tree
+    (selection computed per layer; Mamba caches pass through)."""
+    def visit(node):
+        if isinstance(node, KVCache):
+            idx = select_positions(node, keep, lags)
+            return compact_cache(node, idx)
+        if isinstance(node, dict):
+            return {k: visit(v) for k, v in node.items()}
+        return node
+
+    # stacked block caches: vmap over the leading block axis is overkill for
+    # the demo path; handle unstacked (remainder/engine) caches and stacked
+    # ones by folding the block axis into batch.
+    def visit_stacked(node):
+        if isinstance(node, KVCache) and node.pos_ids.ndim == 3:
+            L, B, S = node.pos_ids.shape
+            flat = KVCache(*[a.reshape((L * B,) + a.shape[2:])
+                             if a.ndim >= 3 else a for a in node])
+            idx = select_positions(flat, keep, lags)
+            out = compact_cache(flat, idx)
+            return KVCache(*[a.reshape((L, B) + a.shape[1:])
+                             if a.ndim >= 2 and a.shape[0] == L * B else a
+                             for a in out])
+        if isinstance(node, KVCache):
+            return visit(node)
+        if isinstance(node, dict):
+            return {k: visit_stacked(v) for k, v in node.items()}
+        return node
+
+    return visit_stacked(caches)

@@ -1,0 +1,54 @@
+"""Explicit data-parallel train step under shard_map, with optional gradient
+compression (error feedback) applied *before* the cross-replica psum.
+
+Under plain pjit the gradient all-reduce is implicit and cannot be
+compressed; this variant makes it explicit so (a) the collective volume
+reduction is visible in the lowered HLO (dry-run §Perf evidence) and
+(b) the CAMEO-style "keep the important points" codec from optim.compress
+actually changes what crosses the wire.  Params are replicated across the
+dp axis here (pure DP) — it composes with TP by nesting meshes, and the
+pjit+FSDP path remains the default for the big cells.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.optim.adamw import AdamWConfig, adamw_update
+from repro.optim.compress import CompressConfig, compress_with_feedback
+from repro.train.step import TrainConfig, loss_fn
+
+
+def build_dp_train_step(cfg: ModelConfig, tcfg: TrainConfig, mesh,
+                        ccfg: CompressConfig, axis: str = "data") -> Callable:
+    grad_fn = jax.value_and_grad(
+        functools.partial(loss_fn, cfg=cfg, tcfg=tcfg), has_aux=True)
+
+    def shard_body(params, opt_state, residuals, batch, step):
+        (total, (loss, aux)), grads = grad_fn(params, batch=batch)
+        # compress the local gradient contribution, then reduce the sparse/
+        # quantized representation across replicas; residual carries error.
+        sent, residuals = compress_with_feedback(grads, residuals, ccfg)
+        grads = jax.tree.map(
+            lambda g: jax.lax.pmean(g, axis), sent)
+        lr = jnp.asarray(tcfg.peak_lr, jnp.float32)
+        params, opt_state, gnorm = adamw_update(
+            grads, opt_state, params, lr, tcfg.adamw)
+        metrics = {"loss": jax.lax.pmean(loss, axis),
+                   "grad_norm": gnorm}
+        return params, opt_state, residuals, metrics
+
+    pspec = P()          # replicated params/opt state (pure DP)
+    bspec = P(axis)      # batch sharded over the dp axis
+
+    shard = jax.shard_map(
+        shard_body, mesh=mesh,
+        in_specs=(pspec, pspec, pspec, bspec, pspec),
+        out_specs=(pspec, pspec, pspec, pspec),
+        check_vma=False)
+    return jax.jit(shard)

@@ -1,0 +1,118 @@
+"""Train-step builder: loss, grad, optimizer update, microbatch accumulation.
+
+The returned ``train_step(params, opt_state, batch, step)`` is what the
+dry-run lowers for ``train_*`` shapes and what train.loop jits for real
+runs.  Sharding comes entirely from the in/out shardings + the logical
+constraints inside the model — the step body is mesh-agnostic.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.model import forward
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+from repro.optim.adafactor import (AdafactorConfig, adafactor_init,
+                                   adafactor_update)
+from repro.optim.schedule import SCHEDULES
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    optimizer: str = "adamw"        # adamw | adafactor
+    peak_lr: float = 3e-4
+    warmup: int = 100
+    total_steps: int = 10000
+    schedule: str = "warmup_cosine"
+    z_loss: float = 1e-4
+    num_microbatches: int = 1
+    adamw: AdamWConfig = AdamWConfig()
+    adafactor: AdafactorConfig = AdafactorConfig()
+
+
+def next_token_loss(logits, tokens, z_loss_coef: float = 0.0):
+    """Causal LM loss: predict tokens[t+1] from logits[t].
+
+    The gold logit is picked with a one-hot contraction (not
+    take_along_axis): over a vocab-sharded logits tensor the contraction
+    stays sharded under SPMD, whereas a gather would all-gather the full
+    [B, S, V] logits onto every device."""
+    logits = logits[:, :-1, :].astype(jnp.float32)
+    targets = tokens[:, 1:]
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    onehot = jax.nn.one_hot(targets, logits.shape[-1], dtype=logits.dtype)
+    from repro import sharding as shd
+    onehot = shd.constrain(onehot, "act_batch", "act_seq", "act_vocab")
+    gold = jnp.einsum("bsv,bsv->bs", logits, onehot)
+    nll = jnp.mean(logz - gold)
+    if z_loss_coef:
+        nll = nll + z_loss_coef * jnp.mean(logz ** 2)
+    return nll
+
+
+def loss_fn(params, cfg: ModelConfig, tcfg: TrainConfig, batch):
+    logits, aux = forward(params, cfg, batch)
+    loss = next_token_loss(logits, batch["tokens"], tcfg.z_loss)
+    return loss + aux.astype(jnp.float32), (loss, aux)
+
+
+def init_opt_state(params, tcfg: TrainConfig):
+    if tcfg.optimizer == "adamw":
+        return adamw_init(params, tcfg.adamw)
+    if tcfg.optimizer == "adafactor":
+        return adafactor_init(params, tcfg.adafactor)
+    raise ValueError(tcfg.optimizer)
+
+
+def build_train_step(cfg: ModelConfig, tcfg: TrainConfig) -> Callable:
+    sched = SCHEDULES[tcfg.schedule]
+    grad_fn = jax.value_and_grad(
+        functools.partial(loss_fn, cfg=cfg, tcfg=tcfg), has_aux=True)
+
+    def compute_grads(params, batch):
+        if tcfg.num_microbatches <= 1:
+            (total, (loss, aux)), grads = grad_fn(params, batch=batch)
+            return total, loss, aux, grads
+        # gradient accumulation: split the global batch into microbatches
+        nm = tcfg.num_microbatches
+
+        def reshape(x):
+            return x.reshape((nm, x.shape[0] // nm) + x.shape[1:])
+
+        micro = jax.tree.map(reshape, batch)
+
+        def body(acc, mb):
+            (total, (loss, aux)), grads = grad_fn(params, batch=mb)
+            acc_g, acc_t, acc_l, acc_a = acc
+            acc_g = jax.tree.map(
+                lambda a, g: a + g.astype(jnp.float32) / nm, acc_g, grads)
+            return (acc_g, acc_t + total / nm, acc_l + loss / nm,
+                    acc_a + aux / nm), None
+
+        zero_g = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (grads, total, loss, aux), _ = jax.lax.scan(
+            body, (zero_g, 0.0, 0.0, 0.0), micro)
+        return total, loss, aux, grads
+
+    def train_step(params, opt_state, batch, step):
+        total, loss, aux, grads = compute_grads(params, batch)
+        lr = sched(step, peak_lr=tcfg.peak_lr, warmup=tcfg.warmup,
+                   total=tcfg.total_steps)
+        if tcfg.optimizer == "adamw":
+            params, opt_state, gnorm = adamw_update(
+                grads, opt_state, params, lr, tcfg.adamw)
+        else:
+            params, opt_state = adafactor_update(
+                grads, opt_state, params, lr, tcfg.adafactor)
+            gnorm = jnp.asarray(0.0, jnp.float32)
+        metrics = {"loss": loss, "total_loss": total, "aux_loss": aux,
+                   "lr": lr, "grad_norm": gnorm}
+        return params, opt_state, metrics
+
+    return train_step

@@ -1,0 +1,5 @@
+import jax
+
+# CAMEO math is validated against float64 oracles; model code is
+# dtype-explicit so this flag is behavior-neutral for the LM substrate.
+jax.config.update("jax_enable_x64", True)

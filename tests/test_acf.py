@@ -1,0 +1,173 @@
+"""ACF/PACF correctness + the paper's core invariant: incremental aggregate
+maintenance equals from-scratch recomputation after arbitrary edits."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.acf import (acf, acf_from_aggregates, acf_stationary,
+                            aggregate_series, extract_aggregates,
+                            pacf, pacf_from_acf)
+from repro.core.aggregates import (acf_after_single_delta,
+                                   acf_after_window_delta, alive_neighbors,
+                                   apply_delta_dense, apply_delta_window,
+                                   interpolate_at, segment_deltas)
+
+
+def _series(n, seed=0, period=24):
+    rng = np.random.default_rng(seed)
+    t = np.arange(n)
+    return jnp.asarray(np.sin(2 * np.pi * t / period)
+                       + 0.2 * rng.standard_normal(n))
+
+
+def _acf_direct(x, L):
+    x = np.asarray(x)
+    n = len(x)
+    return np.array([np.corrcoef(x[: n - l], x[l:])[0, 1]
+                     for l in range(1, L + 1)])
+
+
+def test_acf_matches_pearson_per_lag():
+    x = _series(512)
+    got = np.asarray(acf(x, 16))
+    want = _acf_direct(x, 16)
+    np.testing.assert_allclose(got, want, atol=1e-10)
+
+
+def test_acf_from_aggregates_roundtrip():
+    x = _series(300, seed=3)
+    agg = extract_aggregates(x, 10)
+    np.testing.assert_allclose(np.asarray(acf_from_aggregates(agg, 300)),
+                               np.asarray(acf(x, 10)), atol=1e-12)
+
+
+def test_acf_stationary_close_to_nonstationary_for_stationary_series():
+    x = _series(4096, seed=1)
+    a = np.asarray(acf(x, 8))
+    b = np.asarray(acf_stationary(x, 8))
+    np.testing.assert_allclose(a, b, atol=0.02)
+
+
+def test_pacf_lag1_equals_acf1_and_ar1_structure():
+    # AR(1): PACF cuts off after lag 1
+    rng = np.random.default_rng(0)
+    n = 20000
+    e = rng.standard_normal(n)
+    x = np.empty(n)
+    x[0] = e[0]
+    for i in range(1, n):
+        x[i] = 0.6 * x[i - 1] + e[i]
+    p = np.asarray(pacf(jnp.asarray(x), 6))
+    r = np.asarray(acf(jnp.asarray(x), 6))
+    assert abs(p[0] - r[0]) < 1e-9
+    assert abs(p[0] - 0.6) < 0.05
+    assert np.all(np.abs(p[1:]) < 0.05)
+
+
+def test_aggregate_series_modes():
+    x = jnp.asarray(np.arange(12, dtype=np.float64))
+    np.testing.assert_allclose(aggregate_series(x, 4, "mean"),
+                               [1.5, 5.5, 9.5])
+    np.testing.assert_allclose(aggregate_series(x, 4, "max"), [3, 7, 11])
+    np.testing.assert_allclose(aggregate_series(x, 4, "sum"), [6, 22, 38])
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 10_000), st.integers(1, 8),
+       st.lists(st.tuples(st.integers(0, 199), st.floats(-3, 3)),
+                min_size=1, max_size=12))
+def test_incremental_dense_equals_recompute(seed, L, edits):
+    """THE paper invariant (Eq. 8/9): aggregate updates == recompute."""
+    n = 200
+    x = _series(n, seed=seed)
+    agg = extract_aggregates(x, L)
+    delta = np.zeros(n)
+    for idx, val in edits:
+        delta[idx] += val
+    delta = jnp.asarray(delta)
+    got = apply_delta_dense(agg, x, delta)
+    want = extract_aggregates(x + delta, L)
+    for f in got._fields:
+        np.testing.assert_allclose(np.asarray(getattr(got, f)),
+                                   np.asarray(getattr(want, f)),
+                                   rtol=1e-9, atol=1e-9)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 10_000), st.integers(1, 10), st.integers(0, 199))
+def test_incremental_window_equals_recompute(seed, L, start):
+    n = 200
+    W = 16
+    start = min(start, n - 1)
+    rng = np.random.default_rng(seed)
+    x = _series(n, seed=seed)
+    dwin_np = rng.standard_normal(W)
+    # zero out deltas that would fall off the series end
+    for j in range(W):
+        if start + j >= n:
+            dwin_np[j] = 0.0
+    dwin = jnp.asarray(dwin_np)
+    got = apply_delta_window(extract_aggregates(x, L), x, dwin,
+                             jnp.asarray(start, jnp.int32), W=W, L=L)
+    dense = np.zeros(n)
+    dense[start:start + W] = dwin_np[: max(0, min(W, n - start))]
+    want = extract_aggregates(x + jnp.asarray(dense), L)
+    for f in got._fields:
+        np.testing.assert_allclose(np.asarray(getattr(got, f)),
+                                   np.asarray(getattr(want, f)),
+                                   rtol=1e-9, atol=1e-9)
+
+
+def test_single_delta_rows_match_recompute():
+    n, L = 128, 6
+    x = _series(n, seed=9)
+    agg = extract_aggregates(x, L)
+    idx = jnp.asarray([0, 1, 63, 126, 127], jnp.int32)
+    dval = jnp.asarray([0.5, -1.0, 2.0, 0.1, -0.3])
+    rows = acf_after_single_delta(agg, x, idx, dval)
+    for r, (i, d) in zip(np.asarray(rows),
+                         zip(np.asarray(idx), np.asarray(dval))):
+        want = acf(x.at[i].add(d), L)
+        np.testing.assert_allclose(r, np.asarray(want), rtol=1e-9, atol=1e-9)
+
+
+def test_window_delta_rows_match_recompute():
+    n, L, W = 128, 6, 8
+    x = _series(n, seed=11)
+    agg = extract_aggregates(x, L)
+    starts = jnp.asarray([0, 50, 120], jnp.int32)
+    rng = np.random.default_rng(4)
+    dwins_np = rng.standard_normal((3, W))
+    dwins_np[2, :] = 0
+    dwins_np[2, :5] = rng.standard_normal(5)  # stay inside series
+    dwins = jnp.asarray(dwins_np)
+    rows = acf_after_window_delta(agg, x, starts, dwins)
+    for r, s, d in zip(np.asarray(rows), np.asarray(starts), dwins_np):
+        dense = np.zeros(n)
+        dense[s:s + W] = d[: n - s]
+        want = acf(x + jnp.asarray(dense), L)
+        np.testing.assert_allclose(r, np.asarray(want), rtol=1e-8, atol=1e-8)
+
+
+def test_alive_neighbors_and_interpolation():
+    alive = jnp.asarray([True, False, False, True, True, False, True])
+    prev, nxt = alive_neighbors(alive)
+    assert prev.tolist() == [-1, 0, 0, 0, 3, 4, 4]
+    assert nxt.tolist() == [3, 3, 3, 4, 6, 6, 7]
+    x = jnp.asarray([0.0, 9.0, 9.0, 3.0, 4.0, 9.0, 7.0])
+    i = jnp.asarray([1, 2, 5])
+    xi = interpolate_at(x, prev[i], nxt[i], i)
+    np.testing.assert_allclose(np.asarray(xi), [1.0, 2.0, 5.5])
+
+
+def test_segment_deltas_matches_reinterpolation():
+    x = _series(64, seed=5)
+    alive = jnp.ones(64, bool).at[jnp.asarray([10, 11, 30])].set(False)
+    prev, nxt = alive_neighbors(alive)
+    dwin, start, span = segment_deltas(x, prev, nxt,
+                                       jnp.asarray([12, 31]), 8)
+    # removing 12 re-interpolates (9, 13) interior = 10, 11, 12
+    assert int(start[0]) == 10 and int(span[0]) == 3
+    assert int(start[1]) == 30 and int(span[1]) == 2

@@ -1,0 +1,87 @@
+"""Baselines: each respects the ACF constraint (or its search reports an
+achieving parameter); lossless bit counters behave sanely."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.baselines.constrain import acf_constrained_search, acf_deviation
+from repro.baselines.functional import (pmc_compress, simpiece_compress,
+                                        swing_compress)
+from repro.baselines.line_simpl import LINE_SIMPL_BASELINES, compress_baseline
+from repro.baselines.lossless import chimp_bits_per_value, gorilla_bits_per_value
+from repro.baselines.transform import fft_compress
+from repro.core.cameo import CameoConfig
+
+
+def _series(n=1024, seed=1):
+    rng = np.random.default_rng(seed)
+    t = np.arange(n)
+    return (3 * np.sin(2 * np.pi * t / 24) + np.sin(2 * np.pi * t / 168)
+            + 0.15 * rng.standard_normal(n))
+
+
+CFG = CameoConfig(eps=0.02, lags=24, dtype="float64")
+
+
+@pytest.mark.parametrize("name", sorted(LINE_SIMPL_BASELINES))
+def test_line_simpl_respects_constraint(name):
+    x = jnp.asarray(_series())
+    res = compress_baseline(x, CFG, name)
+    assert float(res.deviation) <= CFG.eps + 1e-12
+    assert int(res.n_kept) < x.shape[0]
+
+
+def test_pmc_error_bound():
+    x = _series()
+    recon, stored = pmc_compress(x, 0.5)
+    assert float(np.max(np.abs(np.asarray(recon) - x))) <= 0.5 + 1e-9
+    assert stored < 2 * len(x)
+
+
+def test_swing_reconstruction_reasonable():
+    x = _series(seed=3)
+    recon, stored = swing_compress(x, 0.4)
+    err = float(np.max(np.abs(np.asarray(recon) - x)))
+    assert err <= 1.0           # swing guarantees <= err per point (approx.)
+    assert stored < 2 * len(x)
+
+
+def test_simpiece_error_bound():
+    x = _series(seed=4)
+    recon, stored = simpiece_compress(x, 0.5)
+    err = float(np.max(np.abs(np.asarray(recon) - x)))
+    assert err <= 0.5 + 0.5 + 1e-9  # intercept quantization + slope bound
+    assert stored > 0
+
+
+def test_fft_more_coeffs_less_error():
+    x = _series(seed=5)
+    r1, _ = fft_compress(x, 4)
+    r2, _ = fft_compress(x, 64)
+    e1 = float(np.mean((np.asarray(r1) - x) ** 2))
+    e2 = float(np.mean((np.asarray(r2) - x) ** 2))
+    assert e2 <= e1 + 1e-12
+
+
+@pytest.mark.parametrize("fn,isint", [
+    (pmc_compress, False), (swing_compress, False),
+    (simpiece_compress, False), (fft_compress, True),
+])
+def test_constrained_search_meets_eps(fn, isint):
+    x = _series(seed=6)
+    recon, stored, dev, p = acf_constrained_search(
+        x, CFG, fn, param_is_int=isint, iters=8)
+    assert dev <= CFG.eps + 1e-9
+    assert stored > 0
+
+
+def test_lossless_bits_per_value():
+    x = _series(seed=7)
+    g = gorilla_bits_per_value(x)
+    c = chimp_bits_per_value(x)
+    assert 1.0 <= g <= 80.0
+    assert 1.0 <= c <= 80.0
+    # constant series compresses to almost nothing
+    const = np.ones(1000)
+    assert gorilla_bits_per_value(const) < 2.0
+    assert chimp_bits_per_value(const) < 3.0

@@ -1,0 +1,71 @@
+"""Checkpoint manager: atomicity, checksums, keep-k, resume, reshard."""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import manager as ckpt
+
+
+def _tree(seed=0):
+    rng = np.random.default_rng(seed)
+    return {"a": jnp.asarray(rng.normal(size=(4, 8))),
+            "b": {"c": jnp.asarray(rng.normal(size=(3,))),
+                  "d": jnp.asarray(7, jnp.int32)}}
+
+
+def test_roundtrip(tmp_path):
+    t = _tree()
+    ckpt.save(str(tmp_path), 5, t)
+    assert ckpt.latest_step(str(tmp_path)) == 5
+    restored, manifest = ckpt.restore(str(tmp_path), 5, template=t)
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert manifest["step"] == 5
+
+
+def test_keep_k(tmp_path):
+    t = _tree()
+    for s in [1, 2, 3, 4, 5]:
+        ckpt.save(str(tmp_path), s, t, keep=2)
+    assert ckpt.all_steps(str(tmp_path)) == [4, 5]
+
+
+def test_corruption_detected(tmp_path):
+    t = _tree()
+    path = ckpt.save(str(tmp_path), 1, t)
+    arr = os.path.join(path, "arrays.npz.zst")
+    import zstandard
+    raw = zstandard.ZstdDecompressor().decompress(open(arr, "rb").read())
+    bad = bytearray(raw)
+    bad[100] ^= 0xFF
+    open(arr, "wb").write(zstandard.ZstdCompressor().compress(bytes(bad)))
+    with pytest.raises(Exception):
+        ckpt.restore(str(tmp_path), 1, template=t)
+
+
+def test_partial_save_ignored(tmp_path):
+    t = _tree()
+    ckpt.save(str(tmp_path), 1, t)
+    os.makedirs(os.path.join(str(tmp_path), "step_00000002.tmp"))
+    assert ckpt.latest_step(str(tmp_path)) == 1
+
+
+def test_async_save(tmp_path):
+    t = _tree(3)
+    th = ckpt.save_async(str(tmp_path), 9, t)
+    th.join()
+    restored, _ = ckpt.restore(str(tmp_path), 9, template=t)
+    np.testing.assert_array_equal(np.asarray(restored["a"]),
+                                  np.asarray(t["a"]))
+
+
+def test_restore_casts_dtype_template(tmp_path):
+    t = {"w": jnp.asarray(np.ones((4,)), jnp.float32)}
+    ckpt.save(str(tmp_path), 1, t)
+    tpl = {"w": jax.ShapeDtypeStruct((4,), jnp.bfloat16)}
+    restored, _ = ckpt.restore(str(tmp_path), 1, template=tpl)
+    assert restored["w"].dtype == jnp.bfloat16

@@ -1,0 +1,91 @@
+"""int8 KV cache + CAMEO KV pruning mechanisms."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import get_reduced
+from repro.data.pipeline import token_batch
+from repro.models.attention import KVCache
+from repro.models.model import decode_step, forward, model_defs, prefill
+from repro.models.params import init_params
+from repro.serving.kv_prune import (compact_cache, importance_series,
+                                    select_positions)
+
+B, S = 2, 32
+
+
+def test_int8_kv_cache_decode_close_to_fp():
+    cfg = get_reduced("qwen3-0.6b")
+    params = init_params(model_defs(cfg), jax.random.PRNGKey(0))
+    batch = token_batch(cfg, B, S, step=0)
+    tok = batch["tokens"][:, -1:]
+
+    def run(c):
+        _, caches = jax.jit(lambda p, b: prefill(p, c, b, max_len=S + 4))(
+            params, batch)
+        logits, _ = jax.jit(
+            lambda p, t, cc: decode_step(p, c, t, cc, jnp.asarray(S, jnp.int32))
+        )(params, tok, caches)
+        return logits
+
+    lf = run(cfg)
+    lq = run(dataclasses.replace(cfg, kv_cache_dtype="int8"))
+    # int8 cache introduces small quantization error only (scale-aware:
+    # random-weight logits have O(10) magnitudes)
+    rms = float(jnp.sqrt(jnp.mean(lf * lf)))
+    rel = float(jnp.max(jnp.abs(lf - lq))) / max(rms, 1e-6)
+    assert rel < 0.05, (rel, rms)
+    # ranking agreement at the top
+    assert float(jnp.mean(
+        (jnp.argmax(lf[:, 0], -1) == jnp.argmax(lq[:, 0], -1)))) == 1.0
+
+
+def test_kv_prune_selects_impulses_and_compacts():
+    rng = np.random.default_rng(0)
+    size, K, dh = 64, 2, 8
+    k = 0.05 * rng.standard_normal((B, size, K, dh)).astype(np.float32)
+    impulses = [7, 23, 40, 57]
+    for i in impulses:
+        k[:, i] *= 40.0
+    cache = KVCache(k=jnp.asarray(k), v=jnp.asarray(k),
+                    pos_ids=jnp.broadcast_to(jnp.arange(size), (B, size)),
+                    k_scale=jnp.ones((1,), jnp.float32),
+                    v_scale=jnp.ones((1,), jnp.float32))
+    idx = select_positions(cache, keep=16)
+    assert idx.shape == (B, 16)
+    for b in range(B):
+        for i in impulses:
+            assert i in np.asarray(idx[b]), (b, i, np.asarray(idx[b]))
+    small = compact_cache(cache, idx)
+    assert small.k.shape == (B, 16, K, dh)
+    # kept entries are bit-exact copies
+    np.testing.assert_array_equal(
+        np.asarray(small.k[0, 0]), k[0, int(idx[0, 0])])
+
+
+def test_kv_prune_noop_is_exact():
+    rng = np.random.default_rng(1)
+    size = 16
+    k = rng.standard_normal((B, size, 2, 4)).astype(np.float32)
+    cache = KVCache(k=jnp.asarray(k), v=jnp.asarray(k),
+                    pos_ids=jnp.broadcast_to(jnp.arange(size), (B, size)),
+                    k_scale=jnp.ones((1,), jnp.float32),
+                    v_scale=jnp.ones((1,), jnp.float32))
+    idx = select_positions(cache, keep=size)
+    np.testing.assert_array_equal(np.asarray(idx),
+                                  np.tile(np.arange(size), (B, 1)))
+    out = compact_cache(cache, idx)
+    np.testing.assert_array_equal(np.asarray(out.k), k)
+
+
+def test_importance_series_tracks_key_norm():
+    k = np.zeros((1, 8, 1, 4), np.float32)
+    k[0, 3] = 10.0
+    cache = KVCache(k=jnp.asarray(k), v=jnp.asarray(k),
+                    pos_ids=jnp.broadcast_to(jnp.arange(8), (1, 8)),
+                    k_scale=jnp.ones((1,), jnp.float32),
+                    v_scale=jnp.ones((1,), jnp.float32))
+    sig = np.asarray(importance_series(cache))
+    assert sig.argmax() == 3

@@ -1,0 +1,120 @@
+"""Per-arch reduced smoke tests: forward/train/decode on CPU, plus the
+prefill==forward cache-consistency invariant."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import ARCH_IDS, get_reduced
+from repro.data.pipeline import token_batch
+from repro.models.model import (decode_step, forward, init_caches,
+                                model_defs, prefill)
+from repro.models.params import count_params, init_params
+from repro.train.step import TrainConfig, build_train_step, init_opt_state
+
+B, S = 2, 32
+
+
+def _setup(arch):
+    cfg = get_reduced(arch)
+    params = init_params(model_defs(cfg), jax.random.PRNGKey(0))
+    batch = token_batch(cfg, B, S, step=0)
+    return cfg, params, batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_forward_smoke(arch):
+    cfg, params, batch = _setup(arch)
+    logits, aux = jax.jit(lambda p, b: forward(p, cfg, b))(params, batch)
+    assert logits.shape == (B, S, cfg.vocab)
+    assert np.isfinite(np.asarray(logits)).all()
+    assert np.isfinite(float(aux))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_train_step_smoke(arch):
+    cfg, params, batch = _setup(arch)
+    tcfg = TrainConfig(num_microbatches=1, total_steps=10, warmup=2)
+    step_fn = jax.jit(build_train_step(cfg, tcfg))
+    opt = init_opt_state(params, tcfg)
+    p2, opt2, metrics = step_fn(params, opt, batch, jnp.asarray(0))
+    assert np.isfinite(float(metrics["loss"]))
+    # params actually changed
+    changed = jax.tree.map(
+        lambda a, b: float(jnp.max(jnp.abs(a - b))), params, p2)
+    assert max(jax.tree.leaves(changed)) > 0
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_decode_step_smoke(arch):
+    cfg, params, batch = _setup(arch)
+    _, caches = jax.jit(
+        lambda p, b: prefill(p, cfg, b, max_len=S + 4))(params, batch)
+    tok = batch["tokens"][:, -1:]
+    logits, new_caches = jax.jit(
+        lambda p, t, c: decode_step(p, cfg, t, c, jnp.asarray(S, jnp.int32))
+    )(params, tok, caches)
+    assert logits.shape == (B, 1, cfg.vocab)
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+@pytest.mark.parametrize("arch", ["qwen3-0.6b", "gemma3-27b", "mamba2-2.7b",
+                                  "jamba-1.5-large-398b", "musicgen-large"])
+def test_prefill_decode_matches_forward(arch):
+    """decode at position S must reproduce forward logits on S+1 tokens
+    (MoE archs excluded here unless capacity is loss-free)."""
+    import dataclasses
+    cfg = get_reduced(arch)
+    if cfg.n_experts:
+        cfg = dataclasses.replace(cfg, capacity_factor=8.0)  # no drops
+    params = init_params(model_defs(cfg), jax.random.PRNGKey(1))
+    batch = token_batch(cfg, B, S, step=1)
+    full = token_batch(cfg, B, S + 1, step=1)
+    # keep the first S tokens identical
+    full["tokens"] = jnp.concatenate(
+        [batch["tokens"], full["tokens"][:, -1:]], axis=1)
+    logits_full, _ = jax.jit(lambda p, b: forward(p, cfg, b))(params, full)
+    _, caches = jax.jit(
+        lambda p, b: prefill(p, cfg, b, max_len=S + 4))(params, batch)
+    ld, _ = jax.jit(
+        lambda p, t, c: decode_step(p, cfg, t, c, jnp.asarray(S, jnp.int32))
+    )(params, full["tokens"][:, -1:], caches)
+    np.testing.assert_allclose(np.asarray(ld[:, 0]),
+                               np.asarray(logits_full[:, -1]),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_param_counts_match_arch_names():
+    from repro.configs.registry import (active_param_count, get_config,
+                                        param_count)
+    expect = {
+        "stablelm-12b": (11e9, 13e9), "gemma3-27b": (26e9, 28e9),
+        "qwen3-0.6b": (0.55e9, 0.65e9), "smollm-135m": (0.12e9, 0.15e9),
+        "qwen3-moe-235b-a22b": (230e9, 240e9),
+        "kimi-k2-1t-a32b": (0.95e12, 1.1e12),
+        "qwen2-vl-2b": (1.4e9, 1.7e9), "mamba2-2.7b": (2.5e9, 2.9e9),
+        "musicgen-large": (2.2e9, 2.6e9),
+        "jamba-1.5-large-398b": (380e9, 410e9),
+    }
+    for arch, (lo, hi) in expect.items():
+        n = param_count(get_config(arch))
+        assert lo <= n <= hi, (arch, n)
+    assert 20e9 <= active_param_count(get_config("qwen3-moe-235b-a22b")) <= 25e9
+    assert 28e9 <= active_param_count(get_config("kimi-k2-1t-a32b")) <= 36e9
+
+
+def test_microbatch_accumulation_matches_full_batch():
+    cfg = get_reduced("qwen3-0.6b")
+    params = init_params(model_defs(cfg), jax.random.PRNGKey(2))
+    batch = token_batch(cfg, 4, S, step=3)
+    t1 = TrainConfig(num_microbatches=1, peak_lr=1e-3)
+    t2 = TrainConfig(num_microbatches=2, peak_lr=1e-3)
+    s1 = jax.jit(build_train_step(cfg, t1))
+    s2 = jax.jit(build_train_step(cfg, t2))
+    p1, _, m1 = s1(params, init_opt_state(params, t1), batch, jnp.asarray(0))
+    p2, _, m2 = s2(params, init_opt_state(params, t2), batch, jnp.asarray(0))
+    assert abs(float(m1["loss"]) - float(m2["loss"])) < 1e-4
+    diff = max(jax.tree.leaves(jax.tree.map(
+        lambda a, b: float(jnp.max(jnp.abs(a.astype(jnp.float32)
+                                           - b.astype(jnp.float32)))), p1, p2)))
+    assert diff < 5e-4
