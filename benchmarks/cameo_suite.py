@@ -9,10 +9,14 @@ Table 4: decompression time
 Fig 10/11: coarse-grained parallel quality/time vs T
 Kernels: acf_impact / lag_dot throughput (jnp path on CPU; the Pallas
 kernels are validated in interpret mode by tests, not timed here)
+Backend: impact-engine parity + throughput — jnp vs Pallas kernels
+(single-delta + windowed), whole-compression backend parity, and the
+single-vs-batched multi-series gap (see kernels/ops.py)
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 import time
 
 import jax
@@ -251,14 +255,15 @@ def bench_kernels(full=False):
         tab = agg_to_table(agg).astype(jnp.float32)
         p0 = acf_from_aggregates(agg, n).astype(jnp.float32)
         d = jnp.asarray(rng.standard_normal(n).astype(np.float32) * 0.1)
-        ref_fn = jax.jit(lambda: acf_impact(y, d, tab, p0, use_kernel=False))
+        ref_fn = jax.jit(
+            lambda: acf_impact(y, d, tab, p0, backend="reference"))
         ref_fn().block_until_ready()
         t0 = time.perf_counter()
         ref_fn().block_until_ready()
         secs = time.perf_counter() - t0
         emit(f"kernel.acf_impact.n{n}.L{L}", secs,
              f"pts/s={n / secs:.3e}")
-        ld = jax.jit(lambda: lag_dot(y, L, use_kernel=False))
+        ld = jax.jit(lambda: lag_dot(y, L, backend="reference"))
         ld().block_until_ready()
         t0 = time.perf_counter()
         ld().block_until_ready()
@@ -266,4 +271,109 @@ def bench_kernels(full=False):
         emit(f"kernel.lag_dot.n{n}.L{L}", secs2, f"macs/s={n * L / secs2:.3e}")
         rows.append(dict(n=n, L=L, impact_secs=secs, lagdot_secs=secs2))
     save_json("kernels", rows)
+    return rows
+
+
+def bench_backend_parity(full=False):
+    """Impact-engine backend section: jnp-vs-kernel parity + throughput for
+    the single-delta and windowed kernels, whole-compression backend parity,
+    and the single-vs-batched (fleet) gap.  CPU-runnable: the Pallas path
+    executes in interpret mode there, so its timings measure the interpreter,
+    not TPU performance — the parity columns are the CPU payload."""
+    from repro.core.acf import extract_aggregates, acf_from_aggregates
+    from repro.core.cameo import compress_batch, compress_rounds
+    from repro.kernels.ops import (acf_impact, agg_to_table, lag_dot,
+                                   window_impact)
+    rows = []
+
+    def once(f):
+        f().block_until_ready()
+        t0 = time.perf_counter()
+        f().block_until_ready()
+        return time.perf_counter() - t0
+
+    # -- kernel-level parity + throughput ----------------------------------
+    n, L, W, P = (65536, 48, 64, 4096) if full else (16384, 24, 64, 1024)
+    rng = np.random.default_rng(0)
+    y = jnp.asarray(rng.standard_normal(n))
+    agg = extract_aggregates(y, L)
+    tab = agg_to_table(agg)
+    p0 = acf_from_aggregates(agg, n)
+    d = jnp.asarray(rng.standard_normal(n) * 0.1)
+    starts = jnp.asarray(rng.integers(0, n - 1, P), np.int32)
+    spans = rng.integers(1, W + 1, P)
+    dwins = jnp.asarray(rng.standard_normal((P, W)) * 0.1
+                        * (np.arange(W)[None, :] < spans[:, None]))
+    kernel_cases = [
+        ("acf_impact", n,
+         lambda bk: acf_impact(y, d, tab, p0, backend=bk)),
+        ("acf_window_impact", P,
+         lambda bk: window_impact(y, dwins, starts, tab, p0, backend=bk)),
+        ("lag_dot", n,
+         lambda bk: lag_dot(y, L, backend=bk)),
+    ]
+    for name, work, fn in kernel_cases:
+        out, secs = {}, {}
+        for bk in ("reference", "pallas"):
+            f = jax.jit(functools.partial(fn, bk))
+            secs[bk] = once(f)
+            out[bk] = np.asarray(f())
+        err = float(np.max(np.abs(out["reference"] - out["pallas"])))
+        emit(f"backend.kernel.{name}.n{n}.L{L}", secs["reference"],
+             f"ref_s={secs['reference']:.3e},pallas_s={secs['pallas']:.3e},"
+             f"maxdiff={err:.2e},items/s_ref={work / secs['reference']:.3e}")
+        rows.append(dict(section="kernel", case=name, n=n, L=L, W=W,
+                         ref_secs=secs["reference"],
+                         pallas_secs=secs["pallas"], max_diff=err))
+
+    # -- whole-compression backend parity ----------------------------------
+    x, spec = bench_series("uk_elec", False)
+    nc = 4096 if full else 2048
+    xj = jnp.asarray(x[:nc])
+    cfg = CameoConfig(eps=1e-2, lags=spec.lags, mode="rounds",
+                      max_rounds=60, dtype="float64", backend="reference")
+    for rank in ("single", "window"):
+        cfg_r = dataclasses.replace(cfg, rank=rank)
+        cfg_p = dataclasses.replace(cfg_r, backend="pallas")
+        res_r, secs_r = timed_once(compress_rounds, xj, cfg_r)
+        res_p, secs_p = timed_once(compress_rounds, xj, cfg_p)
+        same = bool(jnp.all(res_r.kept == res_p.kept))
+        emit(f"backend.compress.{rank}", secs_r,
+             f"same_kept={same},CR={compression_ratio(res_r):.2f},"
+             f"ref_s={secs_r:.2f},pallas_s={secs_p:.2f}")
+        rows.append(dict(section="compress", rank=rank, n=nc,
+                         same_kept=same, cr=compression_ratio(res_r),
+                         ref_secs=secs_r, pallas_secs=secs_p))
+
+    # -- single vs batched (fleet-of-sensors) ------------------------------
+    B = 16 if full else 8
+    nb = 1024
+    rngb = np.random.default_rng(1)
+    t = np.arange(nb)
+    xs = jnp.asarray(np.stack([
+        np.sin(2 * np.pi * t / 24 + ph) + 0.15 * rngb.standard_normal(nb)
+        for ph in np.linspace(0, np.pi, B)]))
+    cfgb = CameoConfig(eps=1e-2, lags=12, mode="rounds", max_rounds=80,
+                       dtype="float64")
+    resb = compress_batch(xs, cfgb)            # warm the batched compile
+    jax.block_until_ready(resb.kept)
+    t0 = time.perf_counter()
+    jax.block_until_ready(compress_batch(xs, cfgb).kept)
+    secs_batch = time.perf_counter() - t0
+
+    def loop():
+        return [compress_rounds(xs[i], cfgb) for i in range(B)]
+    res_list = loop()  # warm the per-series compile
+    jax.block_until_ready([r.kept for r in res_list])
+    t0 = time.perf_counter()
+    jax.block_until_ready([r.kept for r in loop()])
+    secs_loop = time.perf_counter() - t0
+    match = all(bool(jnp.all(resb.kept[i] == res_list[i].kept))
+                for i in range(B))
+    emit(f"backend.batch.B{B}.n{nb}", secs_batch,
+         f"match={match},loop_s={secs_loop:.2f},batch_s={secs_batch:.2f},"
+         f"speedup={secs_loop / max(secs_batch, 1e-9):.2f}x")
+    rows.append(dict(section="batch", B=B, n=nb, match=match,
+                     batch_secs=secs_batch, loop_secs=secs_loop))
+    save_json("backend_parity", rows)
     return rows

@@ -83,6 +83,7 @@ def skipped_cells() -> str:
 
 
 if __name__ == "__main__":
+    from benchmarks.roofline import backend_table
     print("## §Dry-run\n")
     print(dryrun_table())
     print("\n### Skipped cells\n")
@@ -91,3 +92,5 @@ if __name__ == "__main__":
     print(roofline_table())
     print("\n## §Perf variants (hillclimb artifacts)\n")
     print(variants_table())
+    print("\n## §Backend (impact-engine parity + throughput)\n")
+    print(backend_table())

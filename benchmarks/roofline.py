@@ -1,4 +1,6 @@
-"""Roofline table: aggregates the dry-run JSON results (§Roofline)."""
+"""Roofline table: aggregates the dry-run JSON results (§Roofline), plus
+the impact-engine backend-parity/throughput section (§Backend) emitted by
+``benchmarks.cameo_suite.bench_backend_parity``."""
 from __future__ import annotations
 
 import glob
@@ -18,7 +20,53 @@ def load_cells():
     return cells
 
 
+def load_backend_rows():
+    path = os.path.join(RESULTS_DIR, "backend_parity.json")
+    if not os.path.exists(path):
+        return []
+    with open(path) as f:
+        return json.load(f)
+
+
+def backend_table() -> str:
+    """Render §Backend for EXPERIMENTS.md: jnp-vs-kernel and
+    single-vs-batched gaps from the backend_parity benchmark."""
+    rows = load_backend_rows()
+    if not rows:
+        return ("(no backend results yet — run "
+                "`python -m benchmarks.run --only backend`)")
+    lines = [
+        "| section | case | size | reference s | pallas s | parity |",
+        "|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        if r["section"] == "kernel":
+            lines.append(
+                f"| kernel | {r['case']} | n={r['n']},L={r['L']} "
+                f"| {r['ref_secs']:.4f} | {r['pallas_secs']:.4f} "
+                f"| maxdiff={r['max_diff']:.1e} |")
+        elif r["section"] == "compress":
+            lines.append(
+                f"| compress | rank={r['rank']} | n={r['n']} "
+                f"| {r['ref_secs']:.2f} | {r['pallas_secs']:.2f} "
+                f"| same_kept={r['same_kept']} |")
+        else:
+            lines.append(
+                f"| batch | B={r['B']} | n={r['n']} "
+                f"| loop {r['loop_secs']:.2f} | batch {r['batch_secs']:.2f} "
+                f"| match={r['match']} |")
+    return "\n".join(lines)
+
+
 def bench_roofline_table(full=False):
+    for r in load_backend_rows():
+        if r["section"] == "kernel":
+            emit(f"roofline.backend.{r['case']}", r["ref_secs"],
+                 f"pallas_s={r['pallas_secs']:.4f},"
+                 f"maxdiff={r['max_diff']:.1e}")
+        elif r["section"] == "batch":
+            emit("roofline.backend.batch", r["batch_secs"],
+                 f"loop_s={r['loop_secs']:.2f},match={r['match']}")
     cells = load_cells()
     if not cells:
         emit("roofline.table", 0.0, "no dryrun results yet "

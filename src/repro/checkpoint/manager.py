@@ -3,7 +3,9 @@ and elastic (restore reshards onto whatever mesh the new job brings up).
 
 Layout:  <dir>/step_<N>/
              manifest.json     tree structure, shapes, dtypes, checksums
-             arrays.npz        flattened leaves (zstd-compressed stream)
+             arrays.npz.<c>    flattened leaves (zstd stream if the optional
+                               zstandard module is present, zlib otherwise;
+                               the manifest records the codec)
 
 Atomicity: written to ``step_<N>.tmp`` then ``os.rename``d — a crashed save
 never shadows the previous good checkpoint.  ``restore`` verifies checksums
@@ -20,13 +22,45 @@ import json
 import os
 import shutil
 import threading
+import zlib
 from typing import Any, Optional
 
 import jax
 import numpy as np
-import zstandard
+
+try:
+    import zstandard
+except ImportError:  # optional dep: fall back to stdlib zlib compression
+    zstandard = None
 
 _SEP = "/"
+
+
+def _default_codec() -> str:
+    return "zstd" if zstandard is not None else "zlib"
+
+
+def _array_file(codec: str) -> str:
+    return "arrays.npz." + ("zst" if codec == "zstd" else "zlib")
+
+
+def _compress_bytes(raw: bytes, codec: str) -> bytes:
+    if codec == "zstd":
+        return zstandard.ZstdCompressor(level=3).compress(raw)
+    if codec == "zlib":
+        return zlib.compress(raw, 6)
+    raise ValueError(f"unknown checkpoint codec {codec!r}")
+
+
+def _decompress_bytes(blob: bytes, codec: str) -> bytes:
+    if codec == "zstd":
+        if zstandard is None:
+            raise IOError("checkpoint is zstd-compressed but the zstandard "
+                          "module is not installed")
+        return zstandard.ZstdDecompressor().decompress(blob)
+    if codec == "zlib":
+        return zlib.decompress(blob)
+    raise ValueError(f"unknown checkpoint codec {codec!r}")
 
 
 def _flatten(tree):
@@ -52,12 +86,14 @@ def save(directory: str, step: int, tree, extra: Optional[dict] = None,
     buf = io.BytesIO()
     np.savez(buf, **leaves)
     raw = buf.getvalue()
-    comp = zstandard.ZstdCompressor(level=3).compress(raw)
-    with open(os.path.join(tmp, "arrays.npz.zst"), "wb") as f:
+    codec = _default_codec()
+    comp = _compress_bytes(raw, codec)
+    with open(os.path.join(tmp, _array_file(codec)), "wb") as f:
         f.write(comp)
 
     manifest = {
         "step": step,
+        "codec": codec,
         "checksum": hashlib.sha256(raw).hexdigest(),
         "bytes_raw": len(raw),
         "bytes_compressed": len(comp),
@@ -89,9 +125,11 @@ def save_async(directory: str, step: int, tree, extra=None, keep: int = 3):
         buf = io.BytesIO()
         np.savez(buf, **leaves)
         raw = buf.getvalue()
-        with open(os.path.join(tmp, "arrays.npz.zst"), "wb") as f:
-            f.write(zstandard.ZstdCompressor(level=3).compress(raw))
+        codec = _default_codec()
+        with open(os.path.join(tmp, _array_file(codec)), "wb") as f:
+            f.write(_compress_bytes(raw, codec))
         manifest = {"step": step,
+                    "codec": codec,
                     "checksum": hashlib.sha256(raw).hexdigest(),
                     "bytes_raw": len(raw),
                     "keys": {k: {"shape": list(v.shape),
@@ -141,8 +179,9 @@ def restore(directory: str, step: int, template=None, *, verify: bool = True):
     path = os.path.join(directory, f"step_{step:08d}")
     with open(os.path.join(path, "manifest.json")) as f:
         manifest = json.load(f)
-    with open(os.path.join(path, "arrays.npz.zst"), "rb") as f:
-        raw = zstandard.ZstdDecompressor().decompress(f.read())
+    codec = manifest.get("codec", "zstd")   # pre-codec checkpoints were zstd
+    with open(os.path.join(path, _array_file(codec)), "rb") as f:
+        raw = _decompress_bytes(f.read(), codec)
     if verify:
         digest = hashlib.sha256(raw).hexdigest()
         if digest != manifest["checksum"]:

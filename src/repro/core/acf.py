@@ -38,9 +38,16 @@ def lags_arange(L: int, dtype=jnp.float64) -> jax.Array:
     return jnp.arange(1, L + 1, dtype=dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("L",))
-def extract_aggregates(x: jax.Array, L: int) -> Aggregates:
-    """ExtractAggregates (Algorithm 1): O(nL), dominated by ``sxx_l``."""
+@functools.partial(jax.jit, static_argnames=("L", "backend"))
+def extract_aggregates(x: jax.Array, L: int,
+                       backend: str = "auto") -> Aggregates:
+    """ExtractAggregates (Algorithm 1): O(nL), dominated by ``sxx_l``.
+
+    The four moment sums are O(n + L) prefix work; the lagged products go
+    through the impact-engine backend (``kernels/ops.lag_dot`` — the Pallas
+    kernel on TPU, the jnp reference elsewhere).
+    """
+    from repro.kernels.ops import lag_dot  # deferred: kernels sit below core
     n = x.shape[0]
     csum = jnp.cumsum(x)
     csum2 = jnp.cumsum(x * x)
@@ -52,14 +59,7 @@ def extract_aggregates(x: jax.Array, L: int) -> Aggregates:
     # tail sums: total minus prefix up to l-1.
     sxl = total - csum[l - 1]
     sxl2 = total2 - csum2[l - 1]
-
-    def lag_dot(ll):
-        # sum_t x_t * x_{t+l} with head mask; roll is cheap and shape-static.
-        shifted = jnp.roll(x, -ll)
-        mask = jnp.arange(n) <= (n - 1 - ll)
-        return jnp.sum(jnp.where(mask, x * shifted, 0.0))
-
-    sxx = jax.vmap(lag_dot)(l)
+    sxx = lag_dot(x, L, backend=backend)
     return Aggregates(sx=sx, sxl=sxl, sx2=sx2, sxl2=sxl2, sxx=sxx)
 
 

@@ -6,16 +6,19 @@ per-lag aggregates are updated from the *delta vector* between the old and
 new reconstruction — O(L) for a single-point delta, O(mL) for an m-point
 segment — instead of recomputing the ACF in O(nL).
 
-Three granularities are provided:
+This module owns the exact *update* math (Eqs. 10-11) and the alive-neighbor
+geometry:
 
 * ``apply_delta_dense``   — exact update from a dense delta vector (used by
   the TPU batched-rounds mode: one O(nL) regular kernel per round, including
   the cross-lag bilinear term across *all* of this round's segments).
 * ``apply_delta_window``  — exact update from a delta confined to a static
   window ``W`` (used by the paper-faithful sequential mode; Eq. 9).
-* ``impact_single_delta`` — vectorized Algorithm 2: hypothetical new ACF for
-  a single-point delta at each queried index (Eq. 8), used for *ranking*
-  only.  The ``kernels/acf_impact`` Pallas kernel implements the same math.
+
+The hypothetical-ACF *ranking* forms (Eqs. 8-9) live once in
+``kernels/ref.py`` — ``acf_after_single_delta`` / ``acf_after_window_delta``
+here are thin aliases kept for the core-level API, and all GetAllImpact
+ranking dispatches through ``kernels/ops.py``.
 
 All functions operate on the *target* series ``y`` (the raw series for
 ``kappa == 1``, or the tumbling-window aggregate series for Def. 2).
@@ -27,19 +30,11 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.core.acf import Aggregates, acf_from_aggregates
+from repro.core.acf import Aggregates
+from repro.kernels import ref as _ref
 
-
-def _lag_masks(idx: jax.Array, ny: int, L: int, dtype):
-    """head/tail validity masks for absolute indices ``idx`` (shape [...]).
-
-    Returns ``(head, tail)`` of shape ``[..., L]`` where
-    ``head[..., l-1] = idx <= ny-1-l`` and ``tail[..., l-1] = idx >= l``.
-    """
-    l = jnp.arange(1, L + 1)
-    head = (idx[..., None] <= (ny - 1 - l)).astype(dtype)
-    tail = (idx[..., None] >= l).astype(dtype)
-    return head, tail
+# head/tail validity masks live with the single-copy Eq. 8/9 math.
+_lag_masks = _ref.head_tail_masks
 
 
 # ---------------------------------------------------------------------------
@@ -153,32 +148,11 @@ def acf_after_single_delta(
 ) -> jax.Array:
     """Hypothetical ACF (per Eq. 8) after adding ``dval[p]`` at ``idx[p]``,
     independently for each p.  Returns ``[P, L]``.
+
+    Thin alias: the math lives in ``kernels/ref.py`` (single source of
+    truth, shared with the ``kernels/acf_impact`` Pallas kernel).
     """
-    ny = y.shape[0]
-    L = agg.sx.shape[0]
-    dtype = y.dtype
-    head, tail = _lag_masks(idx, ny, L, dtype)             # [P, L]
-    l = jnp.arange(1, L + 1)
-    y_pad = jnp.pad(y, (L, L))
-    y_fwd = y_pad[(idx + L)[:, None] + l[None, :]]         # y[i+l]
-    y_bwd = y_pad[(idx + L)[:, None] - l[None, :]]         # y[i-l]
-    y_at = y[idx]                                          # [P]
-
-    d = dval[:, None]                                      # [P, 1]
-    e = (dval * (2.0 * y_at + dval))[:, None]              # [P, 1]
-
-    sx = agg.sx[None, :] + d * head
-    sxl = agg.sxl[None, :] + d * tail
-    sx2 = agg.sx2[None, :] + e * head
-    sxl2 = agg.sxl2[None, :] + e * tail
-    sxx = agg.sxx[None, :] + d * (y_fwd * head + y_bwd * tail)
-
-    m = (ny - l).astype(dtype)[None, :]
-    num = m * sxx - sx * sxl
-    den2 = (m * sx2 - sx * sx) * (m * sxl2 - sxl * sxl)
-    tiny = jnp.asarray(1e-30, dtype)
-    den = jnp.sqrt(jnp.maximum(den2, tiny))
-    return jnp.where(den2 > tiny, num / den, jnp.zeros_like(num))
+    return _ref.acf_after_single_delta(agg, y, idx, dval)
 
 
 def acf_after_window_delta_ctx(
@@ -193,52 +167,12 @@ def acf_after_window_delta_ctx(
     """Hypothetical ACF after applying each candidate's *windowed* delta
     independently (vectorized Eq. 9).  Returns ``[P, L]``.
 
-    This is the exact ranking form: it accounts for the full re-interpolated
-    segment of a removal, including the cross-lag bilinear term, unlike the
-    single-delta Algorithm-2 approximation.  The context form supports the
-    coarse-grained partitioned mode: ``y_ctx`` is a local chunk with L-point
-    halos on each side (+W right padding) and ``off`` is the chunk's global
-    offset; out-of-series context positions must be zero.
+    Thin alias for the single-copy math in ``kernels/ref.py`` (shared with
+    the ``kernels/acf_window_impact`` Pallas kernel); see there for the
+    context-layout contract.
     """
-    L = agg.sx.shape[0]
-    P, W = dwins.shape
-    dtype = y_ctx.dtype
-    y_pad = y_ctx
-    j = jnp.arange(W)
-    abs_t = off + starts[:, None] + j[None, :]              # [P, W] global
-    loc_t = starts[:, None] + j[None, :]                    # [P, W] local
-    head = (abs_t[..., None] <= (ny - 1 - jnp.arange(1, L + 1))).astype(dtype)
-    tail = (abs_t[..., None] >= jnp.arange(1, L + 1)).astype(dtype)  # [P,W,L]
-
-    d = dwins                                               # [P, W]
-    y_at = y_pad[loc_t + L]                                 # [P, W]
-    e = d * (2.0 * y_at + d)
-
-    dsx = jnp.einsum("pw,pwl->pl", d, head)
-    dsxl = jnp.einsum("pw,pwl->pl", d, tail)
-    dsx2 = jnp.einsum("pw,pwl->pl", e, head)
-    dsxl2 = jnp.einsum("pw,pwl->pl", e, tail)
-
-    l = jnp.arange(1, L + 1)
-    y_fwd = y_pad[loc_t[..., None] + L + l]                 # [P, W, L]
-    y_bwd = y_pad[loc_t[..., None] + L - l]
-    d_padded = jnp.pad(d, ((0, 0), (0, L)))
-    d_fwd = d_padded[:, j[:, None] + l[None, :]]            # [P, W, L]
-    dsxx = jnp.einsum(
-        "pw,pwl->pl", d, y_fwd * head + y_bwd * tail) + jnp.einsum(
-        "pw,pwl->pl", d, d_fwd * head)
-
-    m = (ny - l).astype(dtype)[None, :]
-    sx = agg.sx[None, :] + dsx
-    sxl = agg.sxl[None, :] + dsxl
-    sx2 = agg.sx2[None, :] + dsx2
-    sxl2 = agg.sxl2[None, :] + dsxl2
-    sxx = agg.sxx[None, :] + dsxx
-    num = m * sxx - sx * sxl
-    den2 = (m * sx2 - sx * sx) * (m * sxl2 - sxl * sxl)
-    tiny = jnp.asarray(1e-30, dtype)
-    den = jnp.sqrt(jnp.maximum(den2, tiny))
-    return jnp.where(den2 > tiny, num / den, jnp.zeros_like(num))
+    return _ref.acf_after_window_delta_ctx(
+        agg, y_ctx, starts, dwins, ny=ny, off=off)
 
 
 def acf_after_window_delta(agg: Aggregates, y: jax.Array, starts: jax.Array,
@@ -276,40 +210,6 @@ def segment_deltas(xr: jax.Array, prev: jax.Array, nxt: jax.Array,
     m = (j < span[..., None]).astype(dt)
     dwin = (newv - xr[absj]) * m
     return dwin, start, span
-
-
-def impact_single_delta(
-    agg: Aggregates,
-    y: jax.Array,
-    idx: jax.Array,
-    dval: jax.Array,
-    p0: jax.Array,
-    measure_fn,
-    *,
-    chunk: int = 4096,
-) -> jax.Array:
-    """Ranking impact ``D(ACF_after_removal, P0)`` for each queried point.
-
-    Chunked over points to bound the [P, L] intermediate (mirrors the VMEM
-    tiling of the Pallas kernel).
-    """
-    P = idx.shape[0]
-    L = agg.sx.shape[0]
-    pad = (-P) % chunk
-    idx_p = jnp.pad(idx, (0, pad))
-    dval_p = jnp.pad(dval, (0, pad))
-
-    def one_chunk(args):
-        ii, dd = args
-        acf_new = acf_after_single_delta(agg, y, ii, dd)   # [chunk, L]
-        return jax.vmap(lambda row: measure_fn(row, p0))(acf_new)
-
-    nchunks = (P + pad) // chunk
-    out = jax.lax.map(
-        one_chunk,
-        (idx_p.reshape(nchunks, chunk), dval_p.reshape(nchunks, chunk)),
-    )
-    return out.reshape(-1)[:P]
 
 
 # ---------------------------------------------------------------------------

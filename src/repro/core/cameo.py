@@ -25,6 +25,12 @@ The guarantee discipline matches the paper: the *ranking* of candidates is a
 heuristic (single-delta Eq. 8 approximation, possibly stale under blocking),
 but every actual removal is validated with an exact incremental update, so
 the returned deviation is exact w.r.t. the reconstruction's true ACF/PACF.
+
+All ranking math is served by the impact-engine backend (``kernels/ops.py``,
+selected via ``CameoConfig.backend``): the Pallas kernels on TPU, the
+pure-jnp reference forms elsewhere.  This module holds only the greedy
+control loops; ``compress_batch`` vmaps/shards the rounds mode over a fleet
+of independent series.
 """
 from __future__ import annotations
 
@@ -38,21 +44,18 @@ import numpy as np
 
 from repro.core import measures as _measures
 from repro.core.acf import (
-    Aggregates,
     acf_from_aggregates,
     aggregate_series,
     extract_aggregates,
-    pacf_from_acf,
 )
 from repro.core.aggregates import (
-    acf_after_single_delta,
-    acf_after_window_delta,
     alive_neighbors,
     apply_delta_dense,
     apply_delta_window,
     interpolate_at,
     segment_deltas,
 )
+from repro.kernels import ops as _ops
 
 
 @dataclasses.dataclass(frozen=True)
@@ -81,6 +84,10 @@ class CameoConfig:
     target_cr: Optional[float] = None   # minimize D s.t. CR >= target_cr
     max_cr: Optional[float] = None      # optional halt once CR reaches this
     dtype: str = "float64"
+    # -- impact-engine backend (see kernels/ops.py):
+    #    "pallas" (TPU kernels; interpret mode off-TPU) | "reference"
+    #    (pure-jnp) | "auto" (pallas on TPU, reference elsewhere)
+    backend: str = "auto"
 
     def jdtype(self):
         return jnp.dtype(self.dtype)
@@ -101,113 +108,17 @@ class CompressResult(NamedTuple):
 # ---------------------------------------------------------------------------
 
 def _stat_transform(cfg: CameoConfig):
-    if cfg.stat == "acf":
-        return lambda r: r
-    if cfg.stat == "pacf":
-        return pacf_from_acf
-    raise ValueError(f"unknown stat {cfg.stat!r}")
+    # single stat registry, shared with the impact-engine dispatch
+    return _ops._transform_fn(cfg.stat)
 
 
 def _measure_fn(cfg: CameoConfig):
     return _measures.get_measure(cfg.measure)
 
 
-def _impact_all(cfg, agg, y, xr, alive, p0, n):
-    """Algorithm-2 (single-delta) ranking impact for all n points."""
-    dt = cfg.jdtype()
-    idx = jnp.arange(n, dtype=jnp.int32)
-    prev, nxt = alive_neighbors(alive)
-    xhat = interpolate_at(xr, prev, nxt, idx)
-    dx = xhat - xr
-    if cfg.kappa == 1:
-        y_idx, dval = idx, dx
-    else:
-        y_idx = idx // cfg.kappa
-        dval = dx / jnp.asarray(cfg.kappa, dt)
-
-    transform = _stat_transform(cfg)
-    mfn = _measure_fn(cfg)
-
-    P = n
-    chunk = min(cfg.impact_chunk, P)
-    pad = (-P) % chunk
-    ii = jnp.pad(y_idx, (0, pad))
-    dd = jnp.pad(dval, (0, pad))
-
-    def one_chunk(args):
-        ci, cd = args
-        rows = acf_after_single_delta(agg, y, ci, cd)      # [chunk, L]
-        return jax.vmap(lambda r: mfn(transform(r), p0))(rows)
-
-    nchunks = (P + pad) // chunk
-    imp = jax.lax.map(
-        one_chunk, (ii.reshape(nchunks, chunk), dd.reshape(nchunks, chunk))
-    ).reshape(-1)[:P]
-
-    inf = jnp.asarray(jnp.inf, dt)
-    removable = alive & (idx > 0) & (idx < n - 1)
-    return jnp.where(removable, imp.astype(dt), inf)
-
-
-def _impact_all_window(cfg, agg, y, xr, alive, p0, n):
-    """Exact windowed (Eq. 9) ranking impact for all n points.
-
-    Accounts for the full re-interpolated segment of each hypothetical
-    removal.  Candidates whose segment exceeds the static window ``W`` fall
-    back to the single-delta estimate (their actual removal is still checked
-    exactly by the dense update).  This is the math the ``kernels/acf_impact``
-    Pallas kernel implements.
-    """
-    dt = cfg.jdtype()
-    W = cfg.window
-    kap = cfg.kappa
-    idx = jnp.arange(n, dtype=jnp.int32)
-    prev, nxt = alive_neighbors(alive)
-    transform = _stat_transform(cfg)
-    mfn = _measure_fn(cfg)
-    inf = jnp.asarray(jnp.inf, dt)
-    Wy = W if kap == 1 else (W // kap + 2)
-
-    chunk = min(cfg.impact_chunk, n)
-    pad = (-n) % chunk
-    idx_p = jnp.pad(idx, (0, pad))
-
-    def one_chunk(ci):
-        dwin, start, span = segment_deltas(xr, prev, nxt, ci, W)  # [c,W]
-        if kap == 1:
-            dyw, ystart = dwin, start
-        else:
-            b0 = start // kap
-            j = jnp.arange(W, dtype=jnp.int32)
-            seg = (start[:, None] + j[None, :]) // kap - b0[:, None]
-            dyw = jax.vmap(
-                lambda d, s: jax.ops.segment_sum(d, s, num_segments=Wy)
-            )(dwin, seg) / jnp.asarray(kap, dt)
-            ystart = b0
-        rows = acf_after_window_delta(agg, y, ystart, dyw)        # [c, L]
-        imp = jax.vmap(lambda r: mfn(transform(r), p0))(rows)
-        return imp, span
-
-    nchunks = (n + pad) // chunk
-    imp, span = jax.lax.map(one_chunk, idx_p.reshape(nchunks, chunk))
-    imp = imp.reshape(-1)[:n].astype(dt)
-    span = span.reshape(-1)[:n]
-
-    # fall back to single-delta ranking where the segment outgrew W
-    needs_fallback = span > W
-    imp_sd = _impact_all(cfg, agg, y, xr, alive, p0, n)
-    imp = jnp.where(needs_fallback, imp_sd, imp)
-
-    removable = alive & (idx > 0) & (idx < n - 1)
-    return jnp.where(removable, imp, inf)
-
-
 def _ranking_impact(cfg, agg, y, xr, alive, p0, n):
-    if cfg.rank == "window":
-        return _impact_all_window(cfg, agg, y, xr, alive, p0, n)
-    if cfg.rank == "single":
-        return _impact_all(cfg, agg, y, xr, alive, p0, n)
-    raise ValueError(f"unknown rank {cfg.rank!r}")
+    """GetAllImpact via the impact-engine backend (see kernels/ops.py)."""
+    return _ops.ranking_impact(cfg, agg, y, xr, alive, p0, n)
 
 
 def _independent_set(sel: jax.Array, impact: jax.Array, alive: jax.Array):
@@ -258,7 +169,7 @@ def compress_rounds(x: jax.Array, cfg: CameoConfig) -> CompressResult:
     L = cfg.lags
     y0 = aggregate_series(x, cfg.kappa)
     ny = y0.shape[0]
-    agg0 = extract_aggregates(y0, L)
+    agg0 = extract_aggregates(y0, L, backend=cfg.backend)
     transform = _stat_transform(cfg)
     mfn = _measure_fn(cfg)
     p0 = transform(acf_from_aggregates(agg0, ny))
@@ -294,6 +205,11 @@ def compress_rounds(x: jax.Array, cfg: CameoConfig) -> CompressResult:
     def body(c):
         (xr, alive, y, agg, alpha, dev, rounds, done, blocked) = c
         n_alive = jnp.sum(alive)
+        # Per-lane re-check of `cond`: under vmap (compress_batch) the body
+        # keeps executing for lanes whose own loop has finished as long as
+        # any lane is live; gating acceptance on `live` makes those extra
+        # executions exact no-ops, so batched results match per-series runs.
+        live = (~done) & (rounds < cfg.max_rounds) & (n_alive > min_alive)
         impact = _ranking_impact(cfg, agg, y, xr, alive, p0, n)
         inf = jnp.asarray(jnp.inf, dt)
         impact = jnp.where(blocked, inf, impact)
@@ -326,7 +242,7 @@ def compress_rounds(x: jax.Array, cfg: CameoConfig) -> CompressResult:
             impact, sel_idx, finite, alive, xr, y, agg, k_final)
         n_sel = jnp.sum(sel)
         any_sel = n_sel > 0
-        accept = (dev_new <= eps) & any_sel
+        accept = (dev_new <= eps) & any_sel & live
 
         was_single = n_sel <= 1
         if cfg.stop_policy == "first_violation":
@@ -359,7 +275,8 @@ def compress_rounds(x: jax.Array, cfg: CameoConfig) -> CompressResult:
             lambda new, old: jnp.where(accept, new, old), agg_new, agg)
         dev_out = jnp.where(accept, dev_new, dev)
         return (xr_out, alive_out, y_out, agg_out, alpha_new,
-                dev_out, rounds + 1, done_new, blocked_new)
+                dev_out, rounds + live.astype(jnp.int32), done_new,
+                blocked_new)
 
     alive0 = jnp.ones((n,), bool)
     init = (x, alive0, y0, agg0, jnp.asarray(cfg.alpha, dt),
@@ -388,7 +305,7 @@ def compress_sequential(x: jax.Array, cfg: CameoConfig) -> CompressResult:
     kap = cfg.kappa
     y0 = aggregate_series(x, kap)
     ny = y0.shape[0]
-    agg0 = extract_aggregates(y0, L)
+    agg0 = extract_aggregates(y0, L, backend=cfg.backend)
     transform = _stat_transform(cfg)
     mfn = _measure_fn(cfg)
     p0 = transform(acf_from_aggregates(agg0, ny))
@@ -407,44 +324,15 @@ def compress_sequential(x: jax.Array, cfg: CameoConfig) -> CompressResult:
     # y-window size for kappa>1 windowed updates.
     Wy = W if kap == 1 else (W // kap + 2)
 
-    def seg_delta(xr, p, q):
-        """Deltas for re-interpolating the interior of segment (p, q).
-
-        Returns (dwin [W], start, valid) — valid=False if the span exceeds W.
-        """
-        start = p + 1
-        span = q - p - 1            # number of interior points
-        j = jnp.arange(W, dtype=jnp.int32)
-        absj = jnp.clip(start + j, 0, n - 1)
-        t = (absj - p).astype(dt) / jnp.maximum((q - p).astype(dt), 1.0)
-        newv = xr[jnp.clip(p, 0, n - 1)] + (
-            xr[jnp.clip(q, 0, n - 1)] - xr[jnp.clip(p, 0, n - 1)]) * t
-        m = (j < span).astype(dt)
-        dwin = (newv - xr[absj]) * m
-        return dwin, start, span <= W
-
-    def y_window(dwin, start):
-        """Map an x-space delta window onto the target (aggregate) series."""
-        if kap == 1:
-            return dwin, start
-        b0 = start // kap
-        j = jnp.arange(W, dtype=jnp.int32)
-        seg = (start + j) // kap - b0
-        dy = jax.ops.segment_sum(dwin, seg, num_segments=Wy) / jnp.asarray(kap, dt)
-        return dy, b0
-
-    def trial(agg, y, xr, p, q):
-        dwin, start, valid = seg_delta(xr, p, q)
-        dyw, ystart = y_window(dwin, start)
+    def trial(agg, y, xr, prev, nxt, i):
+        """Exact Eq. 9 trial removal of point i (segment (prev[i], nxt[i]));
+        the impact-engine provides the delta geometry, the incremental
+        aggregate update validates the removal exactly."""
+        dwin, start, span = segment_deltas(xr, prev, nxt, i, W)
+        dyw, ystart = _ops.x_window_to_y(cfg, dwin, start)
         agg_t = apply_delta_window(agg, y, dyw, ystart, W=Wy, L=L)
         dev_t = mfn(transform(acf_from_aggregates(agg_t, ny)), p0)
-        return agg_t, dev_t, dwin, dyw, start, ystart, valid
-
-    def neighbor_impact(agg, y, xr, prev, nxt, jpt):
-        """Exact (Eq. 9) ranking impact of removing alive point jpt."""
-        _, dev_t, *_rest, valid = trial(agg, y, xr, prev[jpt], nxt[jpt])
-        interior = (jpt > 0) & (jpt < n - 1)
-        return jnp.where(valid & interior, dev_t, inf)
+        return agg_t, dev_t, dwin, dyw, start, ystart, span <= W
 
     def collect_neighbors(prev, nxt, p, q):
         """h alive indices walking left from p and right from q (incl. p, q)."""
@@ -474,7 +362,8 @@ def compress_sequential(x: jax.Array, cfg: CameoConfig) -> CompressResult:
         # the O(nL) single-delta form, which is exact while all points are
         # alive (every segment has span 1).  We do the same.
         alive = jnp.ones((n,), bool)
-        return _impact_all(cfg, agg, y, xr, alive, p0, n)
+        return _ops.ranking_impact(cfg, agg, y, xr, alive, p0, n,
+                                   rank="single")
 
     def cond(c):
         (xr, alive, prev, nxt, imp, agg, y, dev, it, done) = c
@@ -485,7 +374,8 @@ def compress_sequential(x: jax.Array, cfg: CameoConfig) -> CompressResult:
         i = jnp.argmin(imp)
         best = imp[i]
         p, q = prev[i], nxt[i]
-        agg_t, dev_t, dwin, dyw, start, ystart, valid = trial(agg, y, xr, p, q)
+        agg_t, dev_t, dwin, dyw, start, ystart, valid = trial(
+            agg, y, xr, prev, nxt, i)
 
         can_remove = jnp.isfinite(best) & valid & (dev_t <= eps)
         # Algorithm 1 stops at the first violation, which is sound when the
@@ -519,11 +409,11 @@ def compress_sequential(x: jax.Array, cfg: CameoConfig) -> CompressResult:
             nxt2 = nxt.at[p].set(q, mode="drop")
             y2 = windowed_add(y, dyw, ystart, Wy)
             imp2 = imp.at[i].set(inf)
-            # ReHeap: exact impact recompute for h alive neighbors per side.
+            # ReHeap: exact impact recompute for h alive neighbors per side,
+            # through the impact-engine backend (exact Eq. 9 ranking).
             nbrs = collect_neighbors(prev2, nxt2, p, q)
-            new_imps = jax.vmap(
-                lambda jpt: neighbor_impact(agg_t, y2, xr2, prev2, nxt2, jpt)
-            )(nbrs)
+            new_imps = _ops.window_impact_at(
+                cfg, agg_t, y2, xr2, prev2, nxt2, nbrs, p0)
             # only alive points get updates (dedup: later writes win, values
             # identical for duplicated indices so order is irrelevant)
             alive_n = alive2[nbrs]
@@ -574,6 +464,41 @@ def compress(x, cfg: CameoConfig) -> CompressResult:
     if cfg.mode == "sequential":
         return compress_sequential(x, cfg)
     raise ValueError(f"unknown mode {cfg.mode!r}")
+
+
+def compress_batch(xs, cfg: CameoConfig, mesh=None,
+                   axis: str = "data") -> CompressResult:
+    """Batched multi-series compression — the fleet-of-sensors workload.
+
+    ``xs`` is ``[B, n]`` (B independent series of equal length); returns a
+    ``CompressResult`` whose leaves carry a leading batch axis.  Built on the
+    TPU-native ``rounds`` mode: per-series results are bit-identical to
+    ``compress_rounds(xs[b], cfg)`` (the round loop no-ops for series that
+    finish early while the batch drains).  With ``mesh`` given, the batch is
+    additionally sharded over ``mesh.shape[axis]`` devices via ``shard_map``
+    (B must divide evenly); each device vmaps its local shard.
+    """
+    xs = jnp.asarray(xs)
+    if xs.ndim != 2:
+        raise ValueError(f"compress_batch wants [B, n], got {xs.shape}")
+    if cfg.mode != "rounds":
+        raise ValueError("compress_batch batches the rounds mode; got "
+                         f"mode={cfg.mode!r}")
+    if cfg.kappa > 1:
+        n = (xs.shape[1] // cfg.kappa) * cfg.kappa
+        xs = xs[:, :n]
+    batched = jax.vmap(lambda x: compress_rounds(x, cfg))
+    if mesh is None:
+        return batched(xs)
+    from jax.sharding import PartitionSpec as P
+    from repro import sharding as shd
+    T = mesh.shape[axis]
+    if xs.shape[0] % T:
+        raise ValueError(f"batch {xs.shape[0]} not divisible over "
+                         f"{T} devices on axis {axis!r}")
+    sharded = shd.shard_map(batched, mesh=mesh, in_specs=P(axis),
+                            out_specs=P(axis))
+    return jax.jit(sharded)(xs)
 
 
 def kept_points(res: CompressResult):

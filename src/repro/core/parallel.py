@@ -35,6 +35,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro import sharding as shd
 from repro.core.acf import Aggregates, acf_from_aggregates, aggregate_series, acf
 from repro.core.cameo import (
     CameoConfig,
@@ -46,18 +47,15 @@ from repro.core.cameo import (
     _x_to_y_delta,
     compress_rounds,
 )
-from repro.core.aggregates import (
-    acf_after_window_delta_ctx,
-    alive_neighbors,
-    segment_deltas,
-)
+from repro.kernels import ops as _ops
 
 
 # ---------------------------------------------------------------------------
 # per-chunk aggregate contributions (overlap terms via right halos)
 # ---------------------------------------------------------------------------
 
-def chunk_agg_contrib(y_c, halo_r, off, ny: int, L: int) -> Aggregates:
+def chunk_agg_contrib(y_c, halo_r, off, ny: int, L: int,
+                      backend: str = "auto") -> Aggregates:
     """This chunk's contribution to the global per-lag aggregates.
 
     ``halo_r`` is the next chunk's first L values (zeros past the series
@@ -84,17 +82,12 @@ def chunk_agg_contrib(y_c, halo_r, off, ny: int, L: int) -> Aggregates:
                      jnp.where(lo >= m, 0.0,
                                total2 - csum2[jnp.clip(lo - 1, 0, m - 1)]))
     # lagged products: the zero halo past the series end masks invalid pairs
-    y_ext = jnp.concatenate([y_c, halo_r[:L]])
-
-    def lag_dot(ll):
-        seg = jax.lax.dynamic_slice(y_ext, (ll,), (m,))
-        return jnp.sum(y_c * seg)
-
-    sxx = jax.vmap(lag_dot)(l)
+    sxx = _ops.lag_dot(y_c, L, halo=halo_r, backend=backend)
     return Aggregates(sx=sx, sxl=sxl, sx2=sx2, sxl2=sxl2, sxx=sxx)
 
 
-def chunk_delta_contrib(y_c, d_c, halo_y, halo_d, off, ny: int, L: int) -> Aggregates:
+def chunk_delta_contrib(y_c, d_c, halo_y, halo_d, off, ny: int, L: int,
+                        backend: str = "auto") -> Aggregates:
     """This chunk's contribution to the global aggregate *delta* for a dense
     per-chunk delta ``d_c`` (Eq. 9 generalized across partitions).
 
@@ -117,63 +110,12 @@ def chunk_delta_contrib(y_c, d_c, halo_y, halo_d, off, ny: int, L: int) -> Aggre
                       jnp.where(lo >= m, 0.0,
                                 etot - ce[jnp.clip(lo - 1, 0, m - 1)]))
 
-    y_ext = jnp.concatenate([y_c, halo_y[:L]])
-    d_ext = jnp.concatenate([d_c, halo_d[:L]])
-
-    def lag_term(ll):
-        y_sh = jax.lax.dynamic_slice(y_ext, (ll,), (m,))
-        d_sh = jax.lax.dynamic_slice(d_ext, (ll,), (m,))
-        return jnp.sum(d_c * y_sh + y_c * d_sh + d_c * d_sh)
-
-    dsxx = jax.vmap(lag_term)(l)
+    # new*new - old*old expanded per lag pair:
+    #   d_t y_{t+l} + y_t d_{t+l} + d_t d_{t+l}  — three halo'd lagged dots
+    dsxx = (_ops.lag_dot(d_c, L, b=y_c, halo=halo_y, backend=backend)
+            + _ops.lag_dot(y_c, L, b=d_c, halo=halo_d, backend=backend)
+            + _ops.lag_dot(d_c, L, b=d_c, halo=halo_d, backend=backend))
     return Aggregates(sx=dsx, sxl=dsxl, sx2=dsx2, sxl2=dsxl2, sxx=dsxx)
-
-
-# ---------------------------------------------------------------------------
-# per-chunk ranking and selection (partition-local)
-# ---------------------------------------------------------------------------
-
-def _chunk_impacts(cfg: CameoConfig, agg, y_ctx, xr_c, alive_c, p0,
-                   off_y, ny: int):
-    """Exact windowed ranking impacts for one partition's candidates.
-
-    Candidates whose segment outgrew W rank +inf (unremovable here)."""
-    dt = cfg.jdtype()
-    W = cfg.window
-    kap = cfg.kappa
-    mx = xr_c.shape[0]
-    Wy = W if kap == 1 else (W // kap + 2)
-    idx = jnp.arange(mx, dtype=jnp.int32)
-    prev, nxt = alive_neighbors(alive_c)
-    transform = _stat_transform(cfg)
-    mfn = _measure_fn(cfg)
-    inf = jnp.asarray(jnp.inf, dt)
-
-    chunk = min(cfg.impact_chunk, mx)
-    pad = (-mx) % chunk
-    idx_p = jnp.pad(idx, (0, pad))
-
-    def one_chunk(ci):
-        dwin, start, span = segment_deltas(xr_c, prev, nxt, ci, W)
-        if kap == 1:
-            dyw, ystart = dwin, start
-        else:
-            b0 = start // kap
-            j = jnp.arange(W, dtype=jnp.int32)
-            seg = (start[:, None] + j[None, :]) // kap - b0[:, None]
-            dyw = jax.vmap(
-                lambda d, s: jax.ops.segment_sum(d, s, num_segments=Wy)
-            )(dwin, seg) / jnp.asarray(kap, dt)
-            ystart = b0
-        rows = acf_after_window_delta_ctx(
-            agg, y_ctx, ystart, dyw, ny=ny, off=off_y)
-        imp = jax.vmap(lambda r: mfn(transform(r), p0))(rows)
-        return jnp.where(span <= W, imp.astype(dt), inf)
-
-    nchunks = (mx + pad) // chunk
-    imp = jax.lax.map(one_chunk, idx_p.reshape(nchunks, chunk)).reshape(-1)[:mx]
-    removable = alive_c & (idx > 0) & (idx < mx - 1)
-    return jnp.where(removable, imp, inf)
 
 
 def _chunk_select(impact, alive_c, k_dyn, k_max: int):
@@ -236,7 +178,8 @@ def compress_partitioned(x: jax.Array, cfg: CameoConfig, T: int) -> CompressResu
 
     def global_agg_from(yparts):
         contribs = jax.vmap(
-            lambda yc, hr, off: chunk_agg_contrib(yc, hr, off, ny, L)
+            lambda yc, hr, off: chunk_agg_contrib(
+                yc, hr, off, ny, L, backend=cfg.backend)
         )(yparts, right_halo(yparts, L), offs_y)
         return jax.tree.map(lambda a: a.sum(0), contribs)
 
@@ -244,7 +187,7 @@ def compress_partitioned(x: jax.Array, cfg: CameoConfig, T: int) -> CompressResu
     agg0 = global_agg_from(yp0)
     p0 = transform(acf_from_aggregates(agg0, ny))
 
-    impacts_fn = functools.partial(_chunk_impacts, cfg)
+    impacts_fn = functools.partial(_ops.chunk_ranking_impact, cfg)
 
     def cond(c):
         (xr, alive, yp, agg, alpha, dev, rounds, done, blocked) = c
@@ -275,7 +218,7 @@ def compress_partitioned(x: jax.Array, cfg: CameoConfig, T: int) -> CompressResu
         dyp = jax.vmap(lambda d: _x_to_y_delta(d, kap, dt))(delta_x)
         dcontrib = jax.vmap(
             lambda yc, dc, hy, hd, off: chunk_delta_contrib(
-                yc, dc, hy, hd, off, ny, L)
+                yc, dc, hy, hd, off, ny, L, backend=cfg.backend)
         )(yp, dyp, right_halo(yp, L), right_halo(dyp, L), offs_y)
         dagg = jax.tree.map(lambda a: a.sum(0), dcontrib)
         agg_new = jax.tree.map(lambda a, d: a + d, agg, dagg)
@@ -324,7 +267,7 @@ def compress_partitioned_shardmap(x, cfg: CameoConfig, mesh, axis: str = "data")
     eps = jnp.asarray(eps_f, dt)
     transform = _stat_transform(cfg)
     mfn = _measure_fn(cfg)
-    impacts_fn = functools.partial(_chunk_impacts, cfg)
+    impacts_fn = functools.partial(_ops.chunk_ranking_impact, cfg)
 
     fwd = [(i, i - 1) for i in range(1, T)]   # i sends to i-1 (right halo)
     bwd = [(i, i + 1) for i in range(T - 1)]  # i sends to i+1 (left halo)
@@ -341,7 +284,8 @@ def compress_partitioned_shardmap(x, cfg: CameoConfig, mesh, axis: str = "data")
         y0 = aggregate_series(x_c, kap)
         agg0 = jax.tree.map(
             lambda a: jax.lax.psum(a, axis),
-            chunk_agg_contrib(y0, right_halo(y0, L), off_y, ny, L))
+            chunk_agg_contrib(y0, right_halo(y0, L), off_y, ny, L,
+                              backend=cfg.backend))
         p0 = transform(acf_from_aggregates(agg0, ny))
 
         def cond(c):
@@ -369,7 +313,8 @@ def compress_partitioned_shardmap(x, cfg: CameoConfig, mesh, axis: str = "data")
             dagg = jax.tree.map(
                 lambda a: jax.lax.psum(a, axis),
                 chunk_delta_contrib(y, dy, right_halo(y, L),
-                                    right_halo(dy, L), off_y, ny, L))
+                                    right_halo(dy, L), off_y, ny, L,
+                                    backend=cfg.backend))
             agg_new = jax.tree.map(lambda a, d: a + d, agg, dagg)
             dev_new = mfn(transform(acf_from_aggregates(agg_new, ny)), p0)
 
@@ -400,11 +345,10 @@ def compress_partitioned_shardmap(x, cfg: CameoConfig, mesh, axis: str = "data")
         n_kept = jax.lax.psum(jnp.sum(alive), axis)
         return xr, alive, dev, n_kept, rounds, p0, stat_new
 
-    shard = jax.shard_map(
+    shard = shd.shard_map(
         body_shard, mesh=mesh,
         in_specs=P(axis),
-        out_specs=(P(axis), P(axis), P(), P(), P(), P(), P()),
-        check_vma=False)
+        out_specs=(P(axis), P(axis), P(), P(), P(), P(), P()))
     xr, alive, dev, n_kept, rounds, p0, stat_new = jax.jit(shard)(x)
     return CompressResult(kept=alive, xr=xr, deviation=dev, n_kept=n_kept,
                           iters=rounds, stat_orig=p0, stat_new=stat_new)

@@ -10,6 +10,7 @@ paper's "ACF #Lag" column ("7 on 48" = 7 lags on kappa=48 aggregates).
 from __future__ import annotations
 
 import dataclasses
+import zlib
 from typing import Dict
 
 import numpy as np
@@ -60,7 +61,10 @@ def _ar1(rng, n, phi=0.7, sigma=1.0):
 def make_dataset(name: str, seed: int = 0, length: int | None = None) -> np.ndarray:
     spec = DATASETS[name]
     n = length or spec.length
-    rng = np.random.default_rng(seed + hash(name) % 65536)
+    # stable per-name offset: Python's str hash is salted per process, which
+    # made "deterministic" datasets differ between runs (and benchmark CRs
+    # drift across invocations) — crc32 is reproducible everywhere.
+    rng = np.random.default_rng(seed + zlib.crc32(name.encode()) % 65536)
     t = np.arange(n, dtype=np.float64)
 
     if name == "elec_power":

@@ -39,8 +39,17 @@ def lag_dot_kernel(y_ref, yh_ref, out_ref, *, L: int, B: int, Lpad: int):
 
 
 @functools.partial(jax.jit, static_argnames=("L", "block", "interpret"))
-def lag_dot_pallas(y, *, L: int, block: int = 4096, interpret: bool = False):
-    """``sxx[l-1] = sum_{t<=n-1-l} y_t y_{t+l}`` for l in 1..L, shape [L]."""
+def lag_dot_pallas(y, b=None, halo=None, *, L: int, block: int = 4096,
+                   interpret: bool = False):
+    """``out[l-1] = sum_{t < n} a_t * b_ext_{t+l}`` for l in 1..L, shape [L].
+
+    With the defaults (``b=None, halo=None``) this is the Eq. 7 lagged
+    self-product ``sxx``.  The kernel body already separates the main operand
+    (``y``) from the lag-shifted one, so the same kernel computes *cross*
+    lagged products (``b``) and *halo'd* chunk-local products (``halo`` — an
+    L-point continuation of ``b`` past the chunk end, used by the
+    partitioned mode's overlap terms).
+    """
     n = y.shape[0]
     dtype = y.dtype
     B = block
@@ -48,7 +57,10 @@ def lag_dot_pallas(y, *, L: int, block: int = 4096, interpret: bool = False):
     npad = n + pad
     Lpad = max(128, ((L + 127) // 128) * 128)   # lane-aligned accumulator
     y_main = jnp.pad(y, (0, pad))
-    y_halo = jnp.pad(y, (0, pad + Lpad))        # slab + L halo reads
+    b_base = y if b is None else b
+    if halo is not None:
+        b_base = jnp.concatenate([b_base, halo[:L].astype(dtype)])
+    y_halo = jnp.pad(b_base, (0, npad + Lpad - b_base.shape[0]))
 
     grid = (npad // B,)
     kernel = functools.partial(lag_dot_kernel, L=L, B=B, Lpad=Lpad)

@@ -177,7 +177,7 @@ def moe_apply_a2a(p, x, spec, mesh, axis: str = "model",
             aux = jax.lax.pmean(aux, a)
         return y.reshape(B_loc, S, d), aux
 
-    shard = jax.shard_map(
+    shard = shd.shard_map(
         body, mesh=mesh,
         in_specs=(x_spec, router_spec, w_spec, w_spec, w_spec),
         out_specs=(x_spec, P()),
@@ -267,7 +267,7 @@ def moe_apply_a2a_2d(p, x, spec, mesh, axis: str = "model",
         aux = jnp.asarray(0.0, jnp.float32)
         return y.reshape(B_, S, d), aux
 
-    shard = jax.shard_map(
+    shard = shd.shard_map(
         body, mesh=mesh,
         in_specs=(x_spec, router_spec, wi_spec, wi_spec, wo_spec),
         out_specs=(x_spec, P()),

@@ -18,6 +18,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import sharding as shd
 from repro.configs.base import ModelConfig
 from repro.optim.adamw import AdamWConfig, adamw_update
 from repro.optim.compress import CompressConfig, compress_with_feedback
@@ -46,7 +47,7 @@ def build_dp_train_step(cfg: ModelConfig, tcfg: TrainConfig, mesh,
     pspec = P()          # replicated params/opt state (pure DP)
     bspec = P(axis)      # batch sharded over the dp axis
 
-    shard = jax.shard_map(
+    shard = shd.shard_map(
         shard_body, mesh=mesh,
         in_specs=(pspec, pspec, pspec, bspec, pspec),
         out_specs=(pspec, pspec, pspec, pspec),

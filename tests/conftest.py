@@ -1,5 +1,24 @@
 import jax
+import pytest
 
 # CAMEO math is validated against float64 oracles; model code is
 # dtype-explicit so this flag is behavior-neutral for the LM substrate.
 jax.config.update("jax_enable_x64", True)
+
+
+def hypothesis_or_stubs():
+    """(given, settings, st) — real hypothesis when installed, otherwise
+    stand-ins that let the module collect with property tests skipped."""
+    try:
+        from hypothesis import given, settings, strategies as st
+        return given, settings, st
+    except ImportError:
+        class _MissingStrategies:
+            def __getattr__(self, name):
+                return lambda *a, **k: None
+
+        def given(*a, **k):
+            return lambda f: pytest.mark.skip(
+                reason="hypothesis not installed")(f)
+
+        return given, given, _MissingStrategies()

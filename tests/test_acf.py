@@ -4,7 +4,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from conftest import hypothesis_or_stubs
+
+# optional dep: property tests skip when hypothesis is missing, rest run
+given, settings, st = hypothesis_or_stubs()
 
 from repro.core.acf import (acf, acf_from_aggregates, acf_stationary,
                             aggregate_series, extract_aggregates,

@@ -1,0 +1,144 @@
+"""Impact-engine backend layer: pallas ≡ reference parity (ranking, whole
+compressions) and the batched multi-series front-end."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.acf import acf_from_aggregates, aggregate_series, \
+    extract_aggregates
+from repro.core.cameo import (CameoConfig, compress_batch, compress_rounds,
+                              compress_sequential)
+from repro.kernels import ops
+
+
+def _series(n, seed=0):
+    rng = np.random.default_rng(seed)
+    t = np.arange(n)
+    return jnp.asarray(np.sin(2 * np.pi * t / 24)
+                       + 0.5 * np.sin(2 * np.pi * t / 168)
+                       + 0.15 * rng.standard_normal(n))
+
+
+def _ranking_setup(cfg, n, seed=0):
+    x = _series(n, seed=seed)
+    rng = np.random.default_rng(seed + 1)
+    alive = jnp.asarray(rng.random(n) > 0.3)
+    alive = alive.at[0].set(True).at[-1].set(True)
+    from repro.core.cameo import _reconstruct, _stat_transform
+    xr = _reconstruct(x, alive)
+    y = aggregate_series(xr, cfg.kappa)
+    agg = extract_aggregates(y, cfg.lags)
+    p0 = _stat_transform(cfg)(acf_from_aggregates(agg, y.shape[0]))
+    return x, xr, alive, y, agg, p0
+
+
+@pytest.mark.parametrize("rank", ["single", "window"])
+@pytest.mark.parametrize("kappa", [1, 4])
+@pytest.mark.parametrize("measure", ["mae", "rmse", "cheb"])
+def test_ranking_impact_backend_parity(rank, kappa, measure):
+    """pallas (interpret) ≡ reference GetAllImpact, all kernel measures."""
+    n = 512
+    cfg = CameoConfig(lags=12, rank=rank, kappa=kappa, measure=measure,
+                      backend="reference", impact_chunk=256)
+    x, xr, alive, y, agg, p0 = _ranking_setup(cfg, n)
+    ref_imp = ops.ranking_impact(cfg, agg, y, xr, alive, p0, n)
+    pal_imp = ops.ranking_impact(
+        dataclasses.replace(cfg, backend="pallas"), agg, y, xr, alive, p0, n)
+    np.testing.assert_allclose(np.asarray(ref_imp), np.asarray(pal_imp),
+                               rtol=1e-9, atol=1e-9)
+
+
+def test_ranking_impact_pacf_falls_back():
+    """Configs the kernels can't serve (pacf / non-kernel measures) produce
+    identical results under both backend names (reference fallback)."""
+    n = 256
+    for kw in [dict(stat="pacf"), dict(measure="mape")]:
+        cfg = CameoConfig(lags=8, backend="reference", **kw)
+        x, xr, alive, y, agg, p0 = _ranking_setup(cfg, n, seed=3)
+        a = ops.ranking_impact(cfg, agg, y, xr, alive, p0, n)
+        b = ops.ranking_impact(
+            dataclasses.replace(cfg, backend="pallas"),
+            agg, y, xr, alive, p0, n)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-12, atol=1e-12)
+
+
+@pytest.mark.parametrize("rank", ["single", "window"])
+@pytest.mark.parametrize("kappa", [1, 4])
+def test_compress_rounds_backend_identical_kept(rank, kappa):
+    """Acceptance: backend="pallas" (interpret on CPU) produces identical
+    kept masks to backend="reference" end to end."""
+    x = _series(768, seed=4)
+    cfg = CameoConfig(eps=0.02, lags=12, mode="rounds", rank=rank,
+                      kappa=kappa, backend="reference")
+    a = compress_rounds(x, cfg)
+    b = compress_rounds(x, dataclasses.replace(cfg, backend="pallas"))
+    np.testing.assert_array_equal(np.asarray(a.kept), np.asarray(b.kept))
+    assert abs(float(a.deviation) - float(b.deviation)) < 1e-9
+
+
+def test_compress_backend_identical_kept_quickstart_series():
+    """Acceptance criterion on the quickstart dataset (uk_elec)."""
+    from repro.data.synthetic import make_dataset
+    x = jnp.asarray(make_dataset("uk_elec", seed=0, length=1024))
+    cfg = CameoConfig(eps=1e-2, lags=24, mode="rounds",
+                      backend="reference")
+    a = compress_rounds(x, cfg)
+    b = compress_rounds(x, dataclasses.replace(cfg, backend="pallas"))
+    np.testing.assert_array_equal(np.asarray(a.kept), np.asarray(b.kept))
+    assert float(a.deviation) <= cfg.eps + 1e-12
+
+
+def test_compress_sequential_backend_runs():
+    """Sequential mode threads the backend through ReHeap + init impacts."""
+    x = _series(384, seed=5)
+    cfg = CameoConfig(eps=0.05, lags=8, mode="sequential", backend="pallas")
+    res = compress_sequential(x, cfg)
+    assert float(res.deviation) <= cfg.eps + 1e-12
+    ref = compress_sequential(
+        x, dataclasses.replace(cfg, backend="reference"))
+    np.testing.assert_array_equal(np.asarray(res.kept), np.asarray(ref.kept))
+
+
+def test_extract_aggregates_backend_parity():
+    y = _series(1000, seed=6)
+    a = extract_aggregates(y, 24, backend="reference")
+    b = extract_aggregates(y, 24, backend="pallas")
+    for f in a._fields:
+        np.testing.assert_allclose(np.asarray(getattr(a, f)),
+                                   np.asarray(getattr(b, f)),
+                                   rtol=1e-10, atol=1e-10)
+
+
+def test_resolve_backend():
+    assert ops.resolve_backend("pallas") == "pallas"
+    assert ops.resolve_backend("reference") == "reference"
+    assert ops.resolve_backend("auto") in ("pallas", "reference")
+    with pytest.raises(ValueError):
+        ops.resolve_backend("nope")
+
+
+def test_compress_batch_matches_per_series():
+    """The batched front-end is bit-identical to per-series rounds runs."""
+    n, B = 512, 3
+    xs = jnp.stack([_series(n, seed=s) for s in range(B)])
+    cfg = CameoConfig(eps=0.02, lags=12, mode="rounds")
+    batch = compress_batch(xs, cfg)
+    assert batch.kept.shape == (B, n)
+    for i in range(B):
+        one = compress_rounds(xs[i], cfg)
+        np.testing.assert_array_equal(np.asarray(batch.kept[i]),
+                                      np.asarray(one.kept))
+        assert abs(float(batch.deviation[i]) - float(one.deviation)) < 1e-12
+        assert int(batch.iters[i]) == int(one.iters)
+
+
+def test_compress_batch_validates_inputs():
+    cfg = CameoConfig(mode="sequential")
+    with pytest.raises(ValueError):
+        compress_batch(jnp.zeros((2, 64)), cfg)
+    with pytest.raises(ValueError):
+        compress_batch(jnp.zeros(64), CameoConfig())

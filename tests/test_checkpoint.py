@@ -37,12 +37,13 @@ def test_keep_k(tmp_path):
 def test_corruption_detected(tmp_path):
     t = _tree()
     path = ckpt.save(str(tmp_path), 1, t)
-    arr = os.path.join(path, "arrays.npz.zst")
-    import zstandard
-    raw = zstandard.ZstdDecompressor().decompress(open(arr, "rb").read())
+    with open(os.path.join(path, "manifest.json")) as f:
+        codec = json.load(f)["codec"]
+    arr = os.path.join(path, ckpt._array_file(codec))
+    raw = ckpt._decompress_bytes(open(arr, "rb").read(), codec)
     bad = bytearray(raw)
     bad[100] ^= 0xFF
-    open(arr, "wb").write(zstandard.ZstdCompressor().compress(bytes(bad)))
+    open(arr, "wb").write(ckpt._compress_bytes(bytes(bad), codec))
     with pytest.raises(Exception):
         ckpt.restore(str(tmp_path), 1, template=t)
 

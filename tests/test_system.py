@@ -1,6 +1,7 @@
 """End-to-end behaviour tests: the full CAMEO data plane (compress -> hard
 guarantee -> decompress -> downstream forecasting on compressed data), the
 paper's headline comparisons in miniature, and the LM-side integration."""
+import pytest
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -58,6 +59,7 @@ def test_end_to_end_compress_forecast():
     assert compression_ratio(res) >= 5.9
 
 
+@pytest.mark.slow
 def test_cameo_beats_vw_on_seasonal_data():
     """Headline claim (Fig. 6-flavored): at equal ACF budget CAMEO compresses
     at least as well as the strongest line-simplification baseline on a
@@ -74,6 +76,7 @@ def test_cameo_beats_vw_on_seasonal_data():
     assert wins >= 1
 
 
+@pytest.mark.slow
 def test_lm_trains_on_cameo_compressed_series():
     """The LM substrate consumes the CAMEO data plane: tokenize a compressed
     sensor stream and take gradient steps on a reduced arch."""

@@ -1,4 +1,5 @@
 """End-to-end training loop: loss decreases; preemption/resume determinism."""
+import pytest
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -32,6 +33,7 @@ def test_loss_decreases():
     assert hist[-1]["loss"] < hist[0]["loss"] * 0.7
 
 
+@pytest.mark.slow
 def test_resume_is_bit_consistent(tmp_path):
     """Interrupted-then-resumed training produces the same parameters as an
     uninterrupted run (deterministic data + checkpointed opt state)."""
