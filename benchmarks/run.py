@@ -29,6 +29,7 @@ BENCHES = {
     "fig10": cameo_suite.bench_fig10_parallel,
     "kernels": cameo_suite.bench_kernels,
     "backend": cameo_suite.bench_backend_parity,
+    "store": cameo_suite.bench_store,
     "fig12": forecast.bench_fig12_forecasting,
     "fig12lm": forecast.bench_fig12_lm_forecaster,
     "fig13": anomaly.bench_fig13_anomaly,

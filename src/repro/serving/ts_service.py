@@ -1,0 +1,140 @@
+"""Batched time-series ingest + query service over the CameoStore.
+
+The fleet-of-sensors front-end: producers ``submit`` raw series, the
+service buffers them into length groups and drives one
+``compress_batch`` per group (the TPU-native vmapped rounds mode — one
+compile, B series), then streams the results into an append-oriented
+:class:`~repro.store.store.CameoStore`.  Reads never wait for ingest:
+window decodes and pushdown aggregates are served from the store's block
+index the moment a series is flushed.
+
+This is the same continuous-batching-lite discipline as
+``serving/engine.py``'s decode loop — slots fill, a burst runs, results
+drain — applied to compression instead of token decoding.  Groups flush
+automatically when ``max_batch`` series of one length are waiting;
+``flush()`` drains everything (e.g. on shutdown, via the context manager).
+
+Per-series results are bit-identical to ``compress(x, cfg)`` run alone
+(see ``compress_batch``'s no-op-round guarantee), so storing through the
+service changes nothing about the roundtrip contract.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.core.cameo import CameoConfig, compress, compress_batch
+from repro.store.query import query as _pushdown_query
+from repro.store.store import CameoStore
+
+
+@dataclasses.dataclass
+class TsServiceConfig:
+    max_batch: int = 32           # series per compress_batch burst
+    block_len: int = 4096
+    value_codec: str = "gorilla"
+    entropy: str = "auto"
+    store_residuals: bool = True  # keep Plato-style bound metadata
+
+
+class TimeSeriesService:
+    """Ingest+query front-end over one store file."""
+
+    def __init__(self, path: str, ccfg: CameoConfig,
+                 scfg: Optional[TsServiceConfig] = None, *,
+                 resume: bool = False):
+        self.ccfg = ccfg
+        self.scfg = scfg or TsServiceConfig()
+        self.store = CameoStore(
+            path, "a" if resume else "w", block_len=self.scfg.block_len,
+            value_codec=self.scfg.value_codec, entropy=self.scfg.entropy)
+        # pending ingest, grouped by length (compress_batch wants [B, n])
+        self._pending: Dict[int, List[Tuple[str, np.ndarray]]] = {}
+        self._ingested = 0
+        self._rounds = 0
+
+    # -- lifecycle ----------------------------------------------------------
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+    def close(self):
+        self.flush()
+        self.store.close()
+
+    # -- ingest -------------------------------------------------------------
+
+    def submit(self, sid: str, x) -> None:
+        """Queue one series for compression; auto-flushes its length group
+        when ``max_batch`` series are waiting."""
+        if sid in self.store or any(
+                s == sid for g in self._pending.values() for s, _ in g):
+            raise ValueError(f"series {sid!r} already submitted")
+        x = np.asarray(x)
+        if x.ndim != 1:
+            raise ValueError(f"series must be 1-D, got {x.shape}")
+        group = self._pending.setdefault(x.shape[0], [])
+        group.append((sid, x))
+        if len(group) >= self.scfg.max_batch:
+            self._flush_group(x.shape[0])
+
+    def _flush_group(self, length: int) -> None:
+        group = self._pending.pop(length, [])
+        if not group:
+            return
+        cfg = self.ccfg
+        xs = np.stack([x for _, x in group])
+        if cfg.mode == "rounds" and len(group) > 1:
+            res = compress_batch(xs, cfg)
+            jax.block_until_ready(res.kept)
+            per_series = [
+                jax.tree.map(lambda leaf: leaf[i], res)
+                for i in range(len(group))]
+        else:
+            per_series = [compress(xs[i], cfg) for i in range(len(group))]
+        for (sid, x), r in zip(group, per_series):
+            self.store.append_series(
+                sid, r, cfg, x=x if self.scfg.store_residuals else None)
+            self._ingested += 1
+        self._rounds += 1
+
+    def flush(self) -> None:
+        """Compress and store every pending series."""
+        for length in sorted(self._pending):
+            self._flush_group(length)
+
+    # -- queries ------------------------------------------------------------
+
+    def query_window(self, sid: str, a: int, b: int) -> np.ndarray:
+        """Reconstruction slice ``xr[a:b]`` (bit-exact, edge blocks only)."""
+        return self.store.read_window(sid, a, b)
+
+    def query_aggregate(self, sid: str, kind: str, a=None, b=None):
+        """Pushdown aggregate ``(value, bound)``; see ``store/query.py``."""
+        return _pushdown_query(self.store, sid, kind, a, b)
+
+    def series_ids(self) -> List[str]:
+        return self.store.series_ids()
+
+    # -- accounting ---------------------------------------------------------
+
+    def stats(self) -> dict:
+        per = [self.store.compression_stats(s)
+               for s in self.store.series_ids()]
+        stored = sum(p["stored_nbytes"] for p in per)
+        raw = sum(p["raw_nbytes"] for p in per)
+        kept = sum(p["n_kept"] for p in per)
+        pts = sum(p["n"] for p in per)
+        return dict(
+            ingested=self._ingested,
+            pending=sum(len(g) for g in self._pending.values()),
+            batches=self._rounds,
+            points=pts, stored_nbytes=stored,
+            point_cr=pts / max(kept, 1),
+            bytes_cr=raw / max(stored, 1))

@@ -1,0 +1,45 @@
+"""CameoStore: the physical block store under the CAMEO compressor.
+
+* ``store.codec``  — byte-true bitstream codecs (delta-of-delta kept-index
+  packing, Gorilla/Chimp XOR value streams, optional zstd/zlib wrap) and
+  the byte-true ``compression_ratio_bytes``.
+* ``store.blocks`` — chunked block format; borders pinned on kept points;
+  headers carry (n, n_kept, eps, stat, kappa, L) + the five Eq. 7 ACF
+  sufficient statistics and pushdown metadata.
+* ``store.store``  — append-oriented writer / random-access reader
+  (``CameoStore``); window decodes touch only overlapping blocks and are
+  bit-exact vs the compressor's reconstruction.
+* ``store.query``  — Plato-style pushdown aggregates (sum/mean/var/ACF)
+  with deterministic error bounds.
+
+Exports resolve lazily (PEP 562): ``store.codec`` is plain numpy + stdlib
+and must stay importable without dragging in jax — ``baselines/lossless.py``
+pulls its vectorized Table-2 counters from there — while ``store.store`` /
+``store.blocks`` need jax for the bit-exact block reconstruction.
+"""
+import importlib
+
+_EXPORTS = {
+    "CameoStore": "repro.store.store",
+    "window_acf": "repro.store.query",
+    "window_mean": "repro.store.query",
+    "window_sum": "repro.store.query",
+    "window_var": "repro.store.query",
+    "chimp_stream_bits": "repro.store.codec",
+    "compression_ratio_bytes": "repro.store.codec",
+    "encode_series_payload": "repro.store.codec",
+    "gorilla_stream_bits": "repro.store.codec",
+}
+_SUBMODULES = ("blocks", "codec", "query", "store")
+
+
+def __getattr__(name):
+    if name in _EXPORTS:
+        return getattr(importlib.import_module(_EXPORTS[name]), name)
+    if name in _SUBMODULES:
+        return importlib.import_module(f"repro.store.{name}")
+    raise AttributeError(f"module 'repro.store' has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_EXPORTS) | set(_SUBMODULES))

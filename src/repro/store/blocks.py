@@ -1,0 +1,276 @@
+"""Chunked block format for stored CAMEO series.
+
+A stored series is a sequence of blocks whose borders sit **on kept
+points** — the writer snaps nominal ``block_len`` boundaries forward to the
+next kept index, and consecutive blocks share that boundary point.  This is
+the same discipline as ``core/parallel``'s pinned partition borders: no
+interpolation segment ever crosses a block, so a block decodes to the exact
+reconstruction slice using only its own kept points, and window reads touch
+only overlapping blocks.
+
+Every block header carries the compression contract (``n``, ``n_kept``,
+``eps``, ``stat``, ``kappa``, ``L``) plus the pushdown metadata
+``store/query.py`` answers aggregates from:
+
+* the five per-lag ACF sufficient statistics of the block's owned slice
+  (Eq. 7: ``sx, sxl, sx2, sxl2, sxx``, each ``[L]``);
+* value moments (sum, sum of squares, min, max) and the first/last ``L``
+  reconstruction values (the cross-block lag products for windowed ACF);
+* signed residual moments vs the *original* series when the writer had it
+  (``sum e``, ``sum e^2``, ``sum xr*e``, ``max |e|``) — the Plato-style
+  deterministic error-bound inputs.
+
+Ownership is half-open: block ``i`` owns ``[t0, t1)`` (the shared right
+border belongs to the next block) except the last block, which owns its end
+point too.  Owned spans are kept ``>= L`` (tail blocks merge into their
+predecessor) so cross-block lag pairs only ever straddle *adjacent* blocks.
+
+Reconstruction goes through the same jitted interpolation the compressor
+uses (``core.cameo._reconstruct``), padded to power-of-two lengths so a
+handful of compiled shapes serve every block: XLA fuses the interpolation
+into an FMA, so a plain numpy re-implementation is *not* bit-identical —
+decode must take the identical code path to honor the store's bit-true
+contract.
+"""
+from __future__ import annotations
+
+import dataclasses
+import struct
+import zlib
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.cameo import _reconstruct
+from repro.store import codec as _codec
+
+STAT_CODES = {"acf": 0, "pacf": 1}
+STAT_NAMES = {v: k for k, v in STAT_CODES.items()}
+_VCODEC_CODES = {"gorilla": 0, "chimp": 1}
+_VCODEC_NAMES = {v: k for k, v in _VCODEC_CODES.items()}
+_ENTROPY_CODES = {"none": 0, "zlib": 1, "zstd": 2}
+_ENTROPY_NAMES = {v: k for k, v in _ENTROPY_CODES.items()}
+
+_FLAG_LAST = 1
+_FLAG_RESID = 2
+
+# fixed header: t0 t1 n_kept | L kappa hv_len tv_len | stat vcodec entropy
+# flags | eps vmin vmax vsum vsumsq r1 r2 rx emax | idx_bits val_bits
+# raw_nbytes payload_nbytes
+_HDR = struct.Struct("<QQI HHHH BBBB 9d QQII")
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockMeta:
+    """Decoded block header (everything except the payload streams)."""
+
+    t0: int                 # global index of the first kept point (inclusive)
+    t1: int                 # global index of the last kept point (inclusive)
+    n_kept: int
+    L: int
+    kappa: int
+    stat: str
+    eps: float
+    is_last: bool
+    has_resid: bool
+    vmin: float
+    vmax: float
+    vsum: float
+    vsumsq: float
+    r1: float               # sum of residuals  e = x - xr   (owned slice)
+    r2: float               # sum of squared residuals
+    rx: float               # sum of xr * e
+    emax: float             # max |e|
+    agg: np.ndarray         # [5, L] Eq. 7 sufficient stats of the owned slice
+    head_vec: np.ndarray    # first min(L, owned) reconstruction values
+    tail_vec: np.ndarray    # last  min(L, owned) reconstruction values
+    idx_bits: int
+    val_bits: int
+    raw_nbytes: int
+    payload_nbytes: int
+    vcodec: str
+    entropy: str
+
+    @property
+    def span(self) -> int:
+        """Covered x-range length (inclusive of both kept borders)."""
+        return self.t1 - self.t0 + 1
+
+    @property
+    def o0(self) -> int:
+        return self.t0
+
+    @property
+    def o1(self) -> int:
+        """Owned range end (exclusive): the shared border belongs to the
+        next block, except for the final block."""
+        return self.t1 + 1 if self.is_last else self.t1
+
+
+# ---------------------------------------------------------------------------
+# block planning — borders snapped to kept points
+# ---------------------------------------------------------------------------
+
+def plan_block_bounds(kept_idx: np.ndarray, block_len: int, L: int):
+    """Block boundaries (kept indices, shared between neighbors).
+
+    Boundaries start at ``kept_idx[0]`` and advance to the first kept index
+    at least ``block_len`` away, so every owned span is ``>= block_len``
+    (``block_len`` is clamped to ``>= L`` so cross-block lag pairs stay
+    adjacent); a tail shorter than ``L`` merges into the previous block.
+    """
+    kept = np.asarray(kept_idx, np.int64)
+    if kept.shape[0] < 2:
+        raise ValueError("a stored series needs at least 2 kept points")
+    block_len = max(int(block_len), int(L))
+    bounds = [int(kept[0])]
+    last = int(kept[-1])
+    while bounds[-1] < last:
+        j = int(np.searchsorted(kept, bounds[-1] + block_len, side="left"))
+        nxt = int(kept[min(j, kept.shape[0] - 1)])
+        if nxt >= last or last - nxt < L:
+            nxt = last
+        bounds.append(nxt)
+    return bounds
+
+
+def _slice_aggregates(v: np.ndarray, L: int) -> np.ndarray:
+    """Eq. 7 sufficient statistics of a value slice, numpy form, [5, L]."""
+    v = np.asarray(v, np.float64)
+    m = v.shape[0]
+    cs = np.concatenate([[0.0], np.cumsum(v)])
+    cs2 = np.concatenate([[0.0], np.cumsum(v * v)])
+    agg = np.zeros((5, L))
+    for j in range(L):
+        l = j + 1
+        if m <= l:
+            continue
+        agg[0, j] = cs[m - l]                 # sx:  head sum
+        agg[1, j] = cs[m] - cs[l]             # sxl: tail sum
+        agg[2, j] = cs2[m - l]                # sx2
+        agg[3, j] = cs2[m] - cs2[l]           # sxl2
+        agg[4, j] = float(np.dot(v[:m - l], v[l:]))   # sxx
+    return agg
+
+
+# ---------------------------------------------------------------------------
+# encode / decode
+# ---------------------------------------------------------------------------
+
+def build_block(kept_idx, kept_vals, *, t0: int, t1: int, is_last: bool,
+                owned_xr: np.ndarray, L: int, kappa: int, stat: str,
+                eps: float, resid: Optional[np.ndarray] = None,
+                value_codec: str = "gorilla", entropy: str = "auto"):
+    """Encode one block -> ``(body, payload_nbytes)``.
+
+    ``kept_idx``/``kept_vals`` are the kept points in ``[t0, t1]`` (global
+    indices, both borders included); ``owned_xr`` is the reconstruction over
+    the owned range and ``resid`` the residual ``x - xr`` over the same
+    range when the original was available.  ``payload_nbytes`` is the
+    codec-only stream size (the header with its ``[5, L]`` aggregate
+    metadata is accounted separately — for large ``L`` on short blocks the
+    metadata can dominate, and the two CR flavors should stay tellable
+    apart)."""
+    kept_idx = np.asarray(kept_idx, np.int64)
+    kept_vals = np.asarray(kept_vals, np.float64)
+    owned_xr = np.asarray(owned_xr, np.float64)
+    local_idx = kept_idx - t0
+    payload, pinfo = _codec.encode_series_payload(
+        local_idx, kept_vals, value_codec=value_codec, entropy=entropy)
+
+    hv = owned_xr[:min(L, owned_xr.shape[0])]
+    tv = owned_xr[-min(L, owned_xr.shape[0]):]
+    agg = _slice_aggregates(owned_xr, L)
+
+    flags = (_FLAG_LAST if is_last else 0)
+    if resid is not None:
+        resid = np.asarray(resid, np.float64)
+        flags |= _FLAG_RESID
+        r1, r2 = float(resid.sum()), float(np.dot(resid, resid))
+        rx = float(np.dot(owned_xr, resid))
+        emax = float(np.max(np.abs(resid))) if resid.size else 0.0
+    else:
+        r1 = r2 = rx = emax = 0.0
+
+    header = _HDR.pack(
+        t0, t1, int(kept_idx.shape[0]),
+        L, kappa, hv.shape[0], tv.shape[0],
+        STAT_CODES[stat], _VCODEC_CODES[value_codec],
+        _ENTROPY_CODES[pinfo["entropy"]], flags,
+        float(eps), float(owned_xr.min()), float(owned_xr.max()),
+        float(owned_xr.sum()), float(np.dot(owned_xr, owned_xr)),
+        r1, r2, rx, emax,
+        pinfo["idx_bits"], pinfo["val_bits"],
+        pinfo["raw_nbytes"], pinfo["nbytes"])
+    body = header + agg.tobytes() + hv.tobytes() + tv.tobytes() + payload
+    return body + struct.pack("<I", zlib.crc32(body)), len(payload)
+
+
+def parse_block(body: bytes, *, with_payload: bool = True):
+    """Decode a block body -> ``(BlockMeta, kept_idx_global, kept_vals)``.
+
+    ``with_payload=False`` skips the bitstream decode (header-only reads for
+    pushdown queries) and returns ``(meta, None, None)``.
+    """
+    crc_stored, = struct.unpack("<I", body[-4:])
+    body = body[:-4]
+    if zlib.crc32(body) != crc_stored:
+        raise IOError("block corrupt: crc mismatch")
+    (t0, t1, n_kept, L, kappa, hv_len, tv_len, stat_c, vcodec_c, ent_c,
+     flags, eps, vmin, vmax, vsum, vsumsq, r1, r2, rx, emax,
+     idx_bits, val_bits, raw_nbytes, payload_nbytes) = _HDR.unpack(
+        body[:_HDR.size])
+    off = _HDR.size
+    agg = np.frombuffer(body, np.float64, 5 * L, off).reshape(5, L).copy()
+    off += 5 * L * 8
+    hv = np.frombuffer(body, np.float64, hv_len, off).copy()
+    off += hv_len * 8
+    tv = np.frombuffer(body, np.float64, tv_len, off).copy()
+    off += tv_len * 8
+    meta = BlockMeta(
+        t0=t0, t1=t1, n_kept=n_kept, L=L, kappa=kappa,
+        stat=STAT_NAMES[stat_c], eps=eps,
+        is_last=bool(flags & _FLAG_LAST), has_resid=bool(flags & _FLAG_RESID),
+        vmin=vmin, vmax=vmax, vsum=vsum, vsumsq=vsumsq,
+        r1=r1, r2=r2, rx=rx, emax=emax,
+        agg=agg, head_vec=hv, tail_vec=tv,
+        idx_bits=idx_bits, val_bits=val_bits, raw_nbytes=raw_nbytes,
+        payload_nbytes=payload_nbytes,
+        vcodec=_VCODEC_NAMES[vcodec_c], entropy=_ENTROPY_NAMES[ent_c])
+    if not with_payload:
+        return meta, None, None
+    payload = body[off:off + payload_nbytes]
+    local_idx, vals = _codec.decode_series_payload(
+        payload, n_kept, meta.entropy, meta.vcodec)
+    return meta, local_idx + t0, vals
+
+
+# ---------------------------------------------------------------------------
+# bit-exact block reconstruction
+# ---------------------------------------------------------------------------
+
+_recon_jit = None
+
+
+def reconstruct_block(local_idx: np.ndarray, vals: np.ndarray, span: int,
+                      dtype: str = "float64") -> np.ndarray:
+    """Reconstruction over a block's covered range from its kept points.
+
+    Runs the compressor's own jitted interpolation on a power-of-two padded
+    buffer (so a few compiled shapes cover all blocks; jit caches per
+    shape); the result is bit-identical to the matching slice of
+    ``CompressResult.xr``.
+    """
+    global _recon_jit
+    if _recon_jit is None:
+        import jax
+        _recon_jit = jax.jit(_reconstruct)
+    m = 1 << max(1, int(span - 1).bit_length())
+    jdt = jnp.dtype(dtype)
+    buf = np.zeros(m, jdt)
+    buf[np.asarray(local_idx)] = np.asarray(vals, jdt)
+    alive = np.zeros(m, bool)
+    alive[np.asarray(local_idx)] = True
+    out = _recon_jit(jnp.asarray(buf), jnp.asarray(alive))
+    return np.asarray(out)[:span]

@@ -1,0 +1,537 @@
+"""Byte-true bitstream codecs for the CameoStore physical layer.
+
+The paper's headline metric is a compression *ratio*, but ratios only mean
+something once a byte stream exists.  This module materializes the two
+streams a stored CAMEO series consists of:
+
+* **kept-index stream** — delta-of-delta bit-packing in the Gorilla
+  timestamp style ('0' for a repeated delta, then 7/9/12/32-bit buckets).
+  CAMEO's kept indices are near-arithmetic at low CR (long runs of
+  delta==const cost one bit per point) and stay cheap at high CR.
+* **value stream** — Gorilla or Chimp XOR float codecs.  These are the
+  *encoder* forms of the bit-cost counters in ``baselines/lossless.py``
+  (Table 2): the branch plans are computed once here and shared by both the
+  counters and the emitters, so counted bits == emitted bits exactly, by
+  construction (and by test).
+
+Both streams can be wrapped in an optional entropy stage (zstd when the
+``zstandard`` module is present, stdlib zlib otherwise — the same fallback
+discipline as ``checkpoint/manager.py``); the wrap is only kept when it
+actually shrinks the payload, and the chosen codec is recorded so decode
+never guesses.
+
+Everything here is plain numpy + stdlib: no jax, importable from anywhere
+(``baselines/lossless.py`` delegates its fast paths to the shared plans).
+All value codecs operate on 64-bit IEEE doubles; float32 inputs are upcast
+(exactly) and round-trip bit-true through a float32 cast on the way out.
+"""
+from __future__ import annotations
+
+import zlib
+
+import numpy as np
+
+try:
+    import zstandard
+except ImportError:  # optional dep: entropy wrap falls back to stdlib zlib
+    zstandard = None
+
+VALUE_CODECS = ("gorilla", "chimp")
+ENTROPY_CODECS = ("none", "zlib", "zstd")
+
+_CHIMP_LZ_BUCKETS = np.array([0, 8, 12, 16, 18, 20, 22, 24])
+
+_U64_ONE = np.uint64(1)
+
+
+# ---------------------------------------------------------------------------
+# bit-level IO
+# ---------------------------------------------------------------------------
+
+class BitWriter:
+    """MSB-first bit packer.  O(1) amortized per write; bounded accumulator."""
+
+    __slots__ = ("_buf", "_acc", "_nacc", "bit_length")
+
+    def __init__(self):
+        self._buf = bytearray()
+        self._acc = 0          # partial bits, < 8 of them after each write
+        self._nacc = 0
+        self.bit_length = 0
+
+    def write(self, value: int, nbits: int):
+        if nbits <= 0:
+            return
+        self.bit_length += nbits
+        acc = (self._acc << nbits) | (int(value) & ((1 << nbits) - 1))
+        nacc = self._nacc + nbits
+        buf = self._buf
+        while nacc >= 8:
+            nacc -= 8
+            buf.append((acc >> nacc) & 0xFF)
+        self._acc = acc & ((1 << nacc) - 1)
+        self._nacc = nacc
+
+    def getvalue(self) -> bytes:
+        if self._nacc:
+            return bytes(self._buf) + bytes(
+                [(self._acc << (8 - self._nacc)) & 0xFF])
+        return bytes(self._buf)
+
+
+class BitReader:
+    """MSB-first bit reader over ``bytes`` (the BitWriter's inverse)."""
+
+    __slots__ = ("_data", "_pos", "_acc", "_nacc")
+
+    def __init__(self, data: bytes):
+        self._data = data
+        self._pos = 0
+        self._acc = 0
+        self._nacc = 0
+
+    def read(self, nbits: int) -> int:
+        if nbits <= 0:
+            return 0
+        acc, nacc, pos, data = self._acc, self._nacc, self._pos, self._data
+        while nacc < nbits:
+            acc = (acc << 8) | data[pos]
+            pos += 1
+            nacc += 8
+        nacc -= nbits
+        out = (acc >> nacc) & ((1 << nbits) - 1)
+        self._acc = acc & ((1 << nacc) - 1)
+        self._nacc = nacc
+        self._pos = pos
+        return out
+
+
+# ---------------------------------------------------------------------------
+# vectorized XOR bit-geometry (shared by counters and encoders)
+# ---------------------------------------------------------------------------
+
+def bit_length_u64(v: np.ndarray) -> np.ndarray:
+    """Vectorized ``int.bit_length`` for a uint64 array (0 -> 0).
+
+    Binary-search over shifted masks — exact for the full 64-bit range
+    (float log2 would mis-round near powers of two above 2**53).
+    """
+    v = np.asarray(v, np.uint64).copy()
+    bl = np.zeros(v.shape, np.int64)
+    for s in (32, 16, 8, 4, 2, 1):
+        su = np.uint64(s)
+        big = v >= (_U64_ONE << su)
+        bl[big] += s
+        v[big] >>= su
+    bl += (v != 0)
+    return bl
+
+
+def xor_parts(x: np.ndarray):
+    """(bits, xor, lz, tz) of a float64 series, fully vectorized.
+
+    ``xor[i] = bits[i+1] ^ bits[i]``; ``lz``/``tz`` are leading/trailing zero
+    counts of each xor (64 for xor == 0) — the vectorized form of the
+    per-value Python loop the Table 2 counters used to run.
+    """
+    bits = np.ascontiguousarray(np.asarray(x, np.float64)).view(np.uint64)
+    xor = bits[1:] ^ bits[:-1]
+    bl = bit_length_u64(xor)
+    lz = np.where(xor == 0, 64, 64 - bl)
+    lowbit = xor & (~xor + _U64_ONE)
+    tz = np.where(xor == 0, 64, bit_length_u64(lowbit) - 1)
+    return bits, xor, lz.astype(np.int64), tz.astype(np.int64)
+
+
+# ---------------------------------------------------------------------------
+# Gorilla value codec (Pelkonen et al. 2015)
+# ---------------------------------------------------------------------------
+
+def _gorilla_plan(xor, lz, tz):
+    """Branch plan for the Gorilla value stream.
+
+    Returns ``(case, sig, shift)`` aligned with ``xor``: case 0 = zero xor
+    ('0'), 1 = window reuse ('10' + sig bits), 2 = new window ('11' + 5-bit
+    LZ + 6-bit length + sig bits); ``shift`` is the right-shift producing the
+    emitted meaningful bits.  The meaningful-bit *window* chain is inherently
+    sequential (each reuse decision depends on the last reset), so this scan
+    runs in Python — but over the precomputed vectorized bit geometry, which
+    is where the old per-value loops spent their time.
+    """
+    m = xor.shape[0]
+    li_l = np.minimum(lz, 31).tolist()    # gorilla caps LZ at 31 (5-bit field)
+    tz_l = tz.tolist()
+    nz_l = (xor != 0).tolist()
+    case = [0] * m
+    sig = [0] * m
+    shift = [0] * m
+    plz, ptz = -1, -1
+    for i in range(m):
+        if not nz_l[i]:
+            continue
+        li, ti = li_l[i], tz_l[i]
+        if plz >= 0 and li >= plz and ti >= ptz:
+            case[i] = 1
+            sig[i] = 64 - plz - ptz
+            shift[i] = ptz
+        else:
+            case[i] = 2
+            sig[i] = 64 - li - ti
+            shift[i] = ti
+            plz, ptz = li, ti
+    return (np.asarray(case, np.int64), np.asarray(sig, np.int64),
+            np.asarray(shift, np.int64))
+
+
+def gorilla_stream_bits(x) -> int:
+    """Exact bit size of :func:`gorilla_encode`'s stream (vectorized tally)."""
+    x = np.asarray(x, np.float64)
+    if x.shape[0] == 0:
+        return 0
+    _, xor, lz, tz = xor_parts(x)
+    case, sig, _ = _gorilla_plan(xor, lz, tz)
+    bits = np.where(case == 0, 1,
+                    np.where(case == 1, 2 + sig, 2 + 5 + 6 + sig))
+    return 64 + int(bits.sum())
+
+
+def gorilla_encode(x) -> bytes:
+    """Gorilla XOR value stream for a float64 series (lossless)."""
+    x = np.asarray(x, np.float64)
+    n = x.shape[0]
+    w = BitWriter()
+    if n == 0:
+        return w.getvalue()
+    bits, xor, lz, tz = xor_parts(x)
+    w.write(int(bits[0]), 64)
+    case, sig, shift = _gorilla_plan(xor, lz, tz)
+    xor_l, sig_l, shift_l = xor.tolist(), sig.tolist(), shift.tolist()
+    for i, c in enumerate(case.tolist()):
+        if c == 0:
+            w.write(0, 1)
+        elif c == 1:
+            w.write(0b10, 2)
+            w.write(xor_l[i] >> shift_l[i], sig_l[i])
+        else:
+            w.write(0b11, 2)
+            w.write(64 - sig_l[i] - shift_l[i], 5)
+            w.write(sig_l[i] & 0x3F, 6)        # 64 wraps to 0; decode maps back
+            w.write(xor_l[i] >> shift_l[i], sig_l[i])
+    return w.getvalue()
+
+
+def gorilla_decode(data: bytes, n: int) -> np.ndarray:
+    """Inverse of :func:`gorilla_encode`; returns float64 [n]."""
+    out = np.empty(n, np.uint64)
+    if n == 0:
+        return out.view(np.float64)
+    r = BitReader(data)
+    prev = r.read(64)
+    out[0] = prev
+    plz, ptz = -1, -1
+    for i in range(1, n):
+        if r.read(1):
+            if r.read(1):                       # '11' — new window
+                li = r.read(5)
+                sig = r.read(6) or 64
+                ti = 64 - li - sig
+                xor = r.read(sig) << ti
+                plz, ptz = li, ti
+            else:                               # '10' — reuse window
+                xor = r.read(64 - plz - ptz) << ptz
+            prev ^= xor
+        out[i] = prev
+    return out.view(np.float64)
+
+
+# ---------------------------------------------------------------------------
+# Chimp value codec (Liakos et al. 2022, plain variant)
+# ---------------------------------------------------------------------------
+
+def _chimp_plan(xor, lz, tz):
+    """Branch plan for the (plain) Chimp stream — fully vectorized.
+
+    Chimp's only carried state is the previous leading-zero bucket, and it is
+    a function of the *previous element alone* (zero-xor and center-form
+    entries reset it), so unlike Gorilla there is no sequential chain.
+
+    Returns ``(case, lzb, bi)``: case 0 = zero xor, 1 = center form
+    (tz > 6), 2 = bucket reuse, 3 = new bucket; ``lzb`` the rounded
+    leading-zero bucket, ``bi`` its 3-bit index.
+    """
+    bi = np.searchsorted(_CHIMP_LZ_BUCKETS, np.minimum(lz, 24),
+                         side="right") - 1
+    lzb = _CHIMP_LZ_BUCKETS[bi]
+    resets = (xor == 0) | (tz > 6)
+    prev_bucket = np.concatenate(
+        [[-1], np.where(resets[:-1], -1, lzb[:-1])])
+    case = np.where(xor == 0, 0,
+                    np.where(tz > 6, 1,
+                             np.where(lzb == prev_bucket, 2, 3)))
+    return case.astype(np.int64), lzb.astype(np.int64), bi.astype(np.int64)
+
+
+def chimp_stream_bits(x) -> int:
+    """Exact bit size of :func:`chimp_encode`'s stream (vectorized tally)."""
+    x = np.asarray(x, np.float64)
+    if x.shape[0] == 0:
+        return 0
+    _, xor, lz, tz = xor_parts(x)
+    case, lzb, _ = _chimp_plan(xor, lz, tz)
+    center = np.maximum(64 - lzb - tz, 0)
+    bits = np.where(case == 0, 2,
+                    np.where(case == 1, 2 + 3 + 6 + center,
+                             np.where(case == 2, 2 + (64 - lzb),
+                                      2 + 3 + (64 - lzb))))
+    return 64 + int(bits.sum())
+
+
+def chimp_encode(x) -> bytes:
+    """Chimp XOR value stream for a float64 series (lossless)."""
+    x = np.asarray(x, np.float64)
+    n = x.shape[0]
+    w = BitWriter()
+    if n == 0:
+        return w.getvalue()
+    bits, xor, lz, tz = xor_parts(x)
+    w.write(int(bits[0]), 64)
+    case, lzb, bi = _chimp_plan(xor, lz, tz)
+    xor_l, tz_l = xor.tolist(), tz.tolist()
+    lzb_l, bi_l = lzb.tolist(), bi.tolist()
+    for i, c in enumerate(case.tolist()):
+        if c == 0:
+            w.write(0b00, 2)
+        elif c == 1:
+            center = max(64 - lzb_l[i] - tz_l[i], 0)
+            w.write(0b01, 2)
+            w.write(bi_l[i], 3)
+            w.write(center & 0x3F, 6)
+            w.write(xor_l[i] >> tz_l[i], center)
+        elif c == 2:
+            w.write(0b10, 2)
+            w.write(xor_l[i], 64 - lzb_l[i])
+        else:
+            w.write(0b11, 2)
+            w.write(bi_l[i], 3)
+            w.write(xor_l[i], 64 - lzb_l[i])
+    return w.getvalue()
+
+
+def chimp_decode(data: bytes, n: int) -> np.ndarray:
+    """Inverse of :func:`chimp_encode`; returns float64 [n]."""
+    out = np.empty(n, np.uint64)
+    if n == 0:
+        return out.view(np.float64)
+    r = BitReader(data)
+    prev = r.read(64)
+    out[0] = prev
+    buckets = _CHIMP_LZ_BUCKETS.tolist()
+    prev_lzb = -1
+    for i in range(1, n):
+        c = r.read(2)
+        if c == 0b00:
+            xor = 0
+            prev_lzb = -1
+        elif c == 0b01:
+            lzb = buckets[r.read(3)]
+            center = r.read(6) or 64
+            ti = 64 - lzb - center
+            xor = r.read(center) << ti
+            prev_lzb = -1
+        elif c == 0b10:
+            xor = r.read(64 - prev_lzb)
+        else:
+            prev_lzb = buckets[r.read(3)]
+            xor = r.read(64 - prev_lzb)
+        prev ^= xor
+        out[i] = prev
+    return out.view(np.float64)
+
+
+VALUE_ENCODERS = {"gorilla": gorilla_encode, "chimp": chimp_encode}
+VALUE_DECODERS = {"gorilla": gorilla_decode, "chimp": chimp_decode}
+VALUE_BIT_COUNTERS = {"gorilla": gorilla_stream_bits,
+                      "chimp": chimp_stream_bits}
+
+
+# ---------------------------------------------------------------------------
+# kept-index stream: delta-of-delta bit packing (Gorilla timestamp style)
+# ---------------------------------------------------------------------------
+
+# (control bits, control width, payload bits, payload offset) per bucket;
+# dod in [lo, hi] is stored as dod - lo in `payload bits` bits.
+_DOD_BUCKETS = (
+    (0b10, 2, 7, -63),       # dod in [-63, 64]
+    (0b110, 3, 9, -255),     # dod in [-255, 256]
+    (0b1110, 4, 12, -2047),  # dod in [-2047, 2048]
+)
+_DOD_WIDE_CTRL, _DOD_WIDE_CTRLW, _DOD_WIDE_BITS = 0b1111, 4, 32
+
+
+def _dod_terms(idx: np.ndarray):
+    idx = np.asarray(idx, np.int64)
+    deltas = np.diff(idx)
+    if np.any(deltas <= 0):
+        raise ValueError("kept indices must be strictly increasing")
+    dods = np.diff(deltas, prepend=np.int64(1))  # first delta vs implicit 1
+    if dods.size and np.abs(dods).max() >= (1 << 31):
+        raise ValueError("index delta-of-delta outside the 32-bit bucket")
+    return dods
+
+
+def index_stream_bits(idx) -> int:
+    """Exact bit size of :func:`encode_indices`' stream (vectorized tally)."""
+    idx = np.asarray(idx, np.int64)
+    if idx.shape[0] == 0:
+        return 0
+    dods = _dod_terms(idx)
+    bits = np.full(dods.shape, _DOD_WIDE_CTRLW + _DOD_WIDE_BITS, np.int64)
+    for ctrl, cw, pb, lo in reversed(_DOD_BUCKETS):
+        hi = lo + (1 << pb) - 1
+        bits = np.where((dods >= lo) & (dods <= hi), cw + pb, bits)
+    bits = np.where(dods == 0, 1, bits)
+    return 32 + int(bits.sum())
+
+
+def encode_indices(idx) -> bytes:
+    """Delta-of-delta stream for strictly-increasing int indices.
+
+    The first index is stored in 32 raw bits; the first delta is coded as a
+    dod against an implicit previous delta of 1 (the unit-stride prior —
+    CAMEO kept sets at moderate CR are long runs of consecutive indices,
+    which cost one bit per point here).
+    """
+    idx = np.asarray(idx, np.int64)
+    w = BitWriter()
+    if idx.shape[0] == 0:
+        return w.getvalue()
+    if not (0 <= idx[0] < (1 << 32)):
+        raise ValueError(f"first index {idx[0]} outside u32 range")
+    w.write(int(idx[0]), 32)
+    for dod in _dod_terms(idx).tolist():
+        if dod == 0:
+            w.write(0, 1)
+            continue
+        for ctrl, cw, pb, lo in _DOD_BUCKETS:
+            hi = lo + (1 << pb) - 1
+            if lo <= dod <= hi:
+                w.write(ctrl, cw)
+                w.write(dod - lo, pb)
+                break
+        else:
+            w.write(_DOD_WIDE_CTRL, _DOD_WIDE_CTRLW)
+            w.write(dod & 0xFFFFFFFF, _DOD_WIDE_BITS)
+    return w.getvalue()
+
+
+def decode_indices(data: bytes, count: int) -> np.ndarray:
+    """Inverse of :func:`encode_indices`; returns int64 [count]."""
+    out = np.empty(count, np.int64)
+    if count == 0:
+        return out
+    r = BitReader(data)
+    cur = r.read(32)
+    out[0] = cur
+    delta = 1
+    for i in range(1, count):
+        if r.read(1) == 0:
+            dod = 0
+        else:
+            for ctrl, cw, pb, lo in _DOD_BUCKETS:
+                if r.read(1) == 0:               # matched this bucket's ctrl
+                    dod = r.read(pb) + lo
+                    break
+            else:
+                raw = r.read(_DOD_WIDE_BITS)
+                dod = raw - (1 << 32) if raw >= (1 << 31) else raw
+        delta += dod
+        cur += delta
+        out[i] = cur
+    return out
+
+
+# ---------------------------------------------------------------------------
+# entropy wrap (checkpoint/manager.py fallback discipline)
+# ---------------------------------------------------------------------------
+
+def entropy_wrap(raw: bytes, codec: str = "auto"):
+    """Optionally entropy-code ``raw``.  Returns ``(payload, codec_used)``;
+    the wrap is dropped (``"none"``) whenever it does not shrink the bytes.
+    """
+    if codec == "none":
+        return raw, "none"
+    if codec not in ("auto", "zstd", "zlib"):
+        raise ValueError(f"unknown entropy codec {codec!r}")
+    if codec in ("auto", "zstd") and zstandard is not None:
+        comp = zstandard.ZstdCompressor(level=3).compress(raw)
+        name = "zstd"
+    else:
+        comp = zlib.compress(raw, 6)
+        name = "zlib"
+    if len(comp) < len(raw):
+        return comp, name
+    return raw, "none"
+
+
+def entropy_unwrap(payload: bytes, codec: str) -> bytes:
+    if codec == "none":
+        return payload
+    if codec == "zstd":
+        if zstandard is None:
+            raise IOError("block is zstd-compressed but the zstandard "
+                          "module is not installed")
+        return zstandard.ZstdDecompressor().decompress(payload)
+    if codec == "zlib":
+        return zlib.decompress(payload)
+    raise ValueError(f"unknown entropy codec {codec!r}")
+
+
+# ---------------------------------------------------------------------------
+# byte-true compression ratios
+# ---------------------------------------------------------------------------
+
+def encode_series_payload(indices, values, *, value_codec: str = "gorilla",
+                          entropy: str = "auto"):
+    """Encode one series' kept set as (index stream || value stream).
+
+    Returns ``(payload, info)`` where ``info`` records the pre-wrap bit
+    sizes and the entropy codec actually used.  This is the codec-only
+    payload (no block headers) — the honest numerator for Table-2-style
+    bits-per-value comparisons.
+    """
+    idx_bytes = encode_indices(indices)
+    val_bytes = VALUE_ENCODERS[value_codec](values)
+    raw = (len(idx_bytes).to_bytes(4, "little") + idx_bytes + val_bytes)
+    payload, used = entropy_wrap(raw, entropy)
+    info = dict(idx_bits=index_stream_bits(indices),
+                val_bits=VALUE_BIT_COUNTERS[value_codec](values),
+                raw_nbytes=len(raw), nbytes=len(payload),
+                entropy=used, value_codec=value_codec)
+    return payload, info
+
+
+def decode_series_payload(payload: bytes, n_kept: int, entropy: str,
+                          value_codec: str = "gorilla"):
+    """Inverse of :func:`encode_series_payload` -> (indices, values)."""
+    raw = entropy_unwrap(payload, entropy)
+    idx_len = int.from_bytes(raw[:4], "little")
+    idx = decode_indices(raw[4:4 + idx_len], n_kept)
+    vals = VALUE_DECODERS[value_codec](raw[4 + idx_len:], n_kept)
+    return idx, vals
+
+
+def compression_ratio_bytes(res, *, value_codec: str = "gorilla",
+                            entropy: str = "auto") -> float:
+    """Byte-true CR: raw float64 bytes over encoded-payload bytes.
+
+    The point-count CR (``core.cameo.compression_ratio``) divides *counts*;
+    this divides *bytes*, with the kept set actually materialized through
+    the index + value codecs (entropy-wrapped).  ``res`` is a
+    ``CompressResult`` (or anything with ``.kept`` / ``.xr``).
+    """
+    from repro.core.cameo import kept_points  # cameo does not import store
+    idx, vals = kept_points(res)
+    n = int(res.kept.shape[0])
+    payload, _ = encode_series_payload(idx, vals, value_codec=value_codec,
+                                       entropy=entropy)
+    return (8.0 * n) / max(len(payload), 1)

@@ -1,0 +1,337 @@
+"""CameoStore — the on-disk physical layer under the compressor.
+
+File layout (append-oriented: blocks stream to disk as series are ingested,
+the index is a footer written on ``close``)::
+
+    magic "CAMEOST\\x01"
+    [u32 body_len][block body + crc32] ...      (blocks, any series order)
+    footer JSON (zlib)                           (series catalog)
+    [u64 footer_offset][u32 footer_len][magic]
+
+A crashed writer leaves a file without a footer; ``CameoStore.open`` refuses
+it loudly rather than serving a partial catalog.  Reopening with
+``mode="a"`` truncates the footer and keeps appending — restart-safe ingest
+for the serving layer.
+
+The reader serves random-access **window decodes** that touch only the
+blocks overlapping the window (block borders are kept points, so no
+interpolation segment crosses a block — see ``store/blocks.py``), plus
+header-only block metadata for ``store/query.py``'s pushdown aggregates.
+
+Roundtrip contract (tested property-style): for any compressed series,
+``read_kept`` reproduces the kept mask and kept values bit-exactly, and
+``read_series``/``read_window`` reproduce the canonical reconstruction —
+the one-shot interpolation of the kept points — **bit-exactly**.  For the
+rounds mode that canonical form *is* ``CompressResult.xr``; see
+``append_series`` for the sequential mode's last-ulp caveat.  The store is
+a lossless physical encoding of the compressor's lossy output.
+"""
+from __future__ import annotations
+
+import json
+import os
+import struct
+import zlib
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.store import codec as _codec
+from repro.store.blocks import (
+    BlockMeta,
+    build_block,
+    parse_block,
+    plan_block_bounds,
+    reconstruct_block,
+)
+
+MAGIC = b"CAMEOST\x01"
+_TAIL = struct.Struct("<QI")          # footer offset, footer byte length
+
+
+class CameoStore:
+    """One store file: append-oriented writer + random-access reader.
+
+    Use :meth:`create` (new file), :meth:`open` (finalized file, read-only)
+    or ``open(path, mode="a")`` (resume appending).  A store created in this
+    process serves reads immediately from its in-memory catalog; a reopened
+    store loads the catalog from the footer.
+    """
+
+    def __init__(self, path: str, mode: str, *, block_len: int = 4096,
+                 value_codec: str = "gorilla", entropy: str = "auto"):
+        if value_codec not in _codec.VALUE_CODECS:
+            raise ValueError(f"unknown value codec {value_codec!r}")
+        self.path = path
+        self.block_len = int(block_len)
+        self.value_codec = value_codec
+        self.entropy = entropy
+        self._series: Dict[str, dict] = {}   # sid -> catalog entry
+        self._cache: Dict[tuple, tuple] = {}  # (sid, bi) -> (meta, idx, vals)
+        self._metas: Dict[tuple, "BlockMeta"] = {}  # header-only cache
+        self._writable = mode in ("w", "a")
+        if mode == "w":
+            self._f = open(path, "w+b")
+            self._f.write(MAGIC)
+        elif mode in ("r", "a"):
+            self._f = open(path, "r+b" if mode == "a" else "rb")
+            self._load_footer()
+            if mode == "a":
+                self._f.seek(self._footer_offset)
+                self._f.truncate()
+        else:
+            raise ValueError(f"unknown mode {mode!r}")
+
+    # -- constructors -------------------------------------------------------
+
+    @classmethod
+    def create(cls, path: str, *, block_len: int = 4096,
+               value_codec: str = "gorilla",
+               entropy: str = "auto") -> "CameoStore":
+        return cls(path, "w", block_len=block_len, value_codec=value_codec,
+                   entropy=entropy)
+
+    @classmethod
+    def open(cls, path: str, mode: str = "r") -> "CameoStore":
+        return cls(path, mode)
+
+    # -- context / lifecycle ------------------------------------------------
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+    def close(self):
+        if self._f.closed:
+            return
+        if self._writable:
+            self._write_footer()
+        self._f.close()
+
+    def _write_footer(self):
+        off = self._f.seek(0, os.SEEK_END)
+        footer = zlib.compress(json.dumps(
+            {"block_len": self.block_len, "value_codec": self.value_codec,
+             "entropy": self.entropy, "series": self._series},
+            default=float).encode())
+        self._f.write(footer)
+        self._f.write(_TAIL.pack(off, len(footer)))
+        self._f.write(MAGIC)
+        self._f.flush()
+        self._footer_offset = off
+
+    def _load_footer(self):
+        f = self._f
+        if f.read(len(MAGIC)) != MAGIC:
+            raise IOError(f"{self.path}: not a CameoStore file")
+        end = f.seek(0, os.SEEK_END)
+        tail_len = _TAIL.size + len(MAGIC)
+        if end < len(MAGIC) + tail_len:
+            raise IOError(f"{self.path}: truncated store (no footer)")
+        f.seek(end - tail_len)
+        tail = f.read(tail_len)
+        if tail[-len(MAGIC):] != MAGIC:
+            raise IOError(f"{self.path}: missing footer magic — the writer "
+                          "crashed before close(); reingest or salvage "
+                          "blocks manually")
+        off, flen = _TAIL.unpack(tail[:_TAIL.size])
+        f.seek(off)
+        meta = json.loads(zlib.decompress(f.read(flen)).decode())
+        self.block_len = int(meta.get("block_len", self.block_len))
+        self.value_codec = meta.get("value_codec", self.value_codec)
+        self.entropy = meta.get("entropy", self.entropy)
+        self._series = meta["series"]
+        self._footer_offset = off
+
+    # -- ingest -------------------------------------------------------------
+
+    def append_series(self, sid: str, res, cfg, x=None) -> dict:
+        """Write one compressed series.
+
+        ``res`` is a ``CompressResult`` (anything with ``.kept`` / ``.xr``
+        works), ``cfg`` the ``CameoConfig`` it was produced under, and ``x``
+        optionally the *original* series — when given, per-block residual
+        moments are stored and pushdown value aggregates carry deterministic
+        error bounds **vs the original** (otherwise vs the reconstruction).
+        Returns the catalog entry (byte sizes, per-block extents).
+
+        The stored reconstruction is the *canonical* one-shot interpolation
+        of the kept points (the paper's §4.1 decompression), computed here
+        per block so the write-time metadata is self-consistent with every
+        future decode.  For the rounds mode this is bit-identical to
+        ``res.xr``; the sequential mode's ``xr`` is accumulated incrementally
+        during compression, so its dead positions can differ from the
+        canonical interpolation in the last ulp — kept points are bit-exact
+        either way.
+        """
+        if not self._writable:
+            raise IOError("store opened read-only")
+        if sid in self._series:
+            raise ValueError(f"series {sid!r} already stored")
+        kept = np.asarray(res.kept)
+        xr = np.asarray(res.xr)
+        n = int(kept.shape[0])
+        kept_idx = np.nonzero(kept)[0].astype(np.int64)
+        x64 = None if x is None else np.asarray(x, np.float64)[:n]
+        bounds = plan_block_bounds(kept_idx, self.block_len, cfg.lags)
+
+        blocks: List[dict] = []
+        nbytes = payload_nbytes = 0
+        for bi in range(len(bounds) - 1):
+            t0, t1 = bounds[bi], bounds[bi + 1]
+            is_last = bi == len(bounds) - 2
+            o1 = t1 + 1 if is_last else t1
+            sel = (kept_idx >= t0) & (kept_idx <= t1)
+            bidx, bvals = kept_idx[sel], xr[kept_idx[sel]]
+            owned_xr = reconstruct_block(
+                bidx - t0, bvals, t1 - t0 + 1, str(xr.dtype))[:o1 - t0]
+            body, pbytes = build_block(
+                bidx, bvals, t0=t0, t1=t1,
+                is_last=is_last, owned_xr=owned_xr,
+                L=cfg.lags, kappa=cfg.kappa, stat=cfg.stat, eps=cfg.eps,
+                resid=None if x64 is None else x64[t0:o1] - owned_xr,
+                value_codec=self.value_codec, entropy=self.entropy)
+            off = self._f.seek(0, os.SEEK_END)
+            self._f.write(struct.pack("<I", len(body)))
+            self._f.write(body)
+            nbytes += 4 + len(body)
+            payload_nbytes += pbytes
+            blocks.append(dict(offset=off, nbytes=len(body), t0=t0, t1=t1))
+        self._f.flush()
+        entry = dict(
+            n=n, n_kept=int(kept_idx.shape[0]), dtype=str(xr.dtype),
+            eps=float(cfg.eps), stat=cfg.stat, lags=int(cfg.lags),
+            kappa=int(cfg.kappa), deviation=float(res.deviation),
+            value_codec=self.value_codec, stored_nbytes=nbytes,
+            payload_nbytes=payload_nbytes,
+            has_resid=x64 is not None, blocks=blocks)
+        self._series[sid] = entry
+        return entry
+
+    # -- catalog ------------------------------------------------------------
+
+    def series_ids(self) -> List[str]:
+        return list(self._series)
+
+    def series_meta(self, sid: str) -> dict:
+        return self._series[sid]
+
+    def __contains__(self, sid: str) -> bool:
+        return sid in self._series
+
+    # -- block access -------------------------------------------------------
+
+    def _read_body(self, blk: dict) -> bytes:
+        self._f.seek(blk["offset"])
+        blen, = struct.unpack("<I", self._f.read(4))
+        return self._f.read(blen)
+
+    def block_meta(self, sid: str, bi: int) -> BlockMeta:
+        """Header metadata of one block (no bitstream decode) — cached, so
+        repeated pushdown queries never re-read interior blocks."""
+        key = (sid, bi)
+        meta = self._metas.get(key)
+        if meta is None:
+            blk = self._series[sid]["blocks"][bi]
+            meta, _, _ = parse_block(self._read_body(blk),
+                                     with_payload=False)
+            self._metas[key] = meta
+        return meta
+
+    def block_metas(self, sid: str) -> List[BlockMeta]:
+        """Header-only metadata of every block of a series."""
+        return [self.block_meta(sid, bi)
+                for bi in range(len(self._series[sid]["blocks"]))]
+
+    def _block(self, sid: str, bi: int):
+        """Decoded block (meta, global kept indices, values) — cached."""
+        key = (sid, bi)
+        hit = self._cache.get(key)
+        if hit is not None:
+            return hit
+        blk = self._series[sid]["blocks"][bi]
+        meta, idx, vals = parse_block(self._read_body(blk))
+        if len(self._cache) >= 128:
+            self._cache.pop(next(iter(self._cache)))
+        self._cache[key] = (meta, idx, vals)
+        self._metas[key] = meta
+        return meta, idx, vals
+
+    def _overlapping(self, sid: str, a: int, b: int):
+        """Indices of blocks whose *owned* range intersects [a, b)."""
+        entry = self._series[sid]
+        out = []
+        for bi, blk in enumerate(entry["blocks"]):
+            is_last = bi == len(entry["blocks"]) - 1
+            o1 = blk["t1"] + 1 if is_last else blk["t1"]
+            if blk["t0"] < b and o1 > a:
+                out.append(bi)
+        return out
+
+    # -- reads --------------------------------------------------------------
+
+    def read_kept(self, sid: str):
+        """(indices, values) of the stored kept points, whole series."""
+        idx_parts, val_parts = [], []
+        nb = len(self._series[sid]["blocks"])
+        for bi in range(nb):
+            meta, idx, vals = self._block(sid, bi)
+            if bi < nb - 1:          # shared border point belongs to next
+                idx, vals = idx[:-1], vals[:-1]
+            idx_parts.append(idx)
+            val_parts.append(vals)
+        dtype = np.dtype(self._series[sid]["dtype"])
+        return (np.concatenate(idx_parts),
+                np.concatenate(val_parts).astype(dtype))
+
+    def kept_mask(self, sid: str) -> np.ndarray:
+        mask = np.zeros(self._series[sid]["n"], bool)
+        mask[self.read_kept(sid)[0]] = True
+        return mask
+
+    def read_window(self, sid: str, a: int, b: int) -> np.ndarray:
+        """Reconstruction slice ``xr[a:b]``, decoding only the blocks whose
+        range overlaps the window.  Bit-exact vs the full reconstruction."""
+        entry = self._series[sid]
+        n = entry["n"]
+        a, b = max(int(a), 0), min(int(b), n)
+        dtype = np.dtype(entry["dtype"])
+        if b <= a:
+            return np.empty(0, dtype)
+        out = np.empty(b - a, dtype)
+        for bi in self._overlapping(sid, a, b):
+            meta, idx, vals = self._block(sid, bi)
+            xr_b = reconstruct_block(idx - meta.t0, vals, meta.span,
+                                     str(dtype))
+            lo, hi = max(a, meta.o0), min(b, meta.o1)
+            out[lo - a:hi - a] = xr_b[lo - meta.t0:hi - meta.t0]
+        return out
+
+    def read_series(self, sid: str) -> np.ndarray:
+        """Whole-series reconstruction (bit-exact vs ``CompressResult.xr``)."""
+        return self.read_window(sid, 0, self._series[sid]["n"])
+
+    # -- accounting ---------------------------------------------------------
+
+    def compression_stats(self, sid: str) -> dict:
+        """Point-count CR vs byte-true CRs for one stored series.
+
+        ``bytes_cr`` divides by the physical file bytes (codec payloads +
+        block headers with their ``[5, L]`` pushdown metadata — for large
+        ``L`` on short series the metadata dominates, which is the price of
+        metadata-only aggregate queries); ``codec_cr`` divides by the codec
+        payloads alone (the Table-2-comparable number).
+        """
+        e = self._series[sid]
+        raw_nbytes = 8 * e["n"]
+        payload = e.get("payload_nbytes", e["stored_nbytes"])
+        return dict(
+            n=e["n"], n_kept=e["n_kept"],
+            point_cr=e["n"] / max(e["n_kept"], 1),
+            stored_nbytes=e["stored_nbytes"],
+            payload_nbytes=payload,
+            bytes_cr=raw_nbytes / max(e["stored_nbytes"], 1),
+            codec_cr=raw_nbytes / max(payload, 1),
+            raw_nbytes=raw_nbytes)

@@ -8,7 +8,10 @@ from repro.baselines.constrain import acf_constrained_search, acf_deviation
 from repro.baselines.functional import (pmc_compress, simpiece_compress,
                                         swing_compress)
 from repro.baselines.line_simpl import LINE_SIMPL_BASELINES, compress_baseline
-from repro.baselines.lossless import chimp_bits_per_value, gorilla_bits_per_value
+from repro.baselines.lossless import (chimp_bits_per_value,
+                                      chimp_bits_per_value_loop,
+                                      gorilla_bits_per_value,
+                                      gorilla_bits_per_value_loop)
 from repro.baselines.transform import fft_compress
 from repro.core.cameo import CameoConfig
 
@@ -85,3 +88,16 @@ def test_lossless_bits_per_value():
     const = np.ones(1000)
     assert gorilla_bits_per_value(const) < 2.0
     assert chimp_bits_per_value(const) < 3.0
+
+
+def test_lossless_vectorized_matches_loop_forms():
+    """The vectorized Table 2 fast paths (shared with store/codec.py) must
+    agree bit-for-bit with the literal per-value loop oracles."""
+    rng = np.random.default_rng(11)
+    for x in [rng.standard_normal(3000),          # random
+              np.full(2000, -3.5),                # constant
+              _series(seed=12),                   # seasonal + noise
+              rng.integers(0, 2**64, 1000,
+                           dtype=np.uint64).view(np.float64)]:
+        assert gorilla_bits_per_value(x) == gorilla_bits_per_value_loop(x)
+        assert chimp_bits_per_value(x) == chimp_bits_per_value_loop(x)

@@ -1,0 +1,297 @@
+"""CameoStore: codecs round-trip bit-exactly, block reads equal full-decode
+slices, and pushdown aggregates honor their reported deterministic bounds."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from conftest import hypothesis_or_stubs
+from repro.baselines.lossless import (chimp_bits_per_value,
+                                      chimp_bits_per_value_loop,
+                                      gorilla_bits_per_value,
+                                      gorilla_bits_per_value_loop)
+from repro.core.acf import acf
+from repro.core.cameo import CameoConfig, compress
+from repro.store import codec
+from repro.store import query as squery
+from repro.store.blocks import parse_block, plan_block_bounds
+from repro.store.store import CameoStore
+
+given, settings, st = hypothesis_or_stubs()
+
+
+def _series(n=2048, seed=1, offset=0.0):
+    rng = np.random.default_rng(seed)
+    t = np.arange(n)
+    return (3 * np.sin(2 * np.pi * t / 24) + np.sin(2 * np.pi * t / 168)
+            + 0.2 * rng.standard_normal(n) + offset)
+
+
+CFG = CameoConfig(eps=2e-2, lags=16, mode="rounds", max_rounds=80,
+                  dtype="float64")
+
+
+@pytest.fixture(scope="module")
+def stored(tmp_path_factory):
+    """One compressed series written with residual metadata + its truth."""
+    x = _series(4096, seed=3, offset=5.0)
+    res = compress(jnp.asarray(x), CFG)
+    path = str(tmp_path_factory.mktemp("store") / "s.cameo")
+    with CameoStore.create(path, block_len=512) as w:
+        w.append_series("s", res, CFG, x=x)
+    return CameoStore.open(path), x, np.asarray(res.xr), np.asarray(res.kept)
+
+
+# ---------------------------------------------------------------------------
+# bitstream codecs
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("vcodec", sorted(codec.VALUE_CODECS))
+def test_value_codec_roundtrip_bit_exact(vcodec):
+    rng = np.random.default_rng(0)
+    for x in [rng.standard_normal(777),
+              np.ones(500),
+              np.repeat(rng.standard_normal(40), 25),
+              rng.integers(0, 2**64, 300, dtype=np.uint64).view(np.float64),
+              np.array([1.5]),
+              np.array([0.0, -0.0, np.inf, -np.inf, np.nan, 5e-324])]:
+        enc = codec.VALUE_ENCODERS[vcodec](x)
+        dec = codec.VALUE_DECODERS[vcodec](enc, len(x))
+        assert np.array_equal(
+            np.asarray(x, np.float64).view(np.uint64), dec.view(np.uint64))
+        # counted bits == emitted bits (exact-size parity)
+        assert len(enc) == (codec.VALUE_BIT_COUNTERS[vcodec](x) + 7) // 8
+
+
+def test_index_codec_roundtrip():
+    rng = np.random.default_rng(1)
+    for _ in range(25):
+        n = int(rng.integers(1, 800))
+        idx = np.sort(rng.choice(50000, size=n, replace=False)).astype(
+            np.int64)
+        enc = codec.encode_indices(idx)
+        assert np.array_equal(codec.decode_indices(enc, n), idx)
+        assert len(enc) == (codec.index_stream_bits(idx) + 7) // 8
+    # unit-stride runs cost ~1 bit per index
+    run = np.arange(4096, dtype=np.int64)
+    assert codec.index_stream_bits(run) <= 32 + 4096 + 16
+
+
+def test_lossless_counter_parity_vs_loop_forms():
+    """The satellite contract: the vectorized Table 2 fast paths match the
+    literal per-value loop oracles bit-for-bit."""
+    rng = np.random.default_rng(2)
+    for x in [rng.standard_normal(4000),            # random
+              np.full(3000, 7.25),                  # constant
+              np.cumsum(rng.standard_normal(2000)) * 1e-3,
+              rng.integers(0, 2**64, 1500, dtype=np.uint64).view(np.float64)]:
+        assert gorilla_bits_per_value(x) == gorilla_bits_per_value_loop(x)
+        assert chimp_bits_per_value(x) == chimp_bits_per_value_loop(x)
+
+
+@given(st.lists(st.floats(allow_nan=True, allow_infinity=True,
+                          width=64), min_size=1, max_size=300))
+@settings(max_examples=40, deadline=None)
+def test_gorilla_roundtrip_property(vals):
+    x = np.asarray(vals, np.float64)
+    dec = codec.gorilla_decode(codec.gorilla_encode(x), len(x))
+    assert np.array_equal(x.view(np.uint64), dec.view(np.uint64))
+    assert gorilla_bits_per_value(x) == gorilla_bits_per_value_loop(x)
+
+
+@given(st.lists(st.floats(allow_nan=True, allow_infinity=True,
+                          width=64), min_size=1, max_size=300))
+@settings(max_examples=40, deadline=None)
+def test_chimp_roundtrip_property(vals):
+    x = np.asarray(vals, np.float64)
+    dec = codec.chimp_decode(codec.chimp_encode(x), len(x))
+    assert np.array_equal(x.view(np.uint64), dec.view(np.uint64))
+    assert chimp_bits_per_value(x) == chimp_bits_per_value_loop(x)
+
+
+def test_entropy_wrap_roundtrip_and_fallback():
+    raw = bytes(range(256)) * 20
+    for req in ("auto", "zlib", "none"):
+        payload, used = codec.entropy_wrap(raw, req)
+        assert codec.entropy_unwrap(payload, used) == raw
+    # incompressible input keeps the raw stream
+    noise = np.random.default_rng(0).integers(
+        0, 256, 4096, dtype=np.uint8).tobytes()
+    _, used = codec.entropy_wrap(noise, "auto")
+    assert used == "none"
+
+
+# ---------------------------------------------------------------------------
+# block store round trip
+# ---------------------------------------------------------------------------
+
+def test_store_roundtrip_bit_exact(stored):
+    store, x, xr, kept = stored
+    assert np.array_equal(store.kept_mask("s"), kept)
+    got = store.read_series("s")
+    assert np.array_equal(got.view(np.uint64), xr.view(np.uint64))
+    ki, kv = store.read_kept("s")
+    assert np.array_equal(ki, np.nonzero(kept)[0])
+    assert np.array_equal(kv, xr[ki])
+
+
+def test_store_window_reads_equal_full_decode_slices(stored):
+    store, x, xr, kept = stored
+    rng = np.random.default_rng(4)
+    n = len(x)
+    for _ in range(40):
+        a = int(rng.integers(0, n))
+        b = int(rng.integers(a, n + 1))
+        assert np.array_equal(store.read_window("s", a, b), xr[a:b])
+    # borders and degenerate windows
+    metas = store.block_metas("s")
+    for m in metas:
+        assert np.array_equal(store.read_window("s", m.t0, m.t1 + 1),
+                              xr[m.t0:m.t1 + 1])
+    assert store.read_window("s", 5, 5).shape == (0,)
+
+
+def test_block_headers_carry_contract(stored):
+    store, x, xr, kept = stored
+    kept_idx = np.nonzero(kept)[0]
+    for m in store.block_metas("s"):
+        assert kept[m.t0] and kept[m.t1], "borders must be kept points"
+        assert m.eps == CFG.eps and m.stat == CFG.stat
+        assert m.L == CFG.lags and m.kappa == CFG.kappa
+        sel = (kept_idx >= m.t0) & (kept_idx <= m.t1)
+        assert m.n_kept == int(sel.sum())
+        # five Eq. 7 sufficient statistics of the owned slice
+        v = xr[m.o0:m.o1]
+        ref = np.asarray(
+            [[v[:len(v) - l].sum() for l in range(1, m.L + 1)],
+             [v[l:].sum() for l in range(1, m.L + 1)],
+             [(v[:len(v) - l] ** 2).sum() for l in range(1, m.L + 1)],
+             [(v[l:] ** 2).sum() for l in range(1, m.L + 1)],
+             [np.dot(v[:len(v) - l], v[l:]) for l in range(1, m.L + 1)]])
+        np.testing.assert_allclose(m.agg, ref, rtol=1e-12, atol=1e-9)
+
+
+def test_block_crc_detects_corruption(stored, tmp_path):
+    store, *_ = stored
+    blk = store.series_meta("s")["blocks"][0]
+    body = bytearray(store._read_body(blk))
+    body[len(body) // 2] ^= 0xFF
+    with pytest.raises(IOError, match="crc"):
+        parse_block(bytes(body))
+
+
+def test_plan_block_bounds_merges_short_tail():
+    kept = np.array([0, 10, 300, 520, 530, 540, 1000, 1005], np.int64)
+    bounds = plan_block_bounds(kept, block_len=500, L=16)
+    assert bounds[0] == 0 and bounds[-1] == 1005
+    assert all(b in kept for b in bounds)
+    spans = np.diff(bounds)
+    assert (spans >= 16).all()
+
+
+def test_store_float32_series(tmp_path):
+    cfg32 = CameoConfig(eps=2e-2, lags=8, mode="rounds", max_rounds=40,
+                        dtype="float32")
+    x = _series(1024, seed=7)
+    res = compress(jnp.asarray(x), cfg32)
+    path = str(tmp_path / "f32.cameo")
+    with CameoStore.create(path, block_len=256) as w:
+        w.append_series("s", res, cfg32)
+    r = CameoStore.open(path)
+    got = r.read_series("s")
+    xr = np.asarray(res.xr)
+    assert got.dtype == np.float32
+    assert np.array_equal(got.view(np.uint32), xr.view(np.uint32))
+
+
+@given(st.integers(0, 2**32 - 1), st.floats(1e-3, 5e-2),
+       st.sampled_from([256, 512, 1024]))
+@settings(max_examples=8, deadline=None)
+def test_store_roundtrip_property(seed, eps, block_len):
+    """Property form of the acceptance criterion: for arbitrary series and
+    budgets, read(write(compress(x))) reproduces mask + reconstruction."""
+    x = _series(1536, seed=seed % 1000)
+    cfg = CameoConfig(eps=float(eps), lags=12, mode="rounds", max_rounds=60,
+                      dtype="float64")
+    res = compress(jnp.asarray(x), cfg)
+    import tempfile
+    with tempfile.TemporaryDirectory() as tmpdir:
+        path = f"{tmpdir}/s.cameo"
+        with CameoStore.create(path, block_len=block_len) as w:
+            w.append_series("s", res, cfg, x=x)
+        r = CameoStore.open(path)
+        assert np.array_equal(r.kept_mask("s"), np.asarray(res.kept))
+        xr = np.asarray(res.xr)
+        assert np.array_equal(
+            r.read_series("s").view(np.uint64), xr.view(np.uint64))
+        a, b = 137, 137 + 700
+        assert np.array_equal(r.read_window("s", a, b), xr[a:b])
+
+
+# ---------------------------------------------------------------------------
+# pushdown aggregates: answers inside their deterministic bounds
+# ---------------------------------------------------------------------------
+
+def test_pushdown_value_aggregates_bound_original(stored):
+    store, x, xr, kept = stored
+    rng = np.random.default_rng(5)
+    n = len(x)
+    for _ in range(60):
+        a = int(rng.integers(0, n - 40))
+        b = int(rng.integers(a + 30, n + 1))
+        s, bs = squery.window_sum(store, "s", a, b)
+        assert abs(s - x[a:b].sum()) <= bs
+        m, bm = squery.window_mean(store, "s", a, b)
+        assert abs(m - x[a:b].mean()) <= bm
+        v, bv = squery.window_var(store, "s", a, b)
+        assert abs(v - x[a:b].var()) <= bv
+
+
+def test_pushdown_block_aligned_is_metadata_only(stored):
+    store, x, xr, kept = stored
+    metas = store.block_metas("s")
+    a, b = metas[1].o0, metas[-2].o1
+    segs = squery._segments(store, "s", a, b)
+    assert all(kind == "meta" for kind, *_ in segs), \
+        "aligned windows must not decode payloads"
+    s, bs = squery.window_sum(store, "s", a, b)
+    assert abs(s - x[a:b].sum()) <= bs
+
+
+def test_pushdown_acf_matches_reconstruction_within_bound(stored):
+    store, x, xr, kept = stored
+    rng = np.random.default_rng(6)
+    n = len(x)
+    for _ in range(12):
+        a = int(rng.integers(0, n - 400))
+        b = int(rng.integers(a + 300, n + 1))
+        val, bound = squery.window_acf(store, "s", a, b)
+        ref = np.asarray(acf(jnp.asarray(xr[a:b]), CFG.lags))
+        assert np.all(np.abs(val - ref) <= bound)
+    # full-series pushdown ACF agrees with the compressor's own stat
+    val, bound = squery.window_acf(store, "s", 0, n)
+    ref = np.asarray(acf(jnp.asarray(xr), CFG.lags))
+    assert np.all(np.abs(val - ref) <= bound)
+
+
+def test_pushdown_query_dispatch_and_validation(stored):
+    store, x, xr, kept = stored
+    v, b = squery.query(store, "s", "mean")
+    assert abs(v - x.mean()) <= b
+    with pytest.raises(ValueError, match="unknown aggregate"):
+        squery.query(store, "s", "median")
+    with pytest.raises(ValueError, match="outside"):
+        squery.window_sum(store, "s", -3, 10)
+    with pytest.raises(ValueError, match="too short"):
+        squery.window_acf(store, "s", 0, CFG.lags)
+
+
+def test_byte_true_compression_ratio(stored):
+    store, x, xr, kept = stored
+    stats = store.compression_stats("s")
+    assert stats["bytes_cr"] > 1.0, "stored bytes must beat raw float64"
+    assert stats["point_cr"] >= stats["bytes_cr"], \
+        "byte CR includes index+header overhead, can't beat point CR here"
+    res_like = type("R", (), {"kept": jnp.asarray(kept),
+                              "xr": jnp.asarray(xr)})()
+    cr_b = codec.compression_ratio_bytes(res_like)
+    assert 1.0 < cr_b

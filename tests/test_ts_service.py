@@ -1,0 +1,92 @@
+"""TimeSeriesService: batched ingest equals per-series compression
+bit-for-bit, queries serve flushed series immediately, restart resumes."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core.cameo import CameoConfig, compress
+from repro.serving.ts_service import TimeSeriesService, TsServiceConfig
+from repro.store.store import CameoStore
+
+CFG = CameoConfig(eps=2e-2, lags=12, mode="rounds", max_rounds=60,
+                  dtype="float64")
+
+
+def _fleet(lengths, seed=0):
+    rng = np.random.default_rng(seed)
+    out = {}
+    for i, n in enumerate(lengths):
+        t = np.arange(n)
+        out[f"s{i}"] = (np.sin(2 * np.pi * t / 24 + i)
+                        + 0.1 * rng.standard_normal(n))
+    return out
+
+
+def test_service_ingest_query_roundtrip(tmp_path):
+    path = str(tmp_path / "svc.cameo")
+    fleet = _fleet([512] * 5 + [1024] * 2)
+    scfg = TsServiceConfig(max_batch=4, block_len=128)
+    with TimeSeriesService(path, CFG, scfg) as svc:
+        for sid, x in fleet.items():
+            svc.submit(sid, x)
+        # the 512-group auto-flushed at max_batch; queries work mid-stream
+        stats = svc.stats()
+        assert stats["ingested"] == 4 and stats["pending"] == 3
+        ref = np.asarray(compress(jnp.asarray(fleet["s0"]), CFG).xr)
+        assert np.array_equal(svc.query_window("s0", 40, 200), ref[40:200])
+        v, b = svc.query_aggregate("s1", "mean", 10, 400)
+        assert abs(v - fleet["s1"][10:400].mean()) <= b
+        with pytest.raises(ValueError, match="already submitted"):
+            svc.submit("s0", fleet["s0"])
+
+    # after close: every series stored, batched results == single-series
+    store = CameoStore.open(path)
+    assert sorted(store.series_ids()) == sorted(fleet)
+    for sid, x in fleet.items():
+        ref = np.asarray(compress(jnp.asarray(x), CFG).xr)
+        got = store.read_series(sid)
+        assert np.array_equal(got.view(np.uint64), ref.view(np.uint64)), sid
+    final = [store.compression_stats(s) for s in store.series_ids()]
+    assert all(f["bytes_cr"] > 1.0 for f in final)
+
+
+def test_service_resume_appends(tmp_path):
+    path = str(tmp_path / "svc.cameo")
+    fleet = _fleet([512] * 3, seed=1)
+    with TimeSeriesService(path, CFG, TsServiceConfig(block_len=128)) as svc:
+        for sid, x in list(fleet.items())[:2]:
+            svc.submit(sid, x)
+    with TimeSeriesService(path, CFG, TsServiceConfig(block_len=128),
+                           resume=True) as svc:
+        assert sorted(svc.series_ids()) == ["s0", "s1"]
+        svc.submit("s2", fleet["s2"])
+    store = CameoStore.open(path)
+    assert sorted(store.series_ids()) == ["s0", "s1", "s2"]
+    ref = np.asarray(compress(jnp.asarray(fleet["s2"]), CFG).xr)
+    assert np.array_equal(store.read_series("s2"), ref)
+
+
+def test_service_sequential_mode_fallback(tmp_path):
+    cfg = CameoConfig(eps=2e-2, lags=8, mode="sequential", hops=8,
+                      window=32, dtype="float64")
+    path = str(tmp_path / "seq.cameo")
+    fleet = _fleet([400] * 2, seed=2)
+    with TimeSeriesService(path, cfg, TsServiceConfig(block_len=100)) as svc:
+        for sid, x in fleet.items():
+            svc.submit(sid, x)
+    store = CameoStore.open(path)
+    for sid, x in fleet.items():
+        res = compress(jnp.asarray(x), cfg)
+        ref = np.asarray(res.xr)
+        kept = np.asarray(res.kept)
+        got = store.read_series(sid)
+        # sequential mode accumulates xr incrementally; the store serves the
+        # canonical one-shot interpolation: kept points bit-exact, dead
+        # positions agree to the last ulp
+        assert np.array_equal(store.kept_mask(sid), kept)
+        assert np.array_equal(got[kept], ref[kept])
+        np.testing.assert_allclose(got, ref, rtol=0, atol=1e-12)
+        # and the served window IS the canonical decompression
+        idx = np.nonzero(kept)[0]
+        assert np.array_equal(got, store.read_window(sid, 0, len(x)))
+        assert got.shape == ref.shape and idx[0] == 0
