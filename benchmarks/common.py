@@ -40,6 +40,25 @@ def timed(fn, *args, repeats: int = 1, **kw):
     return out, (time.perf_counter() - t0) / repeats
 
 
+def best_of(fn, *args, reps: int = 3):
+    """(result, best seconds over ``reps`` calls) — for sub-ms paths where
+    a single sample is noise-dominated.  No jax blocking: use only on
+    numpy/stdlib code paths."""
+    best = float("inf")
+    out = None
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        best = min(best, time.perf_counter() - t0)
+    return out, best
+
+
+def geomean(vals):
+    """Geometric mean of the positive entries (0.0 when none)."""
+    vals = [v for v in vals if v > 0]
+    return float(np.exp(np.mean(np.log(vals)))) if vals else 0.0
+
+
 def timed_once(fn, *args, **kw):
     t0 = time.perf_counter()
     out = fn(*args, **kw)

@@ -62,12 +62,19 @@ def main():
     path = os.path.join(tempfile.gettempdir(), f"{args.dataset}.cameo")
     with CameoStore.create(path) as store:
         store.append_series(args.dataset, res, cfg, x=x)
-    store = CameoStore.open(path)
+    # cache_bytes budgets the decoded-block LRU: repeated window/pushdown
+    # queries over hot blocks skip pread + bitstream decode + interpolation
+    # (0 disables; default 64 MiB).  The decoders themselves are the
+    # vectorized control-scan + bulk-gather paths — see the decode
+    # throughput table from `python -m benchmarks.run --only store`
+    # (committed summary: BENCH_store.json at the repo root).
+    store = CameoStore.open(path, cache_bytes=32 << 20)
     stats = store.compression_stats(args.dataset)
     print(f"store: {stats['stored_nbytes']} bytes on disk -> "
           f"byte-true CR={stats['bytes_cr']:.1f}x "
           f"(codec-only {stats['codec_cr']:.1f}x vs "
-          f"point-count {stats['point_cr']:.1f}x)")
+          f"point-count {stats['point_cr']:.1f}x); header metadata "
+          f"{stats['meta_nbytes']}B (raw {stats['meta_raw_nbytes']}B)")
 
     a, b = n // 4, 3 * n // 4
     got = store.read_window(args.dataset, a, b)
@@ -79,6 +86,10 @@ def main():
     true_mean = float(np.mean(x[a:b]))
     print(f"  pushdown mean over the window: {mean_pd:.6f} "
           f"+/- {bound:.2e} (true {true_mean:.6f}; no full decode)")
+    store.read_window(args.dataset, a, b)    # hot: served from the LRU
+    cs = store.cache_stats()
+    print(f"  decoded-block cache: {cs['hits']} hits / {cs['misses']} "
+          f"misses, {cs['nbytes']} bytes of {cs['budget']} budget")
     os.remove(path)
 
 

@@ -17,6 +17,11 @@ automatically when ``max_batch`` series of one length are waiting;
 Per-series results are bit-identical to ``compress(x, cfg)`` run alone
 (see ``compress_batch``'s no-op-round guarantee), so storing through the
 service changes nothing about the roundtrip contract.
+
+Reads ride the store's decoded-block LRU (``TsServiceConfig.cache_bytes``):
+repeated window decodes and pushdown edge-block decodes over hot blocks
+skip bitstream decode entirely; ``stats()["cache"]`` surfaces the
+hit/miss/eviction counters for capacity planning.
 """
 from __future__ import annotations
 
@@ -38,6 +43,7 @@ class TsServiceConfig:
     value_codec: str = "gorilla"
     entropy: str = "auto"
     store_residuals: bool = True  # keep Plato-style bound metadata
+    cache_bytes: int = 64 << 20   # decoded-block LRU budget (0 disables)
 
 
 class TimeSeriesService:
@@ -50,7 +56,8 @@ class TimeSeriesService:
         self.scfg = scfg or TsServiceConfig()
         self.store = CameoStore(
             path, "a" if resume else "w", block_len=self.scfg.block_len,
-            value_codec=self.scfg.value_codec, entropy=self.scfg.entropy)
+            value_codec=self.scfg.value_codec, entropy=self.scfg.entropy,
+            cache_bytes=self.scfg.cache_bytes)
         # pending ingest, grouped by length (compress_batch wants [B, n])
         self._pending: Dict[int, List[Tuple[str, np.ndarray]]] = {}
         self._ingested = 0
@@ -137,4 +144,5 @@ class TimeSeriesService:
             batches=self._rounds,
             points=pts, stored_nbytes=stored,
             point_cr=pts / max(kept, 1),
-            bytes_cr=raw / max(stored, 1))
+            bytes_cr=raw / max(stored, 1),
+            cache=self.store.cache_stats())

@@ -2,15 +2,20 @@
 
 * ``store.codec``  — byte-true bitstream codecs (delta-of-delta kept-index
   packing, Gorilla/Chimp XOR value streams, optional zstd/zlib wrap) and
-  the byte-true ``compression_ratio_bytes``.
+  the byte-true ``compression_ratio_bytes``.  Both directions are
+  vectorized (bulk bit packing / control-scan + bulk gather, see
+  ``store._scan``); the ``*_loop`` forms are the parity oracles.
 * ``store.blocks`` — chunked block format; borders pinned on kept points;
   headers carry (n, n_kept, eps, stat, kappa, L) + the five Eq. 7 ACF
-  sufficient statistics and pushdown metadata.
+  sufficient statistics and pushdown metadata, compacted losslessly with
+  xor-delta + byte-plane shuffle coding.
 * ``store.store``  — append-oriented writer / random-access reader
-  (``CameoStore``); window decodes touch only overlapping blocks and are
-  bit-exact vs the compressor's reconstruction.
+  (``CameoStore``); window decodes touch only overlapping blocks (misses
+  fetched with coalesced preads), are bit-exact vs the compressor's
+  reconstruction, and ride a byte-budgeted decoded-block LRU
+  (``cache_bytes``).
 * ``store.query``  — Plato-style pushdown aggregates (sum/mean/var/ACF)
-  with deterministic error bounds.
+  with deterministic error bounds; edge-block decodes hit the same LRU.
 
 Exports resolve lazily (PEP 562): ``store.codec`` is plain numpy + stdlib
 and must stay importable without dragging in jax — ``baselines/lossless.py``

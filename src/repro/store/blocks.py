@@ -20,6 +20,16 @@ Every block header carries the compression contract (``n``, ``n_kept``,
   (``sum e``, ``sum e^2``, ``sum xr*e``, ``max |e|``) — the Plato-style
   deterministic error-bound inputs.
 
+The ``[5, L]`` aggregate matrix and the two edge vectors are stored
+**compacted**: a lossless xor-delta over the float64 bit patterns followed
+by a byte-plane shuffle (the blosc/Sprintz filter idea) and the shared
+entropy wrap.  Neighboring aggregate entries share exponent and high
+mantissa bytes, so the deltas are mostly-zero byte planes that zlib/zstd
+collapse — min_temp-style ``L=365`` headers stop dominating their
+payloads.  The roundtrip is bit-exact (uint64 xor + ``np.bitwise_xor.
+accumulate``), so the deterministic pushdown bounds in ``store/query.py``
+are untouched; ``parse_block`` returns byte-identical metadata either way.
+
 Ownership is half-open: block ``i`` owns ``[t0, t1)`` (the shared right
 border belongs to the next block) except the last block, which owns its end
 point too.  Owned spans are kept ``>= L`` (tail blocks merge into their
@@ -56,9 +66,9 @@ _FLAG_LAST = 1
 _FLAG_RESID = 2
 
 # fixed header: t0 t1 n_kept | L kappa hv_len tv_len | stat vcodec entropy
-# flags | eps vmin vmax vsum vsumsq r1 r2 rx emax | idx_bits val_bits
-# raw_nbytes payload_nbytes
-_HDR = struct.Struct("<QQI HHHH BBBB 9d QQII")
+# flags meta_codec | eps vmin vmax vsum vsumsq r1 r2 rx emax | idx_bits
+# val_bits raw_nbytes payload_nbytes meta_nbytes
+_HDR = struct.Struct("<QQI HHHH BBBBB 9d QQIII")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -135,6 +145,35 @@ def plan_block_bounds(kept_idx: np.ndarray, block_len: int, L: int):
     return bounds
 
 
+def pack_meta_vectors(flat: np.ndarray, entropy: str = "auto"):
+    """Losslessly compact float64 metadata vectors -> (payload, codec).
+
+    xor-delta over the uint64 bit patterns (smooth aggregate vectors leave
+    mostly-zero high bytes), then a byte-plane shuffle (all 1st bytes, all
+    2nd bytes, ...) so the zero runs are contiguous for the entropy wrap.
+    Bit-exact for every IEEE value incl. NaN payloads and infinities.
+    """
+    u = np.ascontiguousarray(np.asarray(flat, np.float64)).view(np.uint64)
+    if u.shape[0] == 0:
+        return b"", "none"
+    d = np.empty_like(u)
+    d[0] = u[0]
+    d[1:] = u[1:] ^ u[:-1]
+    planes = np.ascontiguousarray(d.view(np.uint8).reshape(-1, 8).T)
+    return _codec.entropy_wrap(planes.tobytes(), entropy)
+
+
+def unpack_meta_vectors(payload: bytes, count: int,
+                        codec: str) -> np.ndarray:
+    """Bit-exact inverse of :func:`pack_meta_vectors` -> float64 [count]."""
+    if count == 0:
+        return np.empty(0, np.float64)
+    raw = _codec.entropy_unwrap(payload, codec)
+    d = np.ascontiguousarray(
+        np.frombuffer(raw, np.uint8).reshape(8, count).T).view(np.uint64)
+    return np.bitwise_xor.accumulate(d.ravel()).view(np.float64)
+
+
 def _slice_aggregates(v: np.ndarray, L: int) -> np.ndarray:
     """Eq. 7 sufficient statistics of a value slice, numpy form, [5, L]."""
     v = np.asarray(v, np.float64)
@@ -162,16 +201,17 @@ def build_block(kept_idx, kept_vals, *, t0: int, t1: int, is_last: bool,
                 owned_xr: np.ndarray, L: int, kappa: int, stat: str,
                 eps: float, resid: Optional[np.ndarray] = None,
                 value_codec: str = "gorilla", entropy: str = "auto"):
-    """Encode one block -> ``(body, payload_nbytes)``.
+    """Encode one block -> ``(body, info)``.
 
     ``kept_idx``/``kept_vals`` are the kept points in ``[t0, t1]`` (global
     indices, both borders included); ``owned_xr`` is the reconstruction over
     the owned range and ``resid`` the residual ``x - xr`` over the same
-    range when the original was available.  ``payload_nbytes`` is the
-    codec-only stream size (the header with its ``[5, L]`` aggregate
-    metadata is accounted separately — for large ``L`` on short blocks the
-    metadata can dominate, and the two CR flavors should stay tellable
-    apart)."""
+    range when the original was available.  ``info`` carries
+    ``payload_nbytes`` (the codec-only stream size), ``meta_nbytes`` (the
+    compacted aggregate/edge metadata) and ``meta_raw_nbytes`` (what the
+    metadata would cost uncompacted) — header metadata is accounted
+    separately from the payload because for large ``L`` on short blocks it
+    can dominate, and the two CR flavors should stay tellable apart."""
     kept_idx = np.asarray(kept_idx, np.int64)
     kept_vals = np.asarray(kept_vals, np.float64)
     owned_xr = np.asarray(owned_xr, np.float64)
@@ -193,18 +233,25 @@ def build_block(kept_idx, kept_vals, *, t0: int, t1: int, is_last: bool,
     else:
         r1 = r2 = rx = emax = 0.0
 
+    meta_flat = np.concatenate([agg.ravel(), hv, tv])
+    meta_payload, meta_codec = pack_meta_vectors(meta_flat, entropy)
+
     header = _HDR.pack(
         t0, t1, int(kept_idx.shape[0]),
         L, kappa, hv.shape[0], tv.shape[0],
         STAT_CODES[stat], _VCODEC_CODES[value_codec],
         _ENTROPY_CODES[pinfo["entropy"]], flags,
+        _ENTROPY_CODES[meta_codec],
         float(eps), float(owned_xr.min()), float(owned_xr.max()),
         float(owned_xr.sum()), float(np.dot(owned_xr, owned_xr)),
         r1, r2, rx, emax,
         pinfo["idx_bits"], pinfo["val_bits"],
-        pinfo["raw_nbytes"], pinfo["nbytes"])
-    body = header + agg.tobytes() + hv.tobytes() + tv.tobytes() + payload
-    return body + struct.pack("<I", zlib.crc32(body)), len(payload)
+        pinfo["raw_nbytes"], pinfo["nbytes"], len(meta_payload))
+    body = header + meta_payload + payload
+    info = dict(payload_nbytes=len(payload),
+                meta_nbytes=len(meta_payload),
+                meta_raw_nbytes=int(meta_flat.nbytes))
+    return body + struct.pack("<I", zlib.crc32(body)), info
 
 
 def parse_block(body: bytes, *, with_payload: bool = True):
@@ -218,16 +265,17 @@ def parse_block(body: bytes, *, with_payload: bool = True):
     if zlib.crc32(body) != crc_stored:
         raise IOError("block corrupt: crc mismatch")
     (t0, t1, n_kept, L, kappa, hv_len, tv_len, stat_c, vcodec_c, ent_c,
-     flags, eps, vmin, vmax, vsum, vsumsq, r1, r2, rx, emax,
-     idx_bits, val_bits, raw_nbytes, payload_nbytes) = _HDR.unpack(
-        body[:_HDR.size])
+     flags, meta_c, eps, vmin, vmax, vsum, vsumsq, r1, r2, rx, emax,
+     idx_bits, val_bits, raw_nbytes, payload_nbytes,
+     meta_nbytes) = _HDR.unpack(body[:_HDR.size])
     off = _HDR.size
-    agg = np.frombuffer(body, np.float64, 5 * L, off).reshape(5, L).copy()
-    off += 5 * L * 8
-    hv = np.frombuffer(body, np.float64, hv_len, off).copy()
-    off += hv_len * 8
-    tv = np.frombuffer(body, np.float64, tv_len, off).copy()
-    off += tv_len * 8
+    meta_count = 5 * L + hv_len + tv_len
+    meta_flat = unpack_meta_vectors(body[off:off + meta_nbytes], meta_count,
+                                    _ENTROPY_NAMES[meta_c])
+    off += meta_nbytes
+    agg = meta_flat[:5 * L].reshape(5, L)
+    hv = meta_flat[5 * L:5 * L + hv_len]
+    tv = meta_flat[5 * L + hv_len:]
     meta = BlockMeta(
         t0=t0, t1=t1, n_kept=n_kept, L=L, kappa=kappa,
         stat=STAT_NAMES[stat_c], eps=eps,

@@ -14,6 +14,23 @@ streams a stored CAMEO series consists of:
   counters and the emitters, so counted bits == emitted bits exactly, by
   construction (and by test).
 
+Both directions are numpy-vectorized (Sprintz's lesson: bit-packed
+time-series codecs only pay off when decode is, PAPERS.md):
+
+* **encode** — the branch plan yields one (value, width) field pair per
+  record; :func:`_pack_fields` packs all fields in bulk (ragged bit
+  scatter + ``np.packbits``).
+* **decode** — a single cheap control-stream scan (a few integer ops per
+  non-zero record; runs of zero-control records are consumed in bulk)
+  recovers each record's branch case and payload bit offset, then
+  :func:`_gather_fields` extracts every payload field in one shot and the
+  value chains close with ``np.bitwise_xor.accumulate`` (XOR codecs) /
+  second-order ``np.cumsum`` (delta-of-delta indices).
+
+The original one-record-at-a-time forms are kept as ``*_loop`` parity
+oracles: they pin the published encodings in their most literal shape, and
+the property tests hold the vectorized paths bit-identical to them.
+
 Both streams can be wrapped in an optional entropy stage (zstd when the
 ``zstandard`` module is present, stdlib zlib otherwise — the same fallback
 discipline as ``checkpoint/manager.py``); the wrap is only kept when it
@@ -45,7 +62,7 @@ _U64_ONE = np.uint64(1)
 
 
 # ---------------------------------------------------------------------------
-# bit-level IO
+# bit-level IO (loop forms; the vectorized paths use _pack/_gather_fields)
 # ---------------------------------------------------------------------------
 
 class BitWriter:
@@ -104,6 +121,69 @@ class BitReader:
         self._nacc = nacc
         self._pos = pos
         return out
+
+
+# ---------------------------------------------------------------------------
+# bulk bit framing (shared by the vectorized encoders AND decoders)
+# ---------------------------------------------------------------------------
+
+def _pack_fields(values, widths) -> bytes:
+    """Pack bit-fields MSB-first: field ``k`` occupies ``widths[k]`` bits
+    starting at ``sum(widths[:k])`` — the vectorized form of a
+    ``BitWriter.write`` loop (bit-identical output, including the zero-pad
+    of the final partial byte).  Zero-width fields emit nothing; values
+    wider than their field are truncated to the low ``width`` bits, like
+    ``BitWriter.write``'s mask.
+
+    Works in the bit domain with uint8 C kernels only: each value explodes
+    to its 64 MSB-first bits (``np.unpackbits``), a ragged row mask keeps
+    the low ``width`` bits of every row, and the boolean fancy-index
+    concatenates them in stream order for ``np.packbits``.
+    """
+    widths = np.asarray(widths, np.int64)
+    total = int(widths.sum())
+    if total == 0:
+        return b""
+    nz = widths > 0
+    v = np.ascontiguousarray(np.asarray(values, np.uint64)[nz])
+    wd = widths[nz]
+    bits64 = np.unpackbits(v.byteswap().view(np.uint8)).reshape(-1, 64)
+    keep = np.arange(64) >= (64 - wd)[:, None]
+    return np.packbits(bits64[keep]).tobytes()
+
+
+def _gather_fields(data: bytes, starts, widths) -> np.ndarray:
+    """Extract bit-fields from an MSB-first stream: field ``k`` is
+    ``widths[k]`` bits at absolute bit offset ``starts[k]`` — the
+    vectorized form of a ``BitReader.read`` loop.  Returns uint64 values
+    (0 where ``width == 0``).
+
+    Each field spans at most 9 bytes (64 bits + 7 bits of misalignment),
+    so one ``[k, 9]`` byte-window gather + a big-endian view + two shifts
+    recover every field at once.
+    """
+    widths = np.asarray(widths, np.int64)
+    out = np.zeros(widths.shape[0], np.uint64)
+    nz = widths > 0
+    wd = widths[nz]
+    if wd.shape[0] == 0:
+        return out
+    pos = np.asarray(starts, np.int64)[nz]
+    d = np.frombuffer(data, np.uint8)
+    d = np.concatenate([d, np.zeros(9, np.uint8)])
+    r = (pos & 7).astype(np.uint64)
+    win = d[(pos >> 3)[:, None] + np.arange(9)]
+    w64 = np.ascontiguousarray(win[:, :8]).view(">u8")[:, 0].astype(np.uint64)
+    b8 = win[:, 8].astype(np.uint64)
+    aligned = (w64 << r) | (b8 >> (np.uint64(8) - r))   # bits [pos, pos+64)
+    out[nz] = aligned >> (np.uint64(64) - wd.astype(np.uint64))
+    return out
+
+
+# The sequential control-stream scans (the only non-bulk part of decode)
+# live in store/_scan.py: native C via ctypes when a compiler is around,
+# pure-Python 24-bit-window fallback otherwise — identical packed output.
+from repro.store import _scan
 
 
 # ---------------------------------------------------------------------------
@@ -196,7 +276,66 @@ def gorilla_stream_bits(x) -> int:
 
 
 def gorilla_encode(x) -> bytes:
-    """Gorilla XOR value stream for a float64 series (lossless)."""
+    """Gorilla XOR value stream for a float64 series (lossless).
+
+    Vectorized: the branch plan maps each record to one header field and
+    one payload field; :func:`_pack_fields` packs the whole stream in bulk.
+    Byte-identical to :func:`gorilla_encode_loop`.
+    """
+    x = np.asarray(x, np.float64)
+    n = x.shape[0]
+    if n == 0:
+        return b""
+    bits, xor, lz, tz = xor_parts(x)
+    case, sig, shift = _gorilla_plan(xor, lz, tz)
+    m = xor.shape[0]
+    li = 64 - sig - shift                 # the capped LZ, for case-2 headers
+    hdr_val = np.where(case == 0, 0,
+                       np.where(case == 1, 0b10,
+                                (0b11 << 11) | (li << 6) | (sig & 0x3F)))
+    hdr_w = np.where(case == 0, 1, np.where(case == 1, 2, 13))
+    pay_val = xor >> np.minimum(shift, 63).astype(np.uint64)
+    pay_w = np.where(case == 0, 0, sig)
+    vals = np.empty(1 + 2 * m, np.uint64)
+    wids = np.empty(1 + 2 * m, np.int64)
+    vals[0], wids[0] = bits[0], 64
+    vals[1::2], wids[1::2] = hdr_val, hdr_w
+    vals[2::2], wids[2::2] = pay_val, pay_w
+    return _pack_fields(vals, wids)
+
+
+def gorilla_decode(data: bytes, n: int) -> np.ndarray:
+    """Inverse of :func:`gorilla_encode`; returns float64 [n].
+
+    Vectorized: one control-stream scan recovers each record's payload bit
+    offset/width (runs of '0' control bits — zero xors — are consumed in
+    bulk straight off the 24-bit windows), payloads are gathered in one
+    :func:`_gather_fields` call, and the XOR chain closes with
+    ``np.bitwise_xor.accumulate``.  Bit-true inverse, property-tested
+    against :func:`gorilla_decode_loop`.
+    """
+    if n == 0:
+        return np.empty(0, np.uint64).view(np.float64)
+    a = _scan.gorilla_scan(data, n - 1)
+    stream = np.zeros(n, np.uint64)
+    stream[0] = int.from_bytes(data[:8], "big")   # MSB-first head field
+    if a.shape[0]:
+        ri = a >> 15
+        sig = (a >> 7) & 0x7F
+        hdr_w = np.where(a & 0x4000, 13, 2)
+        body = hdr_w + sig
+        # payload offsets: 64 head bits + 1 bit per preceding zero-xor
+        # record + every preceding non-zero record's header + payload
+        pos = (64 + (ri - np.arange(ri.shape[0]))
+               + np.cumsum(body) - body + hdr_w)
+        xors = _gather_fields(data, pos, sig)
+        stream[ri + 1] = xors << (a & 0x3F).astype(np.uint64)
+    return np.bitwise_xor.accumulate(stream).view(np.float64)
+
+
+def gorilla_encode_loop(x) -> bytes:
+    """Parity oracle: :func:`gorilla_encode` as the literal per-record
+    ``BitWriter`` loop the published scheme describes."""
     x = np.asarray(x, np.float64)
     n = x.shape[0]
     w = BitWriter()
@@ -220,8 +359,9 @@ def gorilla_encode(x) -> bytes:
     return w.getvalue()
 
 
-def gorilla_decode(data: bytes, n: int) -> np.ndarray:
-    """Inverse of :func:`gorilla_encode`; returns float64 [n]."""
+def gorilla_decode_loop(data: bytes, n: int) -> np.ndarray:
+    """Parity oracle: :func:`gorilla_decode` as the literal per-record
+    ``BitReader`` loop."""
     out = np.empty(n, np.uint64)
     if n == 0:
         return out.view(np.float64)
@@ -287,7 +427,65 @@ def chimp_stream_bits(x) -> int:
 
 
 def chimp_encode(x) -> bytes:
-    """Chimp XOR value stream for a float64 series (lossless)."""
+    """Chimp XOR value stream for a float64 series (lossless).
+
+    Vectorized bulk packing; byte-identical to :func:`chimp_encode_loop`.
+    """
+    x = np.asarray(x, np.float64)
+    n = x.shape[0]
+    if n == 0:
+        return b""
+    bits, xor, lz, tz = xor_parts(x)
+    case, lzb, bi = _chimp_plan(xor, lz, tz)
+    m = xor.shape[0]
+    center = np.maximum(64 - lzb - tz, 0)
+    hdr_val = np.select(
+        [case == 0, case == 1, case == 2],
+        [0, (0b01 << 9) | (bi << 6) | (center & 0x3F), 0b10],
+        default=(0b11 << 3) | bi)
+    hdr_w = np.select([case == 0, case == 1, case == 2], [2, 11, 2],
+                      default=5)
+    pay_val = np.where(case == 1,
+                       xor >> np.minimum(tz, 63).astype(np.uint64), xor)
+    pay_w = np.select([case == 0, case == 1], [0, center],
+                      default=64 - lzb)
+    vals = np.empty(1 + 2 * m, np.uint64)
+    wids = np.empty(1 + 2 * m, np.int64)
+    vals[0], wids[0] = bits[0], 64
+    vals[1::2], wids[1::2] = hdr_val, hdr_w
+    vals[2::2], wids[2::2] = pay_val, pay_w
+    return _pack_fields(vals, wids)
+
+
+def chimp_decode(data: bytes, n: int) -> np.ndarray:
+    """Inverse of :func:`chimp_encode`; returns float64 [n].
+
+    Vectorized control-scan + bulk gather + ``np.bitwise_xor.accumulate``,
+    like :func:`gorilla_decode` ('00' zero-xor runs consumed in bulk).
+    Bit-true inverse, property-tested against :func:`chimp_decode_loop`.
+    """
+    if n == 0:
+        return np.empty(0, np.uint64).view(np.float64)
+    a = _scan.chimp_scan(data, n - 1)
+    stream = np.zeros(n, np.uint64)
+    stream[0] = int.from_bytes(data[:8], "big")   # MSB-first head field
+    if a.shape[0]:
+        ri = a >> 15
+        width = (a >> 6) & 0x7F
+        hdr_w = np.array([0, 11, 2, 5])[(a >> 13) & 3]
+        body = hdr_w + width
+        # payload offsets: 64 head bits + 2 bits per preceding zero-xor
+        # record + every preceding non-zero record's header + payload
+        pos = (64 + 2 * (ri - np.arange(ri.shape[0]))
+               + np.cumsum(body) - body + hdr_w)
+        xors = _gather_fields(data, pos, width)
+        stream[ri + 1] = xors << (a & 0x3F).astype(np.uint64)
+    return np.bitwise_xor.accumulate(stream).view(np.float64)
+
+
+def chimp_encode_loop(x) -> bytes:
+    """Parity oracle: :func:`chimp_encode` as the literal per-record
+    ``BitWriter`` loop."""
     x = np.asarray(x, np.float64)
     n = x.shape[0]
     w = BitWriter()
@@ -317,8 +515,9 @@ def chimp_encode(x) -> bytes:
     return w.getvalue()
 
 
-def chimp_decode(data: bytes, n: int) -> np.ndarray:
-    """Inverse of :func:`chimp_encode`; returns float64 [n]."""
+def chimp_decode_loop(data: bytes, n: int) -> np.ndarray:
+    """Parity oracle: :func:`chimp_decode` as the literal per-record
+    ``BitReader`` loop."""
     out = np.empty(n, np.uint64)
     if n == 0:
         return out.view(np.float64)
@@ -350,6 +549,10 @@ def chimp_decode(data: bytes, n: int) -> np.ndarray:
 
 VALUE_ENCODERS = {"gorilla": gorilla_encode, "chimp": chimp_encode}
 VALUE_DECODERS = {"gorilla": gorilla_decode, "chimp": chimp_decode}
+VALUE_ENCODERS_LOOP = {"gorilla": gorilla_encode_loop,
+                       "chimp": chimp_encode_loop}
+VALUE_DECODERS_LOOP = {"gorilla": gorilla_decode_loop,
+                       "chimp": chimp_decode_loop}
 VALUE_BIT_COUNTERS = {"gorilla": gorilla_stream_bits,
                       "chimp": chimp_stream_bits}
 
@@ -366,6 +569,7 @@ _DOD_BUCKETS = (
     (0b1110, 4, 12, -2047),  # dod in [-2047, 2048]
 )
 _DOD_WIDE_CTRL, _DOD_WIDE_CTRLW, _DOD_WIDE_BITS = 0b1111, 4, 32
+_DOD_LOS = np.array([lo for *_, lo in _DOD_BUCKETS] + [0], np.int64)
 
 
 def _dod_terms(idx: np.ndarray):
@@ -399,8 +603,81 @@ def encode_indices(idx) -> bytes:
     The first index is stored in 32 raw bits; the first delta is coded as a
     dod against an implicit previous delta of 1 (the unit-stride prior —
     CAMEO kept sets at moderate CR are long runs of consecutive indices,
-    which cost one bit per point here).
+    which cost one bit per point here).  Vectorized bulk packing;
+    byte-identical to :func:`encode_indices_loop`.
     """
+    idx = np.asarray(idx, np.int64)
+    if idx.shape[0] == 0:
+        return b""
+    if not (0 <= idx[0] < (1 << 32)):
+        raise ValueError(f"first index {idx[0]} outside u32 range")
+    dods = _dod_terms(idx)
+    m = dods.shape[0]
+    hdr_val = np.zeros(m, np.int64)
+    hdr_w = np.ones(m, np.int64)
+    pay_val = np.zeros(m, np.int64)
+    pay_w = np.zeros(m, np.int64)
+    left = dods != 0
+    for ctrl, cw, pb, lo in _DOD_BUCKETS:
+        hi = lo + (1 << pb) - 1
+        sel = left & (dods >= lo) & (dods <= hi)
+        hdr_val[sel] = ctrl
+        hdr_w[sel] = cw
+        pay_val[sel] = dods[sel] - lo
+        pay_w[sel] = pb
+        left &= ~sel
+    hdr_val[left] = _DOD_WIDE_CTRL
+    hdr_w[left] = _DOD_WIDE_CTRLW
+    pay_val[left] = dods[left] & 0xFFFFFFFF
+    pay_w[left] = _DOD_WIDE_BITS
+    vals = np.empty(1 + 2 * m, np.uint64)
+    wids = np.empty(1 + 2 * m, np.int64)
+    vals[0], wids[0] = int(idx[0]), 32
+    vals[1::2], wids[1::2] = hdr_val, hdr_w
+    vals[2::2], wids[2::2] = pay_val, pay_w
+    return _pack_fields(vals, wids)
+
+
+def decode_indices(data: bytes, count: int) -> np.ndarray:
+    """Inverse of :func:`encode_indices`; returns int64 [count].
+
+    Vectorized control-scan (runs of '0' — repeated deltas — consumed in
+    bulk) + one payload gather; the index chain closes with second-order
+    ``np.cumsum`` (dod -> delta -> index).  Bit-true inverse,
+    property-tested against :func:`decode_indices_loop`.
+    """
+    if count == 0:
+        return np.empty(0, np.int64)
+    m = count - 1
+    a = _scan.index_scan(data, m)
+    idx0 = int.from_bytes(data[:4], "big")        # MSB-first head field
+    dods = np.zeros(m, np.int64)
+    if a.shape[0]:
+        ri = a >> 2
+        bucket = a & 3
+        hdr_w = np.array([2, 3, 4, 4])[bucket]
+        width = np.array([7, 9, 12, 32])[bucket]
+        body = hdr_w + width
+        # payload offsets: 32 head bits + 1 bit per preceding repeated
+        # delta + every preceding non-zero record's control + payload
+        pos = (32 + (ri - np.arange(ri.shape[0]))
+               + np.cumsum(body) - body + hdr_w)
+        raw = _gather_fields(data, pos, width).astype(np.int64)
+        dod = raw + _DOD_LOS[bucket]
+        wide = bucket == 3
+        dod[wide] = np.where(raw[wide] >= (1 << 31),
+                             raw[wide] - (1 << 32), raw[wide])
+        dods[ri] = dod
+    deltas = np.cumsum(dods) + 1          # delta chain starts at implicit 1
+    out = np.empty(count, np.int64)
+    out[0] = idx0
+    out[1:] = idx0 + np.cumsum(deltas)
+    return out
+
+
+def encode_indices_loop(idx) -> bytes:
+    """Parity oracle: :func:`encode_indices` as the literal per-record
+    ``BitWriter`` loop."""
     idx = np.asarray(idx, np.int64)
     w = BitWriter()
     if idx.shape[0] == 0:
@@ -424,8 +701,9 @@ def encode_indices(idx) -> bytes:
     return w.getvalue()
 
 
-def decode_indices(data: bytes, count: int) -> np.ndarray:
-    """Inverse of :func:`encode_indices`; returns int64 [count]."""
+def decode_indices_loop(data: bytes, count: int) -> np.ndarray:
+    """Parity oracle: :func:`decode_indices` as the literal per-record
+    ``BitReader`` loop."""
     out = np.empty(count, np.int64)
     if count == 0:
         return out

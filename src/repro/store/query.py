@@ -25,6 +25,12 @@ deterministic error bound:
 
 Every bound is computed from stored metadata + deterministic float-slop
 terms — never from comparing against a full decode.
+
+The only decodes this module ever triggers are the window-edge blocks, and
+those ride the store's decoded-block LRU (``CameoStore(cache_bytes=...)``)
+— a repeated window query is answered from cached headers + cached edge
+reconstructions without touching the bitstreams, which is the steady-state
+(warm) pushdown latency the store benchmark reports.
 """
 from __future__ import annotations
 

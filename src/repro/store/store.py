@@ -3,10 +3,14 @@
 File layout (append-oriented: blocks stream to disk as series are ingested,
 the index is a footer written on ``close``)::
 
-    magic "CAMEOST\\x01"
+    magic "CAMEOST\\x02"
     [u32 body_len][block body + crc32] ...      (blocks, any series order)
     footer JSON (zlib)                           (series catalog)
     [u64 footer_offset][u32 footer_len][magic]
+
+Format v2 (this magic) compacts the per-block ``[5, L]`` aggregate and
+edge-vector metadata with the lossless shuffle+delta coder in
+``store/blocks.py``; v1 files are refused loudly — reingest them.
 
 A crashed writer leaves a file without a footer; ``CameoStore.open`` refuses
 it loudly rather than serving a partial catalog.  Reopening with
@@ -18,6 +22,15 @@ blocks overlapping the window (block borders are kept points, so no
 interpolation segment crosses a block — see ``store/blocks.py``), plus
 header-only block metadata for ``store/query.py``'s pushdown aggregates.
 
+Reads are cached through a **byte-budgeted decoded-block LRU**
+(``cache_bytes``; default 64 MiB): a hit skips the pread, the bitstream
+decode *and* — once a window read has touched the block — the jitted
+reconstruction, so hot windows and repeated pushdown queries run at
+memcpy speed.  ``append_series`` invalidates the appended series' entries
+and ``cache_stats()`` reports hits/misses/evictions for the serving layer.
+Cache-miss fetches of multi-block windows coalesce blocks that sit
+contiguously in the file into single preads.
+
 Roundtrip contract (tested property-style): for any compressed series,
 ``read_kept`` reproduces the kept mask and kept values bit-exactly, and
 ``read_series``/``read_window`` reproduce the canonical reconstruction —
@@ -28,11 +41,12 @@ a lossless physical encoding of the compressor's lossy output.
 """
 from __future__ import annotations
 
+import collections
 import json
 import os
 import struct
 import zlib
-from typing import Dict, List, Optional
+from typing import Dict, List
 
 import numpy as np
 
@@ -45,8 +59,74 @@ from repro.store.blocks import (
     reconstruct_block,
 )
 
-MAGIC = b"CAMEOST\x01"
+MAGIC = b"CAMEOST\x02"
 _TAIL = struct.Struct("<QI")          # footer offset, footer byte length
+DEFAULT_CACHE_BYTES = 64 << 20
+
+# cache-entry slots: [meta, kept_idx, kept_vals, xr_or_None, nbytes]
+_E_META, _E_IDX, _E_VALS, _E_XR, _E_NBYTES = range(5)
+
+
+class BlockCache:
+    """Byte-budgeted LRU over decoded blocks.
+
+    Entries hold the decoded kept points and, once a window read has needed
+    it, the block's reconstruction; ``grow`` accounts the late-attached
+    reconstruction bytes.  A zero budget disables caching (every ``put``
+    evicts immediately), which the eviction tests rely on.
+    """
+
+    __slots__ = ("budget", "nbytes", "hits", "misses", "evictions", "_d")
+
+    def __init__(self, budget: int):
+        self.budget = int(budget)
+        self.nbytes = 0
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+        self._d = collections.OrderedDict()
+
+    def get(self, key):
+        e = self._d.get(key)
+        if e is None:
+            self.misses += 1
+            return None
+        self._d.move_to_end(key)
+        self.hits += 1
+        return e
+
+    def put(self, key, entry):
+        old = self._d.pop(key, None)
+        if old is not None:
+            self.nbytes -= old[_E_NBYTES]
+        self._d[key] = entry
+        self.nbytes += entry[_E_NBYTES]
+        self._evict()
+
+    def grow(self, key, extra: int):
+        if key in self._d:
+            self._d[key][_E_NBYTES] += extra
+            self.nbytes += extra
+            self._evict()
+
+    def invalidate(self, sid: str):
+        for key in [k for k in self._d if k[0] == sid]:
+            self.nbytes -= self._d.pop(key)[_E_NBYTES]
+
+    def clear(self):
+        self._d.clear()
+        self.nbytes = 0
+
+    def _evict(self):
+        while self.nbytes > self.budget and self._d:
+            _, e = self._d.popitem(last=False)
+            self.nbytes -= e[_E_NBYTES]
+            self.evictions += 1
+
+    def stats(self) -> dict:
+        return dict(hits=self.hits, misses=self.misses,
+                    evictions=self.evictions, entries=len(self._d),
+                    nbytes=self.nbytes, budget=self.budget)
 
 
 class CameoStore:
@@ -55,11 +135,13 @@ class CameoStore:
     Use :meth:`create` (new file), :meth:`open` (finalized file, read-only)
     or ``open(path, mode="a")`` (resume appending).  A store created in this
     process serves reads immediately from its in-memory catalog; a reopened
-    store loads the catalog from the footer.
+    store loads the catalog from the footer.  ``cache_bytes`` budgets the
+    decoded-block LRU (0 disables caching).
     """
 
     def __init__(self, path: str, mode: str, *, block_len: int = 4096,
-                 value_codec: str = "gorilla", entropy: str = "auto"):
+                 value_codec: str = "gorilla", entropy: str = "auto",
+                 cache_bytes: int = DEFAULT_CACHE_BYTES):
         if value_codec not in _codec.VALUE_CODECS:
             raise ValueError(f"unknown value codec {value_codec!r}")
         self.path = path
@@ -67,7 +149,7 @@ class CameoStore:
         self.value_codec = value_codec
         self.entropy = entropy
         self._series: Dict[str, dict] = {}   # sid -> catalog entry
-        self._cache: Dict[tuple, tuple] = {}  # (sid, bi) -> (meta, idx, vals)
+        self._cache = BlockCache(cache_bytes)  # (sid, bi) -> decoded entry
         self._metas: Dict[tuple, "BlockMeta"] = {}  # header-only cache
         self._writable = mode in ("w", "a")
         if mode == "w":
@@ -86,14 +168,15 @@ class CameoStore:
 
     @classmethod
     def create(cls, path: str, *, block_len: int = 4096,
-               value_codec: str = "gorilla",
-               entropy: str = "auto") -> "CameoStore":
+               value_codec: str = "gorilla", entropy: str = "auto",
+               cache_bytes: int = DEFAULT_CACHE_BYTES) -> "CameoStore":
         return cls(path, "w", block_len=block_len, value_codec=value_codec,
-                   entropy=entropy)
+                   entropy=entropy, cache_bytes=cache_bytes)
 
     @classmethod
-    def open(cls, path: str, mode: str = "r") -> "CameoStore":
-        return cls(path, mode)
+    def open(cls, path: str, mode: str = "r", *,
+             cache_bytes: int = DEFAULT_CACHE_BYTES) -> "CameoStore":
+        return cls(path, mode, cache_bytes=cache_bytes)
 
     # -- context / lifecycle ------------------------------------------------
 
@@ -124,7 +207,12 @@ class CameoStore:
 
     def _load_footer(self):
         f = self._f
-        if f.read(len(MAGIC)) != MAGIC:
+        head = f.read(len(MAGIC))
+        if head != MAGIC:
+            if head[:-1] == MAGIC[:-1]:
+                raise IOError(f"{self.path}: CameoStore format "
+                              f"v{head[-1]} is not v{MAGIC[-1]} — reingest "
+                              "the series into a fresh store")
             raise IOError(f"{self.path}: not a CameoStore file")
         end = f.seek(0, os.SEEK_END)
         tail_len = _TAIL.size + len(MAGIC)
@@ -155,7 +243,8 @@ class CameoStore:
         optionally the *original* series — when given, per-block residual
         moments are stored and pushdown value aggregates carry deterministic
         error bounds **vs the original** (otherwise vs the reconstruction).
-        Returns the catalog entry (byte sizes, per-block extents).
+        Returns the catalog entry (byte sizes, per-block extents).  Any
+        cached decoded blocks for ``sid`` are invalidated.
 
         The stored reconstruction is the *canonical* one-shot interpolation
         of the kept points (the paper's §4.1 decompression), computed here
@@ -178,7 +267,7 @@ class CameoStore:
         bounds = plan_block_bounds(kept_idx, self.block_len, cfg.lags)
 
         blocks: List[dict] = []
-        nbytes = payload_nbytes = 0
+        nbytes = payload_nbytes = meta_nbytes = meta_raw_nbytes = 0
         for bi in range(len(bounds) - 1):
             t0, t1 = bounds[bi], bounds[bi + 1]
             is_last = bi == len(bounds) - 2
@@ -187,7 +276,7 @@ class CameoStore:
             bidx, bvals = kept_idx[sel], xr[kept_idx[sel]]
             owned_xr = reconstruct_block(
                 bidx - t0, bvals, t1 - t0 + 1, str(xr.dtype))[:o1 - t0]
-            body, pbytes = build_block(
+            body, binfo = build_block(
                 bidx, bvals, t0=t0, t1=t1,
                 is_last=is_last, owned_xr=owned_xr,
                 L=cfg.lags, kappa=cfg.kappa, stat=cfg.stat, eps=cfg.eps,
@@ -197,7 +286,9 @@ class CameoStore:
             self._f.write(struct.pack("<I", len(body)))
             self._f.write(body)
             nbytes += 4 + len(body)
-            payload_nbytes += pbytes
+            payload_nbytes += binfo["payload_nbytes"]
+            meta_nbytes += binfo["meta_nbytes"]
+            meta_raw_nbytes += binfo["meta_raw_nbytes"]
             blocks.append(dict(offset=off, nbytes=len(body), t0=t0, t1=t1))
         self._f.flush()
         entry = dict(
@@ -206,8 +297,12 @@ class CameoStore:
             kappa=int(cfg.kappa), deviation=float(res.deviation),
             value_codec=self.value_codec, stored_nbytes=nbytes,
             payload_nbytes=payload_nbytes,
+            meta_nbytes=meta_nbytes, meta_raw_nbytes=meta_raw_nbytes,
             has_resid=x64 is not None, blocks=blocks)
         self._series[sid] = entry
+        self._cache.invalidate(sid)
+        for key in [k for k in self._metas if k[0] == sid]:
+            del self._metas[key]
         return entry
 
     # -- catalog ------------------------------------------------------------
@@ -228,6 +323,28 @@ class CameoStore:
         blen, = struct.unpack("<I", self._f.read(4))
         return self._f.read(blen)
 
+    def _read_bodies(self, blks: List[dict]) -> List[bytes]:
+        """One body per catalog entry; blocks that sit contiguously in the
+        file are fetched with a single seek+read instead of one pread per
+        block (multi-block windows of an uninterleaved series are one IO)."""
+        out: List[bytes] = []
+        i = 0
+        while i < len(blks):
+            j = i
+            end = blks[j]["offset"] + 4 + blks[j]["nbytes"]
+            while j + 1 < len(blks) and blks[j + 1]["offset"] == end:
+                j += 1
+                end = blks[j]["offset"] + 4 + blks[j]["nbytes"]
+            self._f.seek(blks[i]["offset"])
+            buf = self._f.read(end - blks[i]["offset"])
+            pos = 0
+            for _ in range(i, j + 1):
+                blen, = struct.unpack_from("<I", buf, pos)
+                out.append(buf[pos + 4:pos + 4 + blen])
+                pos += 4 + blen
+            i = j + 1
+        return out
+
     def block_meta(self, sid: str, bi: int) -> BlockMeta:
         """Header metadata of one block (no bitstream decode) — cached, so
         repeated pushdown queries never re-read interior blocks."""
@@ -241,23 +358,46 @@ class CameoStore:
         return meta
 
     def block_metas(self, sid: str) -> List[BlockMeta]:
-        """Header-only metadata of every block of a series."""
-        return [self.block_meta(sid, bi)
-                for bi in range(len(self._series[sid]["blocks"]))]
+        """Header-only metadata of every block of a series; uncached
+        headers are fetched with coalesced preads."""
+        blks = self._series[sid]["blocks"]
+        missing = [bi for bi in range(len(blks))
+                   if (sid, bi) not in self._metas]
+        if missing:
+            bodies = self._read_bodies([blks[bi] for bi in missing])
+            for bi, body in zip(missing, bodies):
+                meta, _, _ = parse_block(body, with_payload=False)
+                self._metas[(sid, bi)] = meta
+        return [self._metas[(sid, bi)] for bi in range(len(blks))]
+
+    def _blocks(self, sid: str, bis: List[int]) -> List[list]:
+        """Decoded cache entries for several blocks of one series; misses
+        are fetched with coalesced preads and decoded in file order."""
+        entries = {}
+        misses = []
+        for bi in bis:
+            e = self._cache.get((sid, bi))
+            if e is None:
+                misses.append(bi)
+            else:
+                entries[bi] = e
+        if misses:
+            blks = self._series[sid]["blocks"]
+            bodies = self._read_bodies([blks[bi] for bi in misses])
+            for bi, body in zip(misses, bodies):
+                meta, idx, vals = parse_block(body)
+                e = [meta, idx, vals, None,
+                     idx.nbytes + vals.nbytes + meta.agg.nbytes
+                     + meta.head_vec.nbytes + meta.tail_vec.nbytes + 256]
+                self._cache.put((sid, bi), e)
+                self._metas[(sid, bi)] = meta
+                entries[bi] = e
+        return [entries[bi] for bi in bis]
 
     def _block(self, sid: str, bi: int):
         """Decoded block (meta, global kept indices, values) — cached."""
-        key = (sid, bi)
-        hit = self._cache.get(key)
-        if hit is not None:
-            return hit
-        blk = self._series[sid]["blocks"][bi]
-        meta, idx, vals = parse_block(self._read_body(blk))
-        if len(self._cache) >= 128:
-            self._cache.pop(next(iter(self._cache)))
-        self._cache[key] = (meta, idx, vals)
-        self._metas[key] = meta
-        return meta, idx, vals
+        e = self._blocks(sid, [bi])[0]
+        return e[_E_META], e[_E_IDX], e[_E_VALS]
 
     def _overlapping(self, sid: str, a: int, b: int):
         """Indices of blocks whose *owned* range intersects [a, b)."""
@@ -276,8 +416,8 @@ class CameoStore:
         """(indices, values) of the stored kept points, whole series."""
         idx_parts, val_parts = [], []
         nb = len(self._series[sid]["blocks"])
-        for bi in range(nb):
-            meta, idx, vals = self._block(sid, bi)
+        for bi, e in enumerate(self._blocks(sid, list(range(nb)))):
+            idx, vals = e[_E_IDX], e[_E_VALS]
             if bi < nb - 1:          # shared border point belongs to next
                 idx, vals = idx[:-1], vals[:-1]
             idx_parts.append(idx)
@@ -293,7 +433,9 @@ class CameoStore:
 
     def read_window(self, sid: str, a: int, b: int) -> np.ndarray:
         """Reconstruction slice ``xr[a:b]``, decoding only the blocks whose
-        range overlaps the window.  Bit-exact vs the full reconstruction."""
+        range overlaps the window.  Bit-exact vs the full reconstruction.
+        Per-block reconstructions are attached to the LRU entries, so a hot
+        window skips pread, bitstream decode *and* interpolation."""
         entry = self._series[sid]
         n = entry["n"]
         a, b = max(int(a), 0), min(int(b), n)
@@ -301,10 +443,14 @@ class CameoStore:
         if b <= a:
             return np.empty(0, dtype)
         out = np.empty(b - a, dtype)
-        for bi in self._overlapping(sid, a, b):
-            meta, idx, vals = self._block(sid, bi)
-            xr_b = reconstruct_block(idx - meta.t0, vals, meta.span,
-                                     str(dtype))
+        bis = self._overlapping(sid, a, b)
+        for bi, e in zip(bis, self._blocks(sid, bis)):
+            meta, xr_b = e[_E_META], e[_E_XR]
+            if xr_b is None:
+                xr_b = reconstruct_block(e[_E_IDX] - meta.t0, e[_E_VALS],
+                                         meta.span, str(dtype))
+                e[_E_XR] = xr_b
+                self._cache.grow((sid, bi), xr_b.nbytes)
             lo, hi = max(a, meta.o0), min(b, meta.o1)
             out[lo - a:hi - a] = xr_b[lo - meta.t0:hi - meta.t0]
         return out
@@ -315,14 +461,18 @@ class CameoStore:
 
     # -- accounting ---------------------------------------------------------
 
+    def cache_stats(self) -> dict:
+        """Decoded-block LRU counters (hits/misses/evictions/bytes)."""
+        return self._cache.stats()
+
     def compression_stats(self, sid: str) -> dict:
         """Point-count CR vs byte-true CRs for one stored series.
 
         ``bytes_cr`` divides by the physical file bytes (codec payloads +
-        block headers with their ``[5, L]`` pushdown metadata — for large
-        ``L`` on short series the metadata dominates, which is the price of
-        metadata-only aggregate queries); ``codec_cr`` divides by the codec
-        payloads alone (the Table-2-comparable number).
+        block headers with their compacted ``[5, L]`` pushdown metadata);
+        ``codec_cr`` divides by the codec payloads alone (the
+        Table-2-comparable number).  ``meta_nbytes`` / ``meta_raw_nbytes``
+        expose what the shuffle+delta coding saved on header metadata.
         """
         e = self._series[sid]
         raw_nbytes = 8 * e["n"]
@@ -332,6 +482,8 @@ class CameoStore:
             point_cr=e["n"] / max(e["n_kept"], 1),
             stored_nbytes=e["stored_nbytes"],
             payload_nbytes=payload,
+            meta_nbytes=e.get("meta_nbytes", 0),
+            meta_raw_nbytes=e.get("meta_raw_nbytes", 0),
             bytes_cr=raw_nbytes / max(e["stored_nbytes"], 1),
             codec_cr=raw_nbytes / max(payload, 1),
             raw_nbytes=raw_nbytes)

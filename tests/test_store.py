@@ -11,9 +11,11 @@ from repro.baselines.lossless import (chimp_bits_per_value,
                                       gorilla_bits_per_value_loop)
 from repro.core.acf import acf
 from repro.core.cameo import CameoConfig, compress
-from repro.store import codec
+from repro.store import _scan, codec
 from repro.store import query as squery
-from repro.store.blocks import parse_block, plan_block_bounds
+from repro.store.blocks import (_slice_aggregates, pack_meta_vectors,
+                                parse_block, plan_block_bounds,
+                                unpack_meta_vectors)
 from repro.store.store import CameoStore
 
 given, settings, st = hypothesis_or_stubs()
@@ -45,21 +47,95 @@ def stored(tmp_path_factory):
 # bitstream codecs
 # ---------------------------------------------------------------------------
 
+def _xor_case_corpus():
+    """Value arrays that pin every decoder branch: NaN/inf payloads,
+    repeated values (zero-xor runs), leading/trailing-zero boundaries,
+    window reuse chains, and adversarial raw bit patterns."""
+    rng = np.random.default_rng(0)
+    pow2 = (np.uint64(1) << np.arange(0, 64, 7, dtype=np.uint64))
+    return [rng.standard_normal(777),
+            np.ones(500),
+            np.repeat(rng.standard_normal(40), 25),
+            rng.integers(0, 2**64, 300, dtype=np.uint64).view(np.float64),
+            np.array([1.5]),
+            np.array([0.0, -0.0, np.inf, -np.inf, np.nan, 5e-324]),
+            pow2.view(np.float64),                       # lz/tz boundaries
+            np.concatenate([pow2, pow2 ^ np.uint64(1),   # 63-bit windows
+                            pow2[::-1]]).view(np.float64),
+            np.where(np.arange(600) % 7 < 5, 2.5,        # long zero-xor runs
+                     rng.standard_normal(600)),
+            np.cumsum(rng.standard_normal(400)) * 1e-3]
+
+
 @pytest.mark.parametrize("vcodec", sorted(codec.VALUE_CODECS))
 def test_value_codec_roundtrip_bit_exact(vcodec):
-    rng = np.random.default_rng(0)
-    for x in [rng.standard_normal(777),
-              np.ones(500),
-              np.repeat(rng.standard_normal(40), 25),
-              rng.integers(0, 2**64, 300, dtype=np.uint64).view(np.float64),
-              np.array([1.5]),
-              np.array([0.0, -0.0, np.inf, -np.inf, np.nan, 5e-324])]:
+    for x in _xor_case_corpus():
         enc = codec.VALUE_ENCODERS[vcodec](x)
         dec = codec.VALUE_DECODERS[vcodec](enc, len(x))
         assert np.array_equal(
             np.asarray(x, np.float64).view(np.uint64), dec.view(np.uint64))
         # counted bits == emitted bits (exact-size parity)
         assert len(enc) == (codec.VALUE_BIT_COUNTERS[vcodec](x) + 7) // 8
+
+
+@pytest.mark.parametrize("vcodec", sorted(codec.VALUE_CODECS))
+def test_value_codec_vectorized_matches_loop_oracles(vcodec):
+    """The tentpole contract: bulk-packed encoders emit byte-identical
+    streams and vectorized decoders read byte-identical values vs the
+    per-record loop oracles, across every branch case."""
+    for x in _xor_case_corpus():
+        enc = codec.VALUE_ENCODERS[vcodec](x)
+        assert enc == codec.VALUE_ENCODERS_LOOP[vcodec](x)
+        dec = codec.VALUE_DECODERS[vcodec](enc, len(x))
+        dec_loop = codec.VALUE_DECODERS_LOOP[vcodec](enc, len(x))
+        assert np.array_equal(dec.view(np.uint64), dec_loop.view(np.uint64))
+
+
+def test_scan_backends_agree():
+    """Native (C) and pure-Python control-stream scanners emit identical
+    packed record arrays on every branch case."""
+    if not _scan.NATIVE:
+        pytest.skip("no C compiler: python scanner is the only backend")
+    pairs = [("gorilla", codec.gorilla_encode, _scan.gorilla_scan,
+              _scan._gorilla_scan_py),
+             ("chimp", codec.chimp_encode, _scan.chimp_scan,
+              _scan._chimp_scan_py)]
+    for x in _xor_case_corpus():
+        for name, enc_fn, native, py in pairs:
+            enc = enc_fn(x)
+            assert np.array_equal(native(enc, len(x) - 1),
+                                  py(enc, len(x) - 1)), name
+    for idx in _index_corpus():
+        enc = codec.encode_indices(idx)
+        assert np.array_equal(_scan.index_scan(enc, len(idx) - 1),
+                              _scan._index_scan_py(enc, len(idx) - 1))
+
+
+def _index_corpus():
+    """Kept-index arrays hitting every dod bucket (and their edges)."""
+    rng = np.random.default_rng(3)
+    edge_dods = np.array([0, -63, 64, -255, 256, -2047, 2048, -2048, 2049,
+                          (1 << 20), -(1 << 20), 1, -1, 0, 0], np.int64)
+    edge_deltas = 10**6 + np.cumsum(edge_dods)
+    out = [np.arange(4096, dtype=np.int64),              # unit-stride run
+           np.arange(0, 3000, 3, dtype=np.int64),        # constant stride
+           np.cumsum(np.concatenate([[5], edge_deltas])),
+           np.array([7], np.int64),
+           np.array([0, 1], np.int64)]
+    for _ in range(5):
+        n = int(rng.integers(2, 500))
+        out.append(np.sort(rng.choice(1 << 22, n, replace=False)).astype(
+            np.int64))
+    return out
+
+
+def test_index_codec_vectorized_matches_loop_oracles():
+    for idx in _index_corpus():
+        enc = codec.encode_indices(idx)
+        assert enc == codec.encode_indices_loop(idx)
+        assert np.array_equal(codec.decode_indices(enc, len(idx)), idx)
+        assert np.array_equal(codec.decode_indices_loop(enc, len(idx)), idx)
+        assert len(enc) == (codec.index_stream_bits(idx) + 7) // 8
 
 
 def test_index_codec_roundtrip():
@@ -93,8 +169,13 @@ def test_lossless_counter_parity_vs_loop_forms():
 @settings(max_examples=40, deadline=None)
 def test_gorilla_roundtrip_property(vals):
     x = np.asarray(vals, np.float64)
-    dec = codec.gorilla_decode(codec.gorilla_encode(x), len(x))
+    enc = codec.gorilla_encode(x)
+    assert enc == codec.gorilla_encode_loop(x)
+    dec = codec.gorilla_decode(enc, len(x))
     assert np.array_equal(x.view(np.uint64), dec.view(np.uint64))
+    assert np.array_equal(
+        codec.gorilla_decode_loop(enc, len(x)).view(np.uint64),
+        dec.view(np.uint64))
     assert gorilla_bits_per_value(x) == gorilla_bits_per_value_loop(x)
 
 
@@ -103,9 +184,25 @@ def test_gorilla_roundtrip_property(vals):
 @settings(max_examples=40, deadline=None)
 def test_chimp_roundtrip_property(vals):
     x = np.asarray(vals, np.float64)
-    dec = codec.chimp_decode(codec.chimp_encode(x), len(x))
+    enc = codec.chimp_encode(x)
+    assert enc == codec.chimp_encode_loop(x)
+    dec = codec.chimp_decode(enc, len(x))
     assert np.array_equal(x.view(np.uint64), dec.view(np.uint64))
+    assert np.array_equal(
+        codec.chimp_decode_loop(enc, len(x)).view(np.uint64),
+        dec.view(np.uint64))
     assert chimp_bits_per_value(x) == chimp_bits_per_value_loop(x)
+
+
+@given(st.lists(st.integers(0, (1 << 22) - 1), min_size=1, max_size=300,
+                unique=True))
+@settings(max_examples=40, deadline=None)
+def test_index_roundtrip_property(vals):
+    idx = np.sort(np.asarray(vals, np.int64))
+    enc = codec.encode_indices(idx)
+    assert enc == codec.encode_indices_loop(idx)
+    assert np.array_equal(codec.decode_indices(enc, len(idx)), idx)
+    assert np.array_equal(codec.decode_indices_loop(enc, len(idx)), idx)
 
 
 def test_entropy_wrap_roundtrip_and_fallback():
@@ -118,6 +215,27 @@ def test_entropy_wrap_roundtrip_and_fallback():
         0, 256, 4096, dtype=np.uint8).tobytes()
     _, used = codec.entropy_wrap(noise, "auto")
     assert used == "none"
+
+
+def test_pack_meta_vectors_roundtrip_bit_exact():
+    rng = np.random.default_rng(8)
+    cases = [np.cumsum(rng.standard_normal(365)) * 100,
+             np.zeros(40),
+             np.array([np.nan, np.inf, -np.inf, -0.0, 5e-324, 1e300]),
+             rng.integers(0, 2**64, 200,
+                          dtype=np.uint64).view(np.float64),
+             np.empty(0)]
+    for flat in cases:
+        for entropy in ("auto", "zlib", "none"):
+            payload, used = pack_meta_vectors(flat, entropy)
+            got = unpack_meta_vectors(payload, flat.shape[0], used)
+            assert np.array_equal(
+                np.asarray(flat, np.float64).view(np.uint64),
+                got.view(np.uint64))
+    # smooth aggregate-style vectors must actually shrink
+    smooth = np.cumsum(np.full(365, 3.25))
+    payload, used = pack_meta_vectors(smooth)
+    assert used != "none" and len(payload) < smooth.nbytes
 
 
 # ---------------------------------------------------------------------------
@@ -168,6 +286,11 @@ def test_block_headers_carry_contract(stored):
              [(v[l:] ** 2).sum() for l in range(1, m.L + 1)],
              [np.dot(v[:len(v) - l], v[l:]) for l in range(1, m.L + 1)]])
         np.testing.assert_allclose(m.agg, ref, rtol=1e-12, atol=1e-9)
+        # the shuffle+delta header coding is lossless: the parsed aggregates
+        # are bit-identical to what the writer computed (rounds mode, where
+        # the stored reconstruction IS res.xr)
+        assert np.array_equal(m.agg.view(np.uint64),
+                              _slice_aggregates(v, m.L).view(np.uint64))
 
 
 def test_block_crc_detects_corruption(stored, tmp_path):
@@ -225,6 +348,66 @@ def test_store_roundtrip_property(seed, eps, block_len):
             r.read_series("s").view(np.uint64), xr.view(np.uint64))
         a, b = 137, 137 + 700
         assert np.array_equal(r.read_window("s", a, b), xr[a:b])
+
+
+# ---------------------------------------------------------------------------
+# decoded-block LRU cache
+# ---------------------------------------------------------------------------
+
+def test_cache_hits_on_repeated_reads(stored):
+    store, x, xr, kept = stored
+    r = CameoStore.open(store.path)
+    n = len(x)
+    r.read_window("s", 100, n // 2)
+    s0 = r.cache_stats()
+    assert s0["misses"] > 0
+    got = r.read_window("s", 100, n // 2)
+    s1 = r.cache_stats()
+    assert s1["hits"] > s0["hits"] and s1["misses"] == s0["misses"]
+    assert np.array_equal(got, xr[100:n // 2])
+
+
+def test_cache_budget_eviction(stored):
+    store, x, xr, kept = stored
+    budget = 8192
+    r = CameoStore.open(store.path, cache_bytes=budget)
+    got = r.read_series("s")
+    stats = r.cache_stats()
+    assert stats["evictions"] > 0
+    assert stats["nbytes"] <= budget
+    assert np.array_equal(got.view(np.uint64), xr.view(np.uint64))
+    # zero budget disables caching entirely; reads stay bit-exact
+    r0 = CameoStore.open(store.path, cache_bytes=0)
+    got0 = r0.read_series("s")
+    assert r0.cache_stats()["entries"] == 0
+    assert np.array_equal(got0.view(np.uint64), xr.view(np.uint64))
+
+
+def test_cache_invalidated_on_append(tmp_path):
+    x = _series(1024, seed=9)
+    res = compress(jnp.asarray(x), CFG)
+    path = str(tmp_path / "inv.cameo")
+    with CameoStore.create(path, block_len=256) as w:
+        w.append_series("s0", res, CFG, x=x)
+        # a stale decode poisoned under the not-yet-written series id:
+        # append_series must drop it, never serve it
+        w._cache.put(("s1", 0), [None, np.zeros(1, np.int64),
+                                 np.zeros(1), None, 64])
+        w.append_series("s1", res, CFG, x=x)
+        assert all(key[0] != "s1" for key in w._cache._d)
+        got = w.read_series("s1")
+        assert np.array_equal(got.view(np.uint64),
+                              np.asarray(res.xr).view(np.uint64))
+
+
+def test_coalesced_bodies_equal_individual_reads(stored):
+    store, *_ = stored
+    blks = store.series_meta("s")["blocks"]
+    assert store._read_bodies(blks) == [store._read_body(b) for b in blks]
+    # non-contiguous subset still decodes correctly (one pread per run)
+    subset = blks[::2]
+    assert store._read_bodies(subset) == [store._read_body(b)
+                                          for b in subset]
 
 
 # ---------------------------------------------------------------------------

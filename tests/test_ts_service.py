@@ -66,6 +66,29 @@ def test_service_resume_appends(tmp_path):
     assert np.array_equal(store.read_series("s2"), ref)
 
 
+def test_service_cache_stats(tmp_path):
+    path = str(tmp_path / "cache.cameo")
+    fleet = _fleet([512] * 2, seed=3)
+    scfg = TsServiceConfig(block_len=128, cache_bytes=1 << 20)
+    with TimeSeriesService(path, CFG, scfg) as svc:
+        for sid, x in fleet.items():
+            svc.submit(sid, x)
+        svc.flush()
+        first = svc.query_window("s0", 10, 400)
+        again = svc.query_window("s0", 10, 400)
+        assert np.array_equal(first, again)
+        stats = svc.stats()
+        assert stats["cache"]["hits"] > 0
+        assert stats["cache"]["budget"] == 1 << 20
+        assert stats["cache"]["nbytes"] <= stats["cache"]["budget"]
+        # repeated pushdown queries ride the same cache: the second query's
+        # edge-block decodes must be served from the LRU
+        svc.query_aggregate("s1", "mean", 10, 400)
+        h0 = svc.stats()["cache"]["hits"]
+        svc.query_aggregate("s1", "mean", 10, 400)
+        assert svc.stats()["cache"]["hits"] > h0
+
+
 def test_service_sequential_mode_fallback(tmp_path):
     cfg = CameoConfig(eps=2e-2, lags=8, mode="sequential", hops=8,
                       window=32, dtype="float64")
