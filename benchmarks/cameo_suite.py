@@ -563,6 +563,169 @@ def bench_store(full=False):
     return rows
 
 
+def bench_stream(full=False):
+    """Streaming-ingest section: window-at-a-time ``ingest_stream``
+    throughput and per-push latency vs the one-shot windowed path, the
+    byte-identity verification, and the O(window) peak-memory row (python
+    heap traced over the streamed ingest — the raw-series-to-peak ratio is
+    what the acceptance criterion gates).  Feeds the repo-root
+    ``BENCH_store.json`` ledger (``stream_*`` keys) that
+    ``benchmarks/perf_smoke.py`` gates CI against."""
+    import os
+    import tempfile
+    import tracemalloc
+
+    from repro.core.streaming import compress_windowed, min_window_len
+    from repro.serving.ts_service import TimeSeriesService, TsServiceConfig
+    from repro.store.store import CameoStore
+
+    rows = []
+    eps = 1e-2
+    chunk = 731                      # deliberately unaligned feed chunks
+    # long series with moderate L, so the feed dwarfs the window state and
+    # the O(window) memory row is meaningful
+    for ds in (["pedestrian", "uk_elec"] if not full
+               else DATASETS_SMALL + DATASETS_AGG):
+        x, spec = bench_series(ds, full)
+        n = len(x)
+        kap = max(spec.kappa, 1)
+        cfg = _cfg(spec, eps, mode="rounds", max_rounds=120)
+        wlen = max(1024 // kap * kap, min_window_len(cfg))
+        scfg = TsServiceConfig(block_len=1024, stream_window=wlen)
+
+        # one-shot windowed reference (also warms the per-window jit cache
+        # the streamed run reuses — identical window shapes)
+        with tempfile.TemporaryDirectory() as tmp:
+            p_ref = os.path.join(tmp, "ref.cameo")
+            t0 = time.perf_counter()
+            ref = compress_windowed(x, cfg, wlen)
+            with CameoStore.create(p_ref, block_len=1024) as s:
+                s.append_series(ds, ref, cfg, x=x)
+            oneshot_s = time.perf_counter() - t0
+
+            # streamed ingest through the service, chunk at a time; the
+            # steady-state python-heap working set is measured after a
+            # warm-up of 3 windows (one-time import/compile allocations
+            # excluded), so ``peak_delta`` is the actual O(window) state
+            # the acceptance criterion asserts on
+            p_str = os.path.join(tmp, "str.cameo")
+            push_times = []
+            warm_pts = 3 * wlen
+            peak_delta = 0
+            tracemalloc.start()
+            t0 = time.perf_counter()
+            with TimeSeriesService(p_str, cfg, scfg) as svc:
+                h = svc.ingest_stream(ds)
+                measuring = False
+                base = 0
+                for lo in range(0, n, chunk):
+                    if not measuring and lo >= warm_pts:
+                        tracemalloc.reset_peak()
+                        base = tracemalloc.get_traced_memory()[0]
+                        measuring = True
+                    t1 = time.perf_counter()
+                    h.push(x[lo:lo + chunk])
+                    push_times.append(time.perf_counter() - t1)
+                h.close()
+                peak_delta = max(
+                    tracemalloc.get_traced_memory()[1] - base, 1)
+            stream_s = time.perf_counter() - t0
+            tracemalloc.stop()
+
+            with open(p_ref, "rb") as f1, open(p_str, "rb") as f2:
+                bytes_equal = f1.read() == f2.read()
+        push_times.sort()
+        p50 = push_times[len(push_times) // 2]
+        p95 = push_times[int(len(push_times) * 0.95)]
+        streamed_pts = max(n - warm_pts, 1)
+        mem_ratio = 8.0 * streamed_pts / peak_delta
+        window_state = 8 * (wlen + scfg.block_len)
+        ok_mem = peak_delta < 64 * window_state    # O(window), not O(n)
+        emit(f"stream.ingest.{ds}", stream_s,
+             f"bytes_equal={bytes_equal},oneshot_s={oneshot_s:.2f},"
+             f"pts/s={n / max(stream_s, 1e-9):.3e},"
+             f"push_p50={p50 * 1e3:.1f}ms,push_p95={p95 * 1e3:.1f}ms,"
+             f"window={wlen},dev={float(ref.deviation):.2e}")
+        emit(f"stream.memory.{ds}", 0.0,
+             f"steady_peak={peak_delta},streamed_nbytes={8 * streamed_pts},"
+             f"mem_ratio={mem_ratio:.1f}x,O(window)_ok={ok_mem}")
+        rows.append(dict(
+            section="stream", dataset=ds, n=n, window=wlen, chunk=chunk,
+            eps=eps, bytes_equal=bytes_equal, oneshot_secs=oneshot_s,
+            stream_secs=stream_s, pts_per_s=n / max(stream_s, 1e-9),
+            push_p50_s=p50, push_p95_s=p95, peak_heap_nbytes=peak_delta,
+            raw_nbytes=8 * streamed_pts, mem_ratio=mem_ratio,
+            mem_ok=ok_mem, deviation=float(ref.deviation)))
+        if not bytes_equal:
+            raise AssertionError(
+                f"{ds}: streamed store bytes differ from the one-shot path")
+        if not ok_mem:
+            raise AssertionError(
+                f"{ds}: streamed ingest held {peak_delta} bytes — not "
+                f"O(window) (budget {64 * window_state})")
+    save_json("stream", rows)
+    _update_bench_stream_json(rows)
+    return rows
+
+
+def _load_bench_ledger():
+    """(ledger dict or None, path) for the repo-root BENCH_store.json —
+    ``None`` means the file doesn't exist yet (bootstrap); a
+    present-but-unreadable ledger raises instead of being silently
+    rebuilt, so a bad merge can't quietly erase the perf trajectory."""
+    import json
+    import os
+
+    path = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "BENCH_store.json")
+    if not os.path.exists(path):
+        return None, path
+    with open(path) as f:
+        try:
+            return json.load(f), path
+        except ValueError as e:
+            raise IOError(
+                f"{path} is unreadable ({e}); restore it from git or "
+                "delete it deliberately to re-pin the baseline") from e
+
+
+def _save_bench_ledger(ledger, path):
+    import json
+
+    with open(path, "w") as f:
+        json.dump(ledger, f, indent=1, default=float)
+
+
+def _update_bench_stream_json(rows):
+    """Append the streaming-ingest summary to the BENCH_store.json ledger
+    (``stream_baseline`` pinned on bootstrap, ``stream_runs`` capped) —
+    same discipline as ``_update_bench_store_json``."""
+    summary = dict(
+        mem_ratio_geomean=geomean([r["mem_ratio"] for r in rows]),
+        pts_per_s_geomean=geomean([r["pts_per_s"] for r in rows]),
+        stream_vs_oneshot=geomean(
+            [r["oneshot_secs"] / max(r["stream_secs"], 1e-12)
+             for r in rows]),
+        bytes_equal=all(r["bytes_equal"] for r in rows),
+        rows=[{k: r[k] for k in
+               ("dataset", "n", "window", "chunk", "stream_secs",
+                "oneshot_secs", "pts_per_s", "push_p50_s", "push_p95_s",
+                "peak_heap_nbytes", "mem_ratio")} for r in rows],
+    )
+    ledger, path = _load_bench_ledger()
+    if ledger is None:
+        ledger = dict(schema=1, baseline=None, runs=[])
+    if not ledger.get("stream_baseline"):
+        ledger["stream_baseline"] = summary
+    ledger.setdefault("stream_runs", []).append(summary)
+    ledger["stream_runs"] = ledger["stream_runs"][-20:]
+    _save_bench_ledger(ledger, path)
+    emit("stream.bench_json", 0.0,
+         f"mem_ratio={summary['mem_ratio_geomean']:.1f}x,"
+         f"stream_vs_oneshot={summary['stream_vs_oneshot']:.2f}x,"
+         f"bytes_equal={summary['bytes_equal']}")
+
+
 def _update_bench_store_json(rows):
     """Maintain the repo-root ``BENCH_store.json`` perf ledger.
 
@@ -577,11 +740,7 @@ def _update_bench_store_json(rows):
     metrics (vec-vs-loop and pushdown-vs-scan speedups), which are stable
     across runner hardware, unlike absolute MB/s.
     """
-    import json
-    import os
-
     from repro.store import _scan
-
 
     dec = [r for r in rows if r.get("section") == "decode"]
     sto = [r for r in rows if r.get("section") == "store"]
@@ -610,22 +769,12 @@ def _update_bench_store_json(rows):
                   ("dataset", "L", "meta_nbytes", "meta_raw_nbytes",
                    "meta_shrink")} for r in hdr],
     )
-    path = os.path.join(os.path.dirname(os.path.dirname(
-        os.path.abspath(__file__))), "BENCH_store.json")
-    if os.path.exists(path):
-        with open(path) as f:
-            try:
-                ledger = json.load(f)
-            except ValueError as e:
-                raise IOError(
-                    f"{path} is unreadable ({e}); restore it from git or "
-                    "delete it deliberately to re-pin the baseline") from e
-    else:
+    ledger, path = _load_bench_ledger()
+    if ledger is None:
         ledger = dict(schema=1, baseline=summary, runs=[])  # bootstrap
     ledger.setdefault("runs", []).append(summary)
     ledger["runs"] = ledger["runs"][-20:]
-    with open(path, "w") as f:
-        json.dump(ledger, f, indent=1, default=float)
+    _save_bench_ledger(ledger, path)
     emit("store.bench_json", 0.0,
          f"decode_speedup={summary['decode_speedup_geomean']:.1f}x,"
          f"pushdown_speedup={summary['pushdown_warm_speedup_geomean']:.1f}x,"

@@ -5,8 +5,18 @@ Runs a small synthetic fixture (seconds, not minutes) and compares
 ``BENCH_store.json`` baseline:
 
 * vectorized-vs-loop decode speedup (gorilla / chimp value streams and the
-  dod index stream), and
-* warm pushdown-aggregate latency vs a decode-and-aggregate scan.
+  dod index stream),
+* warm pushdown-aggregate latency vs a decode-and-aggregate scan, and
+* the streaming-ingest rows: streamed-session append throughput vs the
+  one-shot ``append_series`` of the same kept set (store-side only, no
+  compressor — same regime on both sides, so the ratio is stable) and the
+  O(window) memory ratio (raw streamed bytes over the session's peak
+  python-heap working set — a collapse toward 1 means the stream started
+  buffering the whole series).
+
+Metrics present in only one of {baseline, current} are *skipped with a
+note*, not failed — new rows land in the same PR as their code and are
+gated once ``--write-baseline`` re-pins the ledger.
 
 Only ratios are gated: numerator and denominator run back-to-back on the
 same machine, so a >25% drop against the committed ratio signals a real
@@ -48,8 +58,14 @@ TOLERANCE = float(os.environ.get("CAMEO_PERF_SMOKE_TOLERANCE", "0.75"))
 # load, unlike the decode ratios whose two sides share a regime.  A real
 # cache regression (warm falling back to edge decode) costs ~50-100x, so a
 # much looser floor still catches it without red-flagging clean CI runs.
-PER_METRIC_TOLERANCE = {"pushdown_warm_speedup": 0.30}
+# stream_append_ratio mixes block writes with footer bookkeeping on one
+# side only, so it also gets a looser floor; stream_mem_ratio collapses
+# ~100x when O(window) state regresses to O(n) buffering, so 0.5 is ample.
+PER_METRIC_TOLERANCE = {"pushdown_warm_speedup": 0.30,
+                        "stream_append_ratio": 0.50,
+                        "stream_mem_ratio": 0.50}
 _N = 16384
+_STREAM_N = 262144
 
 
 def _best_of(fn, *args, reps=5):
@@ -144,6 +160,61 @@ def _measure() -> dict:
     print(f"pushdown: warm {warm_s * 1e6:.0f}us vs scan "
           f"{scan_s * 1e6:.0f}us -> "
           f"{metrics['pushdown_warm_speedup']:.1f}x")
+    metrics.update(_measure_stream(cfg))
+    return metrics
+
+
+def _measure_stream(cfg) -> dict:
+    """Store-side streaming rows: a long precomputed kept set appended
+    window-at-a-time through ``open_stream`` vs one-shot ``append_series``
+    (byte-identity asserted), plus the O(window) peak-heap ratio."""
+    import tempfile
+    import tracemalloc
+
+    from repro.store.store import CameoStore
+
+    rng = np.random.default_rng(17)
+    n, wlen = _STREAM_N, 4096
+    t = np.arange(n)
+    x = (np.sin(2 * np.pi * t / 96) + 0.4 * np.sin(2 * np.pi * t / 17)
+         + 0.05 * rng.standard_normal(n))
+    kept = np.zeros(n, bool)
+    kept[::6] = True
+    kept[rng.choice(n, n // 24, replace=False)] = True
+    kept[0] = kept[-1] = True
+
+    def stream_ingest(path):
+        with CameoStore.create(path, block_len=1024) as store:
+            sess = store.open_stream("s", cfg)
+            for lo in range(0, n, wlen):
+                w = slice(lo, min(lo + wlen, n))
+                sess.append(lo, x[w], kept[w])
+            sess.close()
+
+    def oneshot_ingest(path):
+        with CameoStore.create(path, block_len=1024) as store:
+            store.append_series("s", _FakeResult(x, kept), cfg, x=x)
+
+    metrics = {}
+    with tempfile.TemporaryDirectory() as tmp:
+        p1 = os.path.join(tmp, "one.cameo")
+        p2 = os.path.join(tmp, "str.cameo")
+        one_s = _best_of(oneshot_ingest, p1, reps=3)
+        stream_s = _best_of(stream_ingest, p2, reps=3)
+        with open(p1, "rb") as f1, open(p2, "rb") as f2:
+            assert f1.read() == f2.read(), \
+                "streamed store bytes diverged from the one-shot path"
+        tracemalloc.start()
+        base = tracemalloc.get_traced_memory()[0]
+        stream_ingest(p2)
+        peak = max(tracemalloc.get_traced_memory()[1] - base, 1)
+        tracemalloc.stop()
+    metrics["stream_append_ratio"] = one_s / max(stream_s, 1e-12)
+    metrics["stream_mem_ratio"] = 8.0 * n / peak
+    print(f"stream: oneshot {one_s * 1e3:.1f}ms streamed "
+          f"{stream_s * 1e3:.1f}ms -> {metrics['stream_append_ratio']:.2f}x; "
+          f"peak heap {peak} vs raw {8 * n} -> "
+          f"{metrics['stream_mem_ratio']:.1f}x")
     return metrics
 
 
@@ -194,13 +265,25 @@ def _gate(metrics: dict) -> int:
         return 1
     failures = []
     for key, base in baseline.items():
-        cur = metrics.get(key, 0.0)
+        cur = metrics.get(key)
+        if cur is None:
+            # a committed baseline row this build doesn't measure (section
+            # removed/renamed): skip with a note — re-pin to clean it up
+            print(f"{key}: baseline {base:.1f}x but no current "
+                  "measurement — SKIPPED (re-pin with --write-baseline)")
+            continue
         floor = PER_METRIC_TOLERANCE.get(key, TOLERANCE) * base
         status = "ok" if cur >= floor else "REGRESSED"
         print(f"{key}: current {cur:.1f}x vs baseline {base:.1f}x "
               f"(floor {floor:.1f}x) {status}")
         if cur < floor:
             failures.append(key)
+    for key in sorted(set(metrics) - set(baseline)):
+        # a freshly added row whose baseline section hasn't been pinned
+        # yet: new rows must be able to land in the same PR as their code,
+        # so this is a skip, not a failure
+        print(f"{key}: current {metrics[key]:.1f}x has no committed "
+              "baseline — SKIPPED (pin with --write-baseline to gate it)")
     if failures:
         print(f"perf-smoke FAILED: {failures} regressed more than "
               f"{(1 - TOLERANCE) * 100:.0f}% vs the committed "

@@ -30,6 +30,7 @@ BENCHES = {
     "kernels": cameo_suite.bench_kernels,
     "backend": cameo_suite.bench_backend_parity,
     "store": cameo_suite.bench_store,
+    "stream": cameo_suite.bench_stream,
     "fig12": forecast.bench_fig12_forecasting,
     "fig12lm": forecast.bench_fig12_lm_forecaster,
     "fig13": anomaly.bench_fig13_anomaly,

@@ -1,0 +1,382 @@
+"""Streaming CAMEO ingest: window-at-a-time compression with bounded state.
+
+The paper positions CAMEO for sensor/IoT feeds, but ``compress()`` wants the
+whole series materialized.  This module is the online front-end: a
+:class:`StreamingCompressor` absorbs arbitrary-size point chunks, buffers
+them into fixed **tumbling windows** of ``window_len`` points, compresses
+each window independently the moment it fills (through the ordinary
+``compress()`` path — rounds or sequential, so every window carries the full
+per-window ε guarantee), and emits the closed window as a
+:class:`WindowResult`.  Peak state is O(window): one raw buffer plus O(L)
+running aggregates — the Sprintz-style bounded-state discipline.
+
+Semantics (the differential contract ``tests/test_streaming.py`` enforces):
+
+* **Chunking invariance** — the emitted kept masks, reconstructions and the
+  reported deviation are a pure function of the *stream contents* and
+  ``window_len``; how the points were sliced into ``push()`` calls is
+  unobservable (bit-identical results for every chunking, including the
+  one-chunk case — which is exactly :func:`compress_windowed`, the one-shot
+  reference).
+* **Per-window fidelity** — each full window's mask/reconstruction is
+  bit-identical to ``compress(x[s:s+window_len], cfg)`` on that slice; with
+  ``window_len >= len(x)`` streaming therefore reproduces the one-shot
+  ``compress(x, cfg)`` result exactly.
+* **Exact global accounting** — the running Eq. 7 aggregates of the original
+  and reconstructed target streams are maintained incrementally (O(L) state;
+  the cross-window lagged products go through ``kernels/ops.lag_dot`` with a
+  right-halo, the same dispatch the partitioned mode uses, so the Pallas and
+  reference backends both serve the hot loop).  ``deviation()`` is the exact
+  measured D(S(recon), S(orig)) of the stream so far — the per-window ε
+  guarantee is what is *enforced* (the paper's §4.4 local-budget discipline);
+  the global deviation is *reported*, exactly as in
+  ``core/parallel.compress_partitioned_local``.
+
+Window borders are always kept (``compress`` never removes endpoints), so
+windows concatenate without any interpolation segment crossing a border and
+the stream's reconstruction is the per-window reconstructions laid side by
+side.  A final partial window is compressed if its target-series length
+reaches ``lags + 2`` (the shortest series the aggregate math is defined on);
+anything shorter — including a tail remainder not divisible by ``kappa`` —
+is kept verbatim, so the last stream point is always kept and the store's
+block coverage reaches the end.
+
+``state_dict()`` / ``from_state()`` round-trip the complete compressor state
+(raw buffer + running aggregates) through JSON-safe types, bit-exactly —
+the store stashes it in its footer so a closed ingest session resumes as if
+it had never stopped.
+"""
+from __future__ import annotations
+
+from typing import List, NamedTuple, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.acf import Aggregates, acf_from_aggregates, aggregate_series
+from repro.core.cameo import (
+    CameoConfig,
+    CompressResult,
+    _measure_fn,
+    _stat_transform,
+    compress,
+)
+from repro.kernels import ops as _ops
+
+
+class WindowResult(NamedTuple):
+    """One closed stream window: ``x[start : start + len(x)]`` of the feed."""
+
+    start: int          # absolute index of the window's first point
+    x: np.ndarray       # original points of the window
+    kept: np.ndarray    # bool mask (window-local)
+    xr: np.ndarray      # reconstruction (kept points bit-exact)
+    n_kept: int
+    iters: int          # compressor rounds/removals (0 for verbatim windows)
+
+
+def min_window_len(cfg: CameoConfig) -> int:
+    """Shortest window the aggregate math is defined on (x-space points)."""
+    return cfg.kappa * (cfg.lags + 2)
+
+
+# ---------------------------------------------------------------------------
+# incremental Eq. 7 aggregates of an append-only stream
+# ---------------------------------------------------------------------------
+
+class RunningAggregates:
+    """Exact Eq. 7 sufficient statistics of an append-only series, O(L) state.
+
+    The four moment rows are derived on demand from the scalar totals plus
+    the stream's first/last ``L`` values (``sx(l) = T - sum(last l)``, etc. —
+    the same derivation the v3 block headers use); the lagged products
+    ``sxx`` are accumulated chunk-by-chunk through ``kernels/ops.lag_dot``
+    with a right halo, so each lag pair ``(t, t+l)`` is owned by the chunk
+    of ``t`` — identical pair-ownership to ``core/parallel``'s
+    ``chunk_agg_contrib``.  A chunk's ``sxx`` contribution needs the next
+    chunk's head as halo, so it is folded in one ``append`` late (or with a
+    zero halo at ``finalize`` — the stream ends, so missing partners vanish).
+
+    Only the *final* chunk may be shorter than ``L``: a short interior chunk
+    could not serve as its predecessor's halo.
+    """
+
+    def __init__(self, L: int, backend: str = "auto"):
+        self.L = int(L)
+        self.backend = backend
+        self.n = 0
+        self.total = 0.0
+        self.total2 = 0.0
+        self.head = np.empty(0, np.float64)   # first min(L, n) values
+        self.tail = np.empty(0, np.float64)   # last  min(L, n) values
+        self.sxx = np.zeros(self.L, np.float64)
+        self._pend: Optional[np.ndarray] = None  # last chunk, awaits halo
+        self._final = False
+
+    def append(self, y) -> None:
+        y = np.asarray(y, np.float64)
+        if self._final:
+            raise ValueError("stream already finalized")
+        if y.size == 0:
+            return
+        if self._pend is not None:
+            if self._pend.shape[0] < self.L:
+                raise ValueError(
+                    f"non-final chunk of {self._pend.shape[0]} < L={self.L} "
+                    "values cannot anchor its successor's lag pairs")
+            self.sxx = self._fold_pending(y)
+        self._pend = y
+        self.n += y.shape[0]
+        self.total += float(y.sum())
+        self.total2 += float(np.dot(y, y))
+        if self.head.shape[0] < self.L:
+            self.head = np.concatenate(
+                [self.head, y[:self.L - self.head.shape[0]]])
+        self.tail = np.concatenate([self.tail, y])[-self.L:]
+
+    def finalize(self) -> None:
+        """Fold the last pending chunk (zero halo: the stream ended)."""
+        if not self._final:
+            self.sxx = self._fold_pending(np.empty(0, np.float64))
+            self._pend = None
+            self._final = True
+
+    def _fold_pending(self, nxt: np.ndarray) -> np.ndarray:
+        """``sxx`` with the pending chunk's pairs folded in against the
+        continuation ``nxt`` (non-mutating; callers assign)."""
+        if self._pend is None:
+            return self.sxx
+        halo = np.zeros(self.L, np.float64)
+        m = min(self.L, nxt.shape[0])
+        halo[:m] = nxt[:m]
+        return self.sxx + np.asarray(
+            _ops.lag_dot(jnp.asarray(self._pend), self.L,
+                         halo=jnp.asarray(halo), backend=self.backend))
+
+    def aggregates(self) -> Aggregates:
+        """Eq. 7 five-tuple of the stream seen so far.  The pending chunk's
+        lag pairs are folded in on the fly (zero halo — pairs reaching past
+        the seen prefix don't exist yet), so the answer is exact for the
+        prefix at any point, not just after :meth:`finalize`."""
+        L = self.L
+        l = np.arange(1, L + 1)
+        valid = l < self.n
+        sx = np.zeros(L)
+        sxl = np.zeros(L)
+        sx2 = np.zeros(L)
+        sxl2 = np.zeros(L)
+        if self.n:
+            csh = np.cumsum(self.head)
+            csh2 = np.cumsum(self.head * self.head)
+            cst = np.cumsum(self.tail[::-1])
+            cst2 = np.cumsum((self.tail * self.tail)[::-1])
+            k = np.clip(l - 1, 0, self.tail.shape[0] - 1)
+            kh = np.clip(l - 1, 0, self.head.shape[0] - 1)
+            sx = np.where(valid, self.total - cst[k], 0.0)
+            sx2 = np.where(valid, self.total2 - cst2[k], 0.0)
+            sxl = np.where(valid, self.total - csh[kh], 0.0)
+            sxl2 = np.where(valid, self.total2 - csh2[kh], 0.0)
+        sxx = self._fold_pending(np.empty(0, np.float64))
+        return Aggregates(sx=jnp.asarray(sx), sxl=jnp.asarray(sxl),
+                          sx2=jnp.asarray(sx2), sxl2=jnp.asarray(sxl2),
+                          sxx=jnp.asarray(np.where(valid, sxx, 0.0)))
+
+    # -- resume support ------------------------------------------------------
+
+    def state_dict(self) -> dict:
+        return dict(
+            L=self.L, n=self.n, total=self.total, total2=self.total2,
+            head=self.head.tolist(), tail=self.tail.tolist(),
+            sxx=self.sxx.tolist(),
+            pend=None if self._pend is None else self._pend.tolist(),
+            final=self._final)
+
+    @classmethod
+    def from_state(cls, state: dict, backend: str = "auto"):
+        out = cls(state["L"], backend)
+        out.n = int(state["n"])
+        out.total = float(state["total"])
+        out.total2 = float(state["total2"])
+        out.head = np.asarray(state["head"], np.float64)
+        out.tail = np.asarray(state["tail"], np.float64)
+        out.sxx = np.asarray(state["sxx"], np.float64)
+        out._pend = (None if state["pend"] is None
+                     else np.asarray(state["pend"], np.float64))
+        out._final = bool(state["final"])
+        return out
+
+
+# ---------------------------------------------------------------------------
+# the streaming compressor
+# ---------------------------------------------------------------------------
+
+class StreamingCompressor:
+    """Window-at-a-time CAMEO over an unbounded feed; O(window) state.
+
+    ``push(chunk)`` buffers points and returns the windows it closed (zero
+    or more :class:`WindowResult`, in stream order); ``finish()`` flushes
+    the final partial window.  See the module docstring for the exact
+    semantics and the differential guarantees.
+    """
+
+    def __init__(self, cfg: CameoConfig, window_len: int = 4096, *,
+                 start: int = 0):
+        if window_len % cfg.kappa:
+            raise ValueError(f"window_len={window_len} not divisible by "
+                             f"kappa={cfg.kappa}")
+        if window_len < min_window_len(cfg):
+            raise ValueError(
+                f"window_len={window_len} shorter than the minimum "
+                f"{min_window_len(cfg)} for lags={cfg.lags}, "
+                f"kappa={cfg.kappa}")
+        self.cfg = cfg
+        self.window_len = int(window_len)
+        self._buf = np.empty(0, np.dtype(cfg.dtype))
+        self._next_start = int(start)   # absolute index of _buf[0]
+        self.n_seen = int(start)        # absolute index past the last point
+        self.windows = 0
+        self.n_kept = 0
+        self.iters = 0
+        self._finished = False
+        self._orig = RunningAggregates(cfg.lags, cfg.backend)
+        self._recon = RunningAggregates(cfg.lags, cfg.backend)
+
+    # -- feeding -------------------------------------------------------------
+
+    def push(self, chunk) -> List[WindowResult]:
+        """Absorb an arbitrary-size chunk; returns the windows it closed."""
+        if self._finished:
+            raise ValueError("stream already finished")
+        chunk = np.asarray(chunk, self._buf.dtype)
+        if chunk.ndim != 1:
+            raise ValueError(f"chunks must be 1-D, got {chunk.shape}")
+        if chunk.size:
+            self._buf = np.concatenate([self._buf, chunk])
+            self.n_seen += chunk.shape[0]
+        out = []
+        W = self.window_len
+        while self._buf.shape[0] >= W:
+            out.append(self._close(self._buf[:W], final=False))
+            self._buf = self._buf[W:]
+            self._next_start += W
+        return out
+
+    def finish(self) -> List[WindowResult]:
+        """Flush the final partial window (if any) and finalize aggregates."""
+        if self._finished:
+            return []
+        out = []
+        if self._buf.shape[0]:
+            out.append(self._close(self._buf, final=True))
+            self._next_start += self._buf.shape[0]
+            self._buf = self._buf[:0]
+        self._orig.finalize()
+        self._recon.finalize()
+        self._finished = True
+        return out
+
+    # -- window close --------------------------------------------------------
+
+    def _close(self, w_x: np.ndarray, final: bool) -> WindowResult:
+        cfg = self.cfg
+        m = w_x.shape[0]
+        ndiv = (m // cfg.kappa) * cfg.kappa
+        if ndiv // cfg.kappa >= cfg.lags + 2:
+            res = compress(jnp.asarray(w_x[:ndiv]), cfg)
+            kept = np.asarray(res.kept)
+            xr = np.asarray(res.xr)
+            iters = int(res.iters)
+            if ndiv < m:    # kappa-remainder of the final window: verbatim
+                kept = np.concatenate([kept, np.ones(m - ndiv, bool)])
+                xr = np.concatenate([xr, w_x[ndiv:]])
+        else:               # too short for the aggregate math: verbatim
+            kept = np.ones(m, bool)
+            xr = np.asarray(w_x).copy()
+            iters = 0
+        # global accounting over the kappa-divisible prefix of the stream
+        if ndiv:
+            self._orig.append(aggregate_series(
+                np.asarray(w_x[:ndiv], np.float64), cfg.kappa))
+            self._recon.append(aggregate_series(
+                np.asarray(xr[:ndiv], np.float64), cfg.kappa))
+        w = WindowResult(start=self._next_start, x=np.asarray(w_x),
+                         kept=kept, xr=xr, n_kept=int(kept.sum()),
+                         iters=iters)
+        self.windows += 1
+        self.n_kept += w.n_kept
+        self.iters += iters
+        return w
+
+    # -- exact global accounting --------------------------------------------
+
+    def stats(self):
+        """(stat_orig, stat_new): S of the original / reconstructed target
+        stream so far, from the running Eq. 7 aggregates."""
+        transform = _stat_transform(self.cfg)
+        ny = self._orig.n
+        s0 = transform(acf_from_aggregates(self._orig.aggregates(), ny))
+        s1 = transform(acf_from_aggregates(self._recon.aggregates(), ny))
+        return s0, s1
+
+    def deviation(self) -> float:
+        """Exact measured D(S(recon), S(orig)) over the stream so far."""
+        if self._orig.n <= self.cfg.lags + 1:
+            return 0.0
+        s0, s1 = self.stats()
+        return float(_measure_fn(self.cfg)(s1, s0))
+
+    # -- resume support ------------------------------------------------------
+
+    def state_dict(self) -> dict:
+        """Complete state, JSON-safe and bit-exact (floats round-trip via
+        repr); ``from_state`` continues as if the stream never paused."""
+        return dict(
+            version=1, window_len=self.window_len,
+            dtype=str(self._buf.dtype),
+            next_start=self._next_start, n_seen=self.n_seen,
+            windows=self.windows, n_kept=self.n_kept, iters=self.iters,
+            finished=self._finished,
+            buf=self._buf.astype(np.float64).tolist(),
+            orig=self._orig.state_dict(), recon=self._recon.state_dict())
+
+    @classmethod
+    def from_state(cls, cfg: CameoConfig, state: dict):
+        out = cls(cfg, int(state["window_len"]))
+        out._buf = np.asarray(state["buf"], np.float64).astype(
+            np.dtype(state["dtype"]))
+        out._next_start = int(state["next_start"])
+        out.n_seen = int(state["n_seen"])
+        out.windows = int(state["windows"])
+        out.n_kept = int(state["n_kept"])
+        out.iters = int(state["iters"])
+        out._finished = bool(state["finished"])
+        out._orig = RunningAggregates.from_state(state["orig"], cfg.backend)
+        out._recon = RunningAggregates.from_state(state["recon"], cfg.backend)
+        return out
+
+
+# ---------------------------------------------------------------------------
+# one-shot reference for the streaming semantics
+# ---------------------------------------------------------------------------
+
+def compress_windowed(x, cfg: CameoConfig,
+                      window_len: int = 4096) -> CompressResult:
+    """One-shot windowed compression — the reference the streaming path is
+    differentially tested against (it feeds the whole series as a single
+    chunk, so any chunked ``push`` sequence must match it bit-for-bit).
+
+    Returns a whole-series :class:`CompressResult`: concatenated mask and
+    reconstruction, the exact measured global deviation, and the global
+    stream statistics.  ``iters`` is the total across windows.
+    """
+    x = np.asarray(x)
+    sc = StreamingCompressor(cfg, window_len)
+    wins = sc.push(x) + sc.finish()
+    kept = np.concatenate([w.kept for w in wins])
+    xr = np.concatenate([w.xr for w in wins])
+    s0, s1 = sc.stats()
+    return CompressResult(
+        kept=jnp.asarray(kept), xr=jnp.asarray(xr),
+        deviation=jnp.asarray(sc.deviation()),
+        n_kept=jnp.asarray(sc.n_kept), iters=jnp.asarray(sc.iters),
+        stat_orig=s0, stat_new=s1)

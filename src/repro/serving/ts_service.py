@@ -8,6 +8,20 @@ compile, B series), then streams the results into an append-oriented
 window decodes and pushdown aggregates are served from the store's block
 index the moment a series is flushed.
 
+For feeds that never end, :meth:`TimeSeriesService.ingest_stream` opens a
+:class:`StreamIngest` handle instead: arbitrary-size chunks stream through
+a ``core/streaming.StreamingCompressor`` (window-at-a-time compression,
+per-window ε guarantee) straight into a store ``StreamSession`` that
+appends a block the moment its border is provable — the service holds
+O(window) state per open stream, no matter how long the feed runs, and
+the written prefix is queryable mid-stream.  Closing the *service*
+mid-stream stashes the compressor + session state in the store footer;
+reopening with ``resume=True`` and ``ingest_stream(sid, resume=True)``
+continues bit-exactly (``handle.resume_from`` says which absolute index
+to feed next).  The finalized series is byte-identical to compressing
+the same windows one-shot (``core/streaming.compress_windowed``) and
+storing them with ``append_series``.
+
 This is the same continuous-batching-lite discipline as
 ``serving/engine.py``'s decode loop — slots fill, a burst runs, results
 drain — applied to compression instead of token decoding.  Groups flush
@@ -32,6 +46,7 @@ import jax
 import numpy as np
 
 from repro.core.cameo import CameoConfig, compress, compress_batch
+from repro.core.streaming import StreamingCompressor
 from repro.store.query import query as _pushdown_query
 from repro.store.store import CameoStore
 
@@ -44,6 +59,85 @@ class TsServiceConfig:
     entropy: str = "auto"
     store_residuals: bool = True  # keep Plato-style bound metadata
     cache_bytes: int = 64 << 20   # decoded-block LRU budget (0 disables)
+    stream_window: int = 4096     # default ingest_stream window length
+
+
+class StreamIngest:
+    """One unbounded-feed ingest stream: chunks in, blocks out, O(window)
+    state.  Obtain via :meth:`TimeSeriesService.ingest_stream`; feed with
+    :meth:`push` (any chunk sizes — the result is chunking-invariant) and
+    :meth:`close` when the feed ends.  Mid-feed, the series' written
+    prefix serves window/pushdown queries like any stored series.
+    """
+
+    def __init__(self, service: "TimeSeriesService", sid: str,
+                 window_len: int, resume: bool):
+        self._svc = service
+        self.sid = sid
+        ccfg = service.ccfg
+        store = service.store
+        if resume:
+            self._sess = store.open_stream(sid, ccfg, resume=True)
+            state = self._sess.restored_client_state
+            if state is None:
+                # unwind: re-stash the session state and release the slot,
+                # so a raw-store resume of the same stream still works
+                store._series[sid]["stream_state"] = self._sess._stash()
+                store._streams.pop(sid, None)
+                raise ValueError(
+                    f"series {sid!r}: stream was not opened through "
+                    "ingest_stream — no compressor state to resume")
+            self._comp = StreamingCompressor.from_state(ccfg, state)
+        else:
+            self._comp = StreamingCompressor(ccfg, window_len)
+            self._sess = store.open_stream(
+                sid, ccfg, with_resid=service.scfg.store_residuals)
+        self._sess.state_provider = self._comp.state_dict
+        self.closed = False
+
+    @property
+    def resume_from(self) -> int:
+        """Absolute index of the next point this stream expects."""
+        return self._comp.n_seen
+
+    @property
+    def n_seen(self) -> int:
+        return self._comp.n_seen
+
+    def deviation(self) -> float:
+        """Exact measured global ACF deviation of the stream so far."""
+        return self._comp.deviation()
+
+    def push(self, chunk) -> int:
+        """Feed a chunk; compresses and stores every window it closes.
+        Returns the number of windows closed."""
+        wins = self._comp.push(chunk)
+        for w in wins:
+            self._sess.append_window(w)
+        return len(wins)
+
+    def flush(self) -> None:
+        """Durability checkpoint: footer (incl. resume state) rewritten."""
+        self._sess.flush()
+
+    def close(self) -> dict:
+        """Flush the final partial window, finalize the series, and return
+        its catalog entry."""
+        for w in self._comp.finish():
+            self._sess.append_window(w)
+        entry = self._sess.close(deviation=self._comp.deviation())
+        self._svc._streams.pop(self.sid, None)
+        self._svc._ingested += 1
+        self.closed = True
+        return entry
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        # finalize only on clean exit — see StreamSession.__exit__
+        if exc[0] is None and not self.closed:
+            self.close()
 
 
 class TimeSeriesService:
@@ -60,6 +154,7 @@ class TimeSeriesService:
             cache_bytes=self.scfg.cache_bytes)
         # pending ingest, grouped by length (compress_batch wants [B, n])
         self._pending: Dict[int, List[Tuple[str, np.ndarray]]] = {}
+        self._streams: Dict[str, StreamIngest] = {}   # open feed streams
         self._ingested = 0
         self._rounds = 0
 
@@ -116,6 +211,26 @@ class TimeSeriesService:
         for length in sorted(self._pending):
             self._flush_group(length)
 
+    def ingest_stream(self, sid: str, *, window_len: int = None,
+                      resume: bool = False) -> StreamIngest:
+        """Open a continuous-feed ingest stream for ``sid``.
+
+        Returns a :class:`StreamIngest`: ``push`` arbitrary chunks,
+        ``close`` when the feed ends.  ``resume=True`` (on a service opened
+        with ``resume=True``) continues an interrupted stream from the
+        state stashed in the store footer; feed points from
+        ``handle.resume_from`` onward.
+        """
+        if not resume and (sid in self.store or any(
+                s == sid for g in self._pending.values() for s, _ in g)):
+            raise ValueError(f"series {sid!r} already submitted")
+        if sid in self._streams:
+            raise ValueError(f"series {sid!r} already has an open stream")
+        h = StreamIngest(self, sid,
+                         window_len or self.scfg.stream_window, resume)
+        self._streams[sid] = h
+        return h
+
     # -- queries ------------------------------------------------------------
 
     def query_window(self, sid: str, a: int, b: int) -> np.ndarray:
@@ -142,6 +257,7 @@ class TimeSeriesService:
             ingested=self._ingested,
             pending=sum(len(g) for g in self._pending.values()),
             batches=self._rounds,
+            streams=len(self._streams),
             points=pts, stored_nbytes=stored,
             point_cr=pts / max(kept, 1),
             bytes_cr=raw / max(stored, 1),

@@ -6,14 +6,19 @@
   vectorized (bulk bit packing / control-scan + bulk gather, see
   ``store._scan``); the ``*_loop`` forms are the parity oracles.
 * ``store.blocks`` — chunked block format; borders pinned on kept points;
-  headers carry (n, n_kept, eps, stat, kappa, L) + the five Eq. 7 ACF
-  sufficient statistics and pushdown metadata, compacted losslessly with
-  xor-delta + byte-plane shuffle coding.
+  headers carry (n, n_kept, eps, stat, kappa, L) + the Eq. 7 ACF
+  sufficient statistics and pushdown metadata.  Format v3 stores only the
+  ``sxx`` row and the edge vectors (the four moment rows are derived at
+  parse time, ~2.3x header shrink); vectors are compacted losslessly with
+  xor-delta + byte-plane shuffle coding.  v2 files read fine.
 * ``store.store``  — append-oriented writer / random-access reader
   (``CameoStore``); window decodes touch only overlapping blocks (misses
   fetched with coalesced preads), are bit-exact vs the compressor's
   reconstruction, and ride a byte-budgeted decoded-block LRU
-  (``cache_bytes``).
+  (``cache_bytes``).  ``open_stream`` opens a :class:`StreamSession` that
+  appends blocks as stream windows close (``core/streaming``), serves the
+  written prefix mid-stream, and resumes bit-exactly from footer-stashed
+  state — the finalized file is byte-identical to the one-shot write.
 * ``store.query``  — Plato-style pushdown aggregates (sum/mean/var/ACF)
   with deterministic error bounds; edge-block decodes hit the same LRU.
 
@@ -26,6 +31,7 @@ import importlib
 
 _EXPORTS = {
     "CameoStore": "repro.store.store",
+    "StreamSession": "repro.store.store",
     "window_acf": "repro.store.query",
     "window_mean": "repro.store.query",
     "window_sum": "repro.store.query",

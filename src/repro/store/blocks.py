@@ -20,15 +20,30 @@ Every block header carries the compression contract (``n``, ``n_kept``,
   (``sum e``, ``sum e^2``, ``sum xr*e``, ``max |e|``) — the Plato-style
   deterministic error-bound inputs.
 
-The ``[5, L]`` aggregate matrix and the two edge vectors are stored
-**compacted**: a lossless xor-delta over the float64 bit patterns followed
-by a byte-plane shuffle (the blosc/Sprintz filter idea) and the shared
-entropy wrap.  Neighboring aggregate entries share exponent and high
-mantissa bytes, so the deltas are mostly-zero byte planes that zlib/zstd
+Header metadata is stored **compacted** twice over.  First, the moment
+rows are *derived, not stored* (format v3): of the five Eq. 7 rows only
+the lagged products ``sxx`` are physically kept — ``sx``, ``sxl``,
+``sx2`` and ``sxl2`` are reconstructed at parse time from the scalar
+moments plus the first/last-``L`` edge vectors the header already
+carries (``sx(l) = vsum - sum(last l values)`` and mirrored forms; the
+exact derivation ``store/query.py`` has always used for windowed ACF).
+That shrinks the stored per-lag metadata ``(5L + |hv| + |tv|) /
+(L + |hv| + |tv|)`` ≈ 2.3x on top of the coding below.  The derived rows
+are *exact-on-derivation* (deterministic, equal to the v2 stored values
+up to summation-order rounding); ``sxx`` — the only row the pushdown
+ACF consumes from metadata — stays bit-exact.  v2 blocks (which store
+all five rows) are still parsed bit-exactly; the block flags byte says
+which layout a body uses.
+
+Second, the surviving vectors (``sxx`` + the two edge vectors) go
+through a lossless xor-delta over the float64 bit patterns followed by
+a byte-plane shuffle (the blosc/Sprintz filter idea) and the shared
+entropy wrap.  Neighboring entries share exponent and high mantissa
+bytes, so the deltas are mostly-zero byte planes that zlib/zstd
 collapse — min_temp-style ``L=365`` headers stop dominating their
-payloads.  The roundtrip is bit-exact (uint64 xor + ``np.bitwise_xor.
+payloads.  That roundtrip is bit-exact (uint64 xor + ``np.bitwise_xor.
 accumulate``), so the deterministic pushdown bounds in ``store/query.py``
-are untouched; ``parse_block`` returns byte-identical metadata either way.
+are untouched.
 
 Ownership is half-open: block ``i`` owns ``[t0, t1)`` (the shared right
 border belongs to the next block) except the last block, which owns its end
@@ -64,6 +79,7 @@ _ENTROPY_NAMES = {v: k for k, v in _ENTROPY_CODES.items()}
 
 _FLAG_LAST = 1
 _FLAG_RESID = 2
+_FLAG_META_V3 = 4      # header stores only sxx; moment rows derived at parse
 
 # fixed header: t0 t1 n_kept | L kappa hv_len tv_len | stat vcodec entropy
 # flags meta_codec | eps vmin vmax vsum vsumsq r1 r2 rx emax | idx_bits
@@ -193,6 +209,52 @@ def _slice_aggregates(v: np.ndarray, L: int) -> np.ndarray:
     return agg
 
 
+def _slice_lag_products(v: np.ndarray, L: int) -> np.ndarray:
+    """Row 4 of :func:`_slice_aggregates` alone (the only stored row in v3)."""
+    v = np.asarray(v, np.float64)
+    m = v.shape[0]
+    return np.array([float(np.dot(v[:m - l], v[l:])) if m > l else 0.0
+                     for l in range(1, L + 1)])
+
+
+def derive_aggregate_rows(sxx: np.ndarray, hv: np.ndarray, tv: np.ndarray,
+                          vsum: float, vsumsq: float, m: int) -> np.ndarray:
+    """Reassemble the ``[5, L]`` Eq. 7 table from the v3 header fields.
+
+    ``m`` is the owned-slice length.  For every defined lag (``l < m``) the
+    moment rows follow from the scalar totals and the edge vectors::
+
+        sx(l)   = vsum   - sum(last  l values)     (tail cumsum of ``tv``)
+        sxl(l)  = vsum   - sum(first l values)     (head cumsum of ``hv``)
+        sx2(l)  = vsumsq - sum(last  l squares)
+        sxl2(l) = vsumsq - sum(first l squares)
+
+    Defined lags satisfy ``l <= min(L, m-1) <= len(hv) == len(tv)``, so the
+    cumulative sums always cover them.  Exact-on-derivation: deterministic,
+    equal to the v2 stored rows up to summation-order rounding; ``sxx``
+    passes through untouched (bit-exact).
+    """
+    L = sxx.shape[0]
+    agg = np.zeros((5, L))
+    # the stored sxx is already zero on undefined lags (writer masks m <= l)
+    agg[4] = sxx
+    if m <= 1 or hv.shape[0] == 0:
+        return agg
+    l = np.arange(1, L + 1)
+    valid = l < m
+    k = np.clip(l - 1, 0, tv.shape[0] - 1)
+    kh = np.clip(l - 1, 0, hv.shape[0] - 1)
+    cst = np.cumsum(tv[::-1])
+    cst2 = np.cumsum((tv * tv)[::-1])
+    csh = np.cumsum(hv)
+    csh2 = np.cumsum(hv * hv)
+    agg[0] = np.where(valid, vsum - cst[k], 0.0)
+    agg[1] = np.where(valid, vsum - csh[kh], 0.0)
+    agg[2] = np.where(valid, vsumsq - cst2[k], 0.0)
+    agg[3] = np.where(valid, vsumsq - csh2[kh], 0.0)
+    return agg
+
+
 # ---------------------------------------------------------------------------
 # encode / decode
 # ---------------------------------------------------------------------------
@@ -200,7 +262,8 @@ def _slice_aggregates(v: np.ndarray, L: int) -> np.ndarray:
 def build_block(kept_idx, kept_vals, *, t0: int, t1: int, is_last: bool,
                 owned_xr: np.ndarray, L: int, kappa: int, stat: str,
                 eps: float, resid: Optional[np.ndarray] = None,
-                value_codec: str = "gorilla", entropy: str = "auto"):
+                value_codec: str = "gorilla", entropy: str = "auto",
+                meta_version: int = 3):
     """Encode one block -> ``(body, info)``.
 
     ``kept_idx``/``kept_vals`` are the kept points in ``[t0, t1]`` (global
@@ -209,9 +272,14 @@ def build_block(kept_idx, kept_vals, *, t0: int, t1: int, is_last: bool,
     range when the original was available.  ``info`` carries
     ``payload_nbytes`` (the codec-only stream size), ``meta_nbytes`` (the
     compacted aggregate/edge metadata) and ``meta_raw_nbytes`` (what the
-    metadata would cost uncompacted) — header metadata is accounted
-    separately from the payload because for large ``L`` on short blocks it
-    can dominate, and the two CR flavors should stay tellable apart."""
+    stored metadata vectors would cost uncompacted) — header metadata is
+    accounted separately from the payload because for large ``L`` on short
+    blocks it can dominate, and the two CR flavors should stay tellable
+    apart.  ``meta_version=3`` (default) stores only the ``sxx`` row and
+    derives the four moment rows at parse; ``meta_version=2`` writes the
+    legacy all-five-rows layout (kept writable for compatibility tests)."""
+    if meta_version not in (2, 3):
+        raise ValueError(f"unknown block meta version {meta_version}")
     kept_idx = np.asarray(kept_idx, np.int64)
     kept_vals = np.asarray(kept_vals, np.float64)
     owned_xr = np.asarray(owned_xr, np.float64)
@@ -221,9 +289,14 @@ def build_block(kept_idx, kept_vals, *, t0: int, t1: int, is_last: bool,
 
     hv = owned_xr[:min(L, owned_xr.shape[0])]
     tv = owned_xr[-min(L, owned_xr.shape[0]):]
-    agg = _slice_aggregates(owned_xr, L)
+    if meta_version == 3:
+        agg_stored = _slice_lag_products(owned_xr, L)
+    else:
+        agg_stored = _slice_aggregates(owned_xr, L).ravel()
 
     flags = (_FLAG_LAST if is_last else 0)
+    if meta_version == 3:
+        flags |= _FLAG_META_V3
     if resid is not None:
         resid = np.asarray(resid, np.float64)
         flags |= _FLAG_RESID
@@ -233,7 +306,7 @@ def build_block(kept_idx, kept_vals, *, t0: int, t1: int, is_last: bool,
     else:
         r1 = r2 = rx = emax = 0.0
 
-    meta_flat = np.concatenate([agg.ravel(), hv, tv])
+    meta_flat = np.concatenate([agg_stored, hv, tv])
     meta_payload, meta_codec = pack_meta_vectors(meta_flat, entropy)
 
     header = _HDR.pack(
@@ -269,13 +342,20 @@ def parse_block(body: bytes, *, with_payload: bool = True):
      idx_bits, val_bits, raw_nbytes, payload_nbytes,
      meta_nbytes) = _HDR.unpack(body[:_HDR.size])
     off = _HDR.size
-    meta_count = 5 * L + hv_len + tv_len
+    is_v3 = bool(flags & _FLAG_META_V3)
+    agg_rows = 1 if is_v3 else 5
+    meta_count = agg_rows * L + hv_len + tv_len
     meta_flat = unpack_meta_vectors(body[off:off + meta_nbytes], meta_count,
                                     _ENTROPY_NAMES[meta_c])
     off += meta_nbytes
-    agg = meta_flat[:5 * L].reshape(5, L)
-    hv = meta_flat[5 * L:5 * L + hv_len]
-    tv = meta_flat[5 * L + hv_len:]
+    hv = meta_flat[agg_rows * L:agg_rows * L + hv_len]
+    tv = meta_flat[agg_rows * L + hv_len:]
+    if is_v3:
+        owned = (t1 + 1 if flags & _FLAG_LAST else t1) - t0
+        agg = derive_aggregate_rows(meta_flat[:L], hv, tv, vsum, vsumsq,
+                                    owned)
+    else:
+        agg = meta_flat[:5 * L].reshape(5, L)
     meta = BlockMeta(
         t0=t0, t1=t1, n_kept=n_kept, L=L, kappa=kappa,
         stat=STAT_NAMES[stat_c], eps=eps,

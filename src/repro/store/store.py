@@ -1,21 +1,42 @@
 """CameoStore — the on-disk physical layer under the compressor.
 
 File layout (append-oriented: blocks stream to disk as series are ingested,
-the index is a footer written on ``close``)::
+the index is a footer written on ``flush``/``close``)::
 
-    magic "CAMEOST\\x02"
+    magic "CAMEOST\\x03"
     [u32 body_len][block body + crc32] ...      (blocks, any series order)
     footer JSON (zlib)                           (series catalog)
     [u64 footer_offset][u32 footer_len][magic]
 
-Format v2 (this magic) compacts the per-block ``[5, L]`` aggregate and
-edge-vector metadata with the lossless shuffle+delta coder in
-``store/blocks.py``; v1 files are refused loudly — reingest them.
+Format v3 (this magic) derives the four redundant aggregate header rows
+from the edge vectors + scalar moments at parse time instead of storing
+them (see ``store/blocks.py`` — ~2.3x further header shrink on top of the
+v2 shuffle+delta coding).  v2 files read fine (the per-block flags byte
+says which layout a body uses); v1 files are refused loudly — reingest
+them.
 
 A crashed writer leaves a file without a footer; ``CameoStore.open`` refuses
 it loudly rather than serving a partial catalog.  Reopening with
 ``mode="a"`` truncates the footer and keeps appending — restart-safe ingest
 for the serving layer.
+
+Two ingest paths share the block writer:
+
+* ``append_series`` — one shot: a finished ``CompressResult`` becomes
+  blocks + a complete catalog entry.
+* ``open_stream`` — a :class:`StreamSession` that absorbs closed stream
+  windows (``core/streaming``) as they arrive and writes each block the
+  moment its right border is provable, holding only O(block + window)
+  state.  Blocks, offsets and the final footer are **byte-identical** to
+  the one-shot write of the same kept points — the session replays
+  ``plan_block_bounds``'s greedy rule incrementally (a border ``t1``
+  commits once a kept point ``>= t1 + L`` exists, which rules out the
+  tail-merge clamp).  ``flush()`` (or ``close``) rewrites the footer so
+  the ingested prefix is durable and readable mid-stream; an incomplete
+  session's state — pending points *and* an opaque client blob (the
+  serving layer stashes its ``StreamingCompressor`` state there) — rides
+  along in the footer, so reopening with ``mode="a"`` resumes the stream
+  exactly where it stopped.
 
 The reader serves random-access **window decodes** that touch only the
 blocks overlapping the window (block borders are kept points, so no
@@ -59,7 +80,8 @@ from repro.store.blocks import (
     reconstruct_block,
 )
 
-MAGIC = b"CAMEOST\x02"
+MAGIC = b"CAMEOST\x03"
+_MAGICS = {2: b"CAMEOST\x02", 3: MAGIC}   # readable format versions
 _TAIL = struct.Struct("<QI")          # footer offset, footer byte length
 DEFAULT_CACHE_BYTES = 64 << 20
 
@@ -113,6 +135,12 @@ class BlockCache:
         for key in [k for k in self._d if k[0] == sid]:
             self.nbytes -= self._d.pop(key)[_E_NBYTES]
 
+    def drop(self, key):
+        """Invalidate one block entry (streamed per-append invalidation)."""
+        e = self._d.pop(key, None)
+        if e is not None:
+            self.nbytes -= e[_E_NBYTES]
+
     def clear(self):
         self._d.clear()
         self.nbytes = 0
@@ -141,26 +169,35 @@ class CameoStore:
 
     def __init__(self, path: str, mode: str, *, block_len: int = 4096,
                  value_codec: str = "gorilla", entropy: str = "auto",
-                 cache_bytes: int = DEFAULT_CACHE_BYTES):
+                 cache_bytes: int = DEFAULT_CACHE_BYTES, version: int = 3):
         if value_codec not in _codec.VALUE_CODECS:
             raise ValueError(f"unknown value codec {value_codec!r}")
+        if version not in _MAGICS:
+            raise ValueError(f"unknown store version {version}; have "
+                             f"{sorted(_MAGICS)}")
         self.path = path
         self.block_len = int(block_len)
         self.value_codec = value_codec
         self.entropy = entropy
+        self.version = int(version)
         self._series: Dict[str, dict] = {}   # sid -> catalog entry
         self._cache = BlockCache(cache_bytes)  # (sid, bi) -> decoded entry
         self._metas: Dict[tuple, "BlockMeta"] = {}  # header-only cache
+        self._streams: Dict[str, "StreamSession"] = {}  # open ingest streams
         self._writable = mode in ("w", "a")
+        self._footer_dirty = False   # a footer sits at EOF; truncate first
         if mode == "w":
             self._f = open(path, "w+b")
-            self._f.write(MAGIC)
+            self._f.write(_MAGICS[self.version])
         elif mode in ("r", "a"):
             self._f = open(path, "r+b" if mode == "a" else "rb")
             self._load_footer()
             if mode == "a":
-                self._f.seek(self._footer_offset)
-                self._f.truncate()
+                # defer the footer truncation to the first append: until new
+                # bytes exist, the old footer (the sole copy of the catalog
+                # and any stashed stream-resume state) stays intact, so a
+                # crash between reopen and the first write loses nothing
+                self._footer_dirty = True
         else:
             raise ValueError(f"unknown mode {mode!r}")
 
@@ -169,9 +206,10 @@ class CameoStore:
     @classmethod
     def create(cls, path: str, *, block_len: int = 4096,
                value_codec: str = "gorilla", entropy: str = "auto",
-               cache_bytes: int = DEFAULT_CACHE_BYTES) -> "CameoStore":
+               cache_bytes: int = DEFAULT_CACHE_BYTES,
+               version: int = 3) -> "CameoStore":
         return cls(path, "w", block_len=block_len, value_codec=value_codec,
-                   entropy=entropy, cache_bytes=cache_bytes)
+                   entropy=entropy, cache_bytes=cache_bytes, version=version)
 
     @classmethod
     def open(cls, path: str, mode: str = "r", *,
@@ -193,7 +231,34 @@ class CameoStore:
             self._write_footer()
         self._f.close()
 
+    def flush(self):
+        """Rewrite the footer so everything ingested so far — including the
+        readable prefix of open stream sessions, whose resume state is
+        embedded — is durable.  Appending after a flush truncates the stale
+        footer first (the next flush/close writes a fresh one)."""
+        if not self._writable:
+            raise IOError("store opened read-only")
+        self._write_footer()
+
+    def _ensure_appendable(self):
+        """Truncate a footer left at EOF by ``flush()`` before appending."""
+        if self._footer_dirty:
+            self._f.seek(self._footer_offset)
+            self._f.truncate()
+            self._footer_dirty = False
+
+    def _append_body(self, body: bytes) -> int:
+        """Write one length-prefixed block body at EOF; returns its offset."""
+        self._ensure_appendable()
+        off = self._f.seek(0, os.SEEK_END)
+        self._f.write(struct.pack("<I", len(body)))
+        self._f.write(body)
+        return off
+
     def _write_footer(self):
+        self._ensure_appendable()
+        for sid, sess in self._streams.items():
+            self._series[sid]["stream_state"] = sess._stash()
         off = self._f.seek(0, os.SEEK_END)
         footer = zlib.compress(json.dumps(
             {"block_len": self.block_len, "value_codec": self.value_codec,
@@ -201,26 +266,30 @@ class CameoStore:
             default=float).encode())
         self._f.write(footer)
         self._f.write(_TAIL.pack(off, len(footer)))
-        self._f.write(MAGIC)
+        self._f.write(_MAGICS[self.version])
         self._f.flush()
         self._footer_offset = off
+        self._footer_dirty = True
 
     def _load_footer(self):
         f = self._f
         head = f.read(len(MAGIC))
-        if head != MAGIC:
+        versions = {m: v for v, m in _MAGICS.items()}
+        if head not in versions:
             if head[:-1] == MAGIC[:-1]:
                 raise IOError(f"{self.path}: CameoStore format "
-                              f"v{head[-1]} is not v{MAGIC[-1]} — reingest "
-                              "the series into a fresh store")
+                              f"v{head[-1]} is not readable by this build "
+                              f"(v{max(_MAGICS)}) — reingest the series "
+                              "into a fresh store")
             raise IOError(f"{self.path}: not a CameoStore file")
+        self.version = versions[head]
         end = f.seek(0, os.SEEK_END)
         tail_len = _TAIL.size + len(MAGIC)
         if end < len(MAGIC) + tail_len:
             raise IOError(f"{self.path}: truncated store (no footer)")
         f.seek(end - tail_len)
         tail = f.read(tail_len)
-        if tail[-len(MAGIC):] != MAGIC:
+        if tail[-len(MAGIC):] != head:
             raise IOError(f"{self.path}: missing footer magic — the writer "
                           "crashed before close(); reingest or salvage "
                           "blocks manually")
@@ -281,10 +350,9 @@ class CameoStore:
                 is_last=is_last, owned_xr=owned_xr,
                 L=cfg.lags, kappa=cfg.kappa, stat=cfg.stat, eps=cfg.eps,
                 resid=None if x64 is None else x64[t0:o1] - owned_xr,
-                value_codec=self.value_codec, entropy=self.entropy)
-            off = self._f.seek(0, os.SEEK_END)
-            self._f.write(struct.pack("<I", len(body)))
-            self._f.write(body)
+                value_codec=self.value_codec, entropy=self.entropy,
+                meta_version=self.version)
+            off = self._append_body(body)
             nbytes += 4 + len(body)
             payload_nbytes += binfo["payload_nbytes"]
             meta_nbytes += binfo["meta_nbytes"]
@@ -304,6 +372,68 @@ class CameoStore:
         for key in [k for k in self._metas if k[0] == sid]:
             del self._metas[key]
         return entry
+
+    def open_stream(self, sid: str, cfg, *, dtype: str = None,
+                    with_resid: bool = True,
+                    resume: bool = False) -> "StreamSession":
+        """Open a streaming append session for one series.
+
+        The session absorbs closed stream windows (``StreamSession.append``
+        / ``append_window``) and writes blocks incrementally; the series is
+        queryable over its written prefix the whole time and finalizes on
+        ``StreamSession.close``.  With ``resume=True`` the session continues
+        an incomplete stream from the state stashed in the footer by a
+        previous ``flush()``/store close (open the store with ``mode="a"``).
+
+        ``with_resid`` stores Plato-style residual moments (the appended
+        windows then carry the original points, which they do by
+        construction).  The finalized series — blocks, offsets, catalog
+        entry — is byte-identical to a one-shot ``append_series`` of the
+        same kept points.
+        """
+        if not self._writable:
+            raise IOError("store opened read-only")
+        if resume:
+            entry = self._series.get(sid)
+            if entry is None or not entry.get("streaming"):
+                raise ValueError(
+                    f"series {sid!r} has no incomplete stream to resume")
+            if sid in self._streams:
+                raise ValueError(f"series {sid!r} already has an open "
+                                 "stream session")
+            # validate before consuming the stash: a failed resume attempt
+            # (wrong cfg) must leave the stream resumable with the right one
+            for key, want in (("eps", float(cfg.eps)), ("stat", cfg.stat),
+                              ("lags", int(cfg.lags)),
+                              ("kappa", int(cfg.kappa))):
+                if entry[key] != want:
+                    raise ValueError(
+                        f"series {sid!r}: resume cfg mismatch on {key}: "
+                        f"stored {entry[key]!r} vs {want!r}")
+            stash = entry.pop("stream_state", None)
+            if stash is None:
+                raise ValueError(
+                    f"series {sid!r}: no stream state stashed — the "
+                    "previous writer crashed before flush()/close")
+            sess = StreamSession(self, sid, cfg, dtype=stash["dtype"],
+                                 with_resid=stash["with_resid"],
+                                 entry=entry, stash=stash)
+        else:
+            if sid in self._series:
+                raise ValueError(f"series {sid!r} already stored")
+            dtype = dtype or getattr(cfg, "dtype", "float64")
+            entry = dict(
+                n=0, n_kept=0, dtype=str(np.dtype(dtype)),
+                eps=float(cfg.eps), stat=cfg.stat, lags=int(cfg.lags),
+                kappa=int(cfg.kappa), deviation=0.0,
+                value_codec=self.value_codec, stored_nbytes=0,
+                payload_nbytes=0, meta_nbytes=0, meta_raw_nbytes=0,
+                has_resid=bool(with_resid), blocks=[], streaming=True)
+            self._series[sid] = entry
+            sess = StreamSession(self, sid, cfg, dtype=entry["dtype"],
+                                 with_resid=with_resid, entry=entry)
+        self._streams[sid] = sess
+        return sess
 
     # -- catalog ------------------------------------------------------------
 
@@ -400,11 +530,14 @@ class CameoStore:
         return e[_E_META], e[_E_IDX], e[_E_VALS]
 
     def _overlapping(self, sid: str, a: int, b: int):
-        """Indices of blocks whose *owned* range intersects [a, b)."""
+        """Indices of blocks whose *owned* range intersects [a, b).  While a
+        stream session is still appending, no block owns its right border —
+        the final point arrives with the closing block."""
         entry = self._series[sid]
+        streaming = bool(entry.get("streaming"))
         out = []
         for bi, blk in enumerate(entry["blocks"]):
-            is_last = bi == len(entry["blocks"]) - 1
+            is_last = bi == len(entry["blocks"]) - 1 and not streaming
             o1 = blk["t1"] + 1 if is_last else blk["t1"]
             if blk["t0"] < b and o1 > a:
                 out.append(bi)
@@ -413,16 +546,23 @@ class CameoStore:
     # -- reads --------------------------------------------------------------
 
     def read_kept(self, sid: str):
-        """(indices, values) of the stored kept points, whole series."""
+        """(indices, values) of the stored kept points over the readable
+        range ``[0, n)`` — for a still-streaming series that excludes the
+        last block's right border (it reappears as the next block's first
+        point when the stream continues)."""
+        entry = self._series[sid]
+        dtype = np.dtype(entry["dtype"])
+        nb = len(entry["blocks"])
+        if nb == 0:      # streaming series before its first block commits
+            return np.empty(0, np.int64), np.empty(0, dtype)
         idx_parts, val_parts = [], []
-        nb = len(self._series[sid]["blocks"])
+        streaming = bool(entry.get("streaming"))
         for bi, e in enumerate(self._blocks(sid, list(range(nb)))):
             idx, vals = e[_E_IDX], e[_E_VALS]
-            if bi < nb - 1:          # shared border point belongs to next
+            if bi < nb - 1 or streaming:   # shared border belongs to next
                 idx, vals = idx[:-1], vals[:-1]
             idx_parts.append(idx)
             val_parts.append(vals)
-        dtype = np.dtype(self._series[sid]["dtype"])
         return (np.concatenate(idx_parts),
                 np.concatenate(val_parts).astype(dtype))
 
@@ -487,3 +627,264 @@ class CameoStore:
             bytes_cr=raw_nbytes / max(e["stored_nbytes"], 1),
             codec_cr=raw_nbytes / max(payload, 1),
             raw_nbytes=raw_nbytes)
+
+
+class StreamSession:
+    """Streaming append session for one series (see ``open_stream``).
+
+    Feed it contiguous stream windows — ``append(start, x, kept)`` or
+    ``append_window(w)`` with a ``core/streaming.WindowResult`` — and it
+    writes a block the moment the incremental planner can prove the
+    block's right border matches what ``plan_block_bounds`` would pick on
+    the full kept set: a border ``t1`` (the first kept point
+    ``>= t0 + block_len``) commits once some kept point ``>= t1 + L``
+    has been seen, which rules the tail-merge clamp out.  ``close()``
+    plans the remaining tail with the full rule and finalizes the catalog
+    entry; the result is byte-identical to the one-shot path.
+
+    Freshly written blocks get *per-block* cache invalidation (they are
+    new keys — existing cached blocks of the series stay valid, unlike
+    ``append_series``'s wholesale invalidation of a replaced series).
+
+    State held: the kept points past the last committed border, the raw
+    originals over the same span (residual metadata), and the contiguity
+    cursor — O(block_len + window).  ``_stash()`` round-trips all of it
+    (plus an opaque ``state_provider()`` client blob) through the footer
+    JSON bit-exactly for ``resume``.
+    """
+
+    def __init__(self, store: CameoStore, sid: str, cfg, *, dtype: str,
+                 with_resid: bool, entry: dict, stash: dict = None):
+        self._store = store
+        self.sid = sid
+        self.cfg = cfg
+        self.dtype = np.dtype(dtype)
+        self.with_resid = bool(with_resid)
+        self._entry = entry
+        self._block_len = max(int(store.block_len), int(cfg.lags))
+        self._closed = False
+        self.state_provider = None        # callable -> JSON-safe blob
+        self.restored_client_state = None
+        # pending state: consolidated arrays + unconsolidated append parts
+        # (appends go to the lists; concatenation is deferred until a block
+        # border is actually provable, so tiny-chunk feeds stay O(1)
+        # amortized instead of re-copying the pending buffers every push)
+        self._idx_parts: List[np.ndarray] = []
+        self._val_parts: List[np.ndarray] = []
+        self._x_parts: List[np.ndarray] = []
+        if stash is None:
+            self._kept_idx = np.empty(0, np.int64)
+            self._kept_vals = np.empty(0, self.dtype)
+            self._x = np.empty(0, np.float64)
+            self._x_off = 0          # absolute index of _x[0]
+            self._next = None        # expected start of the next append
+            self._bound = None       # last committed block border
+            self._committed = 0      # kept points strictly inside coverage
+            self._total_kept = 0     # unique kept points seen
+        else:
+            self._kept_idx = np.asarray(stash["kept_idx"], np.int64)
+            self._kept_vals = np.asarray(stash["kept_vals"],
+                                         np.float64).astype(self.dtype)
+            self._x = np.asarray(stash["x"], np.float64)
+            self._x_off = int(stash["x_off"])
+            self._next = None if stash["next"] is None else int(stash["next"])
+            self._bound = (None if stash["bound"] is None
+                           else int(stash["bound"]))
+            self._committed = int(stash["committed"])
+            self._total_kept = int(stash["total_kept"])
+            self.restored_client_state = stash.get("client")
+        self._first_kept = (int(self._kept_idx[0])
+                            if self._kept_idx.shape[0] else None)
+        self._last_kept = (int(self._kept_idx[-1])
+                           if self._kept_idx.shape[0] else None)
+
+    # -- lifecycle -----------------------------------------------------------
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        # finalize only on clean exit: an exception mid-feed must leave the
+        # stream incomplete (and hence resumable), not truncate it into a
+        # series that claims to be whole
+        if exc[0] is None and not self._closed:
+            self.close()
+
+    def flush(self):
+        """Make the ingested prefix durable (rewrites the store footer,
+        embedding this session's resume state)."""
+        self._store.flush()
+
+    # -- ingest --------------------------------------------------------------
+
+    def append_window(self, w) -> None:
+        """Absorb one closed stream window (``core/streaming.WindowResult``
+        or anything with ``.start``, ``.x``, ``.kept``)."""
+        self.append(w.start, w.x, w.kept)
+
+    def append(self, start: int, x, kept) -> None:
+        """Absorb the contiguous window ``x`` at absolute index ``start``
+        with its kept mask; writes every block whose border is provable."""
+        if self._closed:
+            raise ValueError(f"stream session for {self.sid!r} is closed")
+        x = np.asarray(x)
+        kept = np.asarray(kept, bool)
+        if x.shape != kept.shape or x.ndim != 1:
+            raise ValueError(f"window shapes disagree: x {x.shape} vs "
+                             f"kept {kept.shape}")
+        if self._next is not None and int(start) != self._next:
+            raise ValueError(f"non-contiguous append: expected index "
+                             f"{self._next}, got {start}")
+        if self._next is None:
+            self._x_off = int(start)
+        self._next = int(start) + x.shape[0]
+        idx = int(start) + np.flatnonzero(kept)
+        if idx.shape[0]:
+            self._idx_parts.append(idx)
+            self._val_parts.append(x[kept].astype(self.dtype))
+            if self._first_kept is None:
+                self._first_kept = int(idx[0])
+            self._last_kept = int(idx[-1])
+            self._total_kept += int(idx.shape[0])
+        if self.with_resid:
+            self._x_parts.append(np.asarray(x, np.float64))
+        self._commit_ready()
+
+    def _consolidate(self) -> None:
+        if self._idx_parts:
+            self._kept_idx = np.concatenate(
+                [self._kept_idx] + self._idx_parts)
+            self._kept_vals = np.concatenate(
+                [self._kept_vals] + self._val_parts)
+            self._idx_parts, self._val_parts = [], []
+        if self._x_parts:
+            self._x = np.concatenate([self._x] + self._x_parts)
+            self._x_parts = []
+
+    def _commit_ready(self) -> None:
+        L = int(self.cfg.lags)
+        t0 = self._first_kept if self._bound is None else self._bound
+        if (self._last_kept is None or t0 is None
+                or self._last_kept < t0 + self._block_len + L):
+            return        # no border provable yet; keep buffering parts
+        self._consolidate()
+        while True:
+            kept = self._kept_idx
+            if kept.shape[0] == 0:
+                return
+            t0 = int(kept[0]) if self._bound is None else self._bound
+            j = int(np.searchsorted(kept, t0 + self._block_len, "left"))
+            if j >= kept.shape[0]:
+                return
+            t1 = int(kept[j])
+            if int(kept[-1]) < t1 + L:
+                return        # tail-merge clamp not ruled out yet
+            self._emit(j, t1, is_last=False)
+
+    def _emit(self, j: int, t1: int, is_last: bool) -> None:
+        kept, vals = self._kept_idx, self._kept_vals
+        if not is_last:
+            kept, vals = kept[:j + 1], vals[:j + 1]
+        t0 = int(kept[0])
+        o1 = t1 + 1 if is_last else t1
+        owned_xr = reconstruct_block(kept - t0, vals, t1 - t0 + 1,
+                                     str(self.dtype))[:o1 - t0]
+        resid = None
+        if self.with_resid:
+            resid = self._x[t0 - self._x_off:o1 - self._x_off] - owned_xr
+        cfg = self.cfg
+        store = self._store
+        body, binfo = build_block(
+            kept, vals, t0=t0, t1=t1, is_last=is_last, owned_xr=owned_xr,
+            L=cfg.lags, kappa=cfg.kappa, stat=cfg.stat, eps=cfg.eps,
+            resid=resid, value_codec=store.value_codec,
+            entropy=store.entropy, meta_version=store.version)
+        off = store._append_body(body)
+        e = self._entry
+        bi = len(e["blocks"])
+        e["blocks"].append(dict(offset=off, nbytes=len(body), t0=t0, t1=t1))
+        e["stored_nbytes"] += 4 + len(body)
+        e["payload_nbytes"] += binfo["payload_nbytes"]
+        e["meta_nbytes"] += binfo["meta_nbytes"]
+        e["meta_raw_nbytes"] += binfo["meta_raw_nbytes"]
+        # per-append invalidation: only the new block's (never-yet-cached)
+        # key — previously decoded blocks of this series stay valid
+        store._cache.drop((self.sid, bi))
+        store._metas.pop((self.sid, bi), None)
+        if is_last:
+            self._committed = self._total_kept
+            self._kept_idx = self._kept_idx[:0]
+            self._kept_vals = self._kept_vals[:0]
+            self._x = self._x[:0]
+            e["n"] = t1 + 1
+        else:
+            self._committed += j
+            self._kept_idx = self._kept_idx[j:]
+            self._kept_vals = self._kept_vals[j:]
+            if self.with_resid:
+                self._x = self._x[t1 - self._x_off:]
+            self._x_off = t1
+            self._bound = t1
+            e["n"] = t1
+        e["n_kept"] = self._committed
+
+    # -- finalize ------------------------------------------------------------
+
+    def close(self, deviation: float = 0.0) -> dict:
+        """Write the tail blocks (full ``plan_block_bounds`` rule, the last
+        one owning the stream's end point), finalize the catalog entry to
+        the exact one-shot form, and return it.  ``deviation`` is recorded
+        in the catalog (the serving layer passes the streaming compressor's
+        exact measured global deviation)."""
+        if self._closed:
+            raise ValueError(f"stream session for {self.sid!r} already "
+                             "closed")
+        if self._total_kept < 2:
+            raise ValueError("a stored series needs at least 2 kept points")
+        self._consolidate()
+        # tail planning is the planner itself, not a re-implementation: the
+        # pending kept set starts at the last committed border (or the first
+        # kept point), and the greedy rule only ever looks forward, so
+        # planning the suffix reproduces the whole-series plan's tail —
+        # which is what keeps streamed files byte-identical to one-shot
+        bounds = plan_block_bounds(self._kept_idx, self._block_len,
+                                   int(self.cfg.lags))
+        last = int(bounds[-1])
+        for bi in range(len(bounds) - 1):
+            t1 = int(bounds[bi + 1])
+            j = int(np.searchsorted(self._kept_idx, t1, "left"))
+            self._emit(j, t1, is_last=(bi == len(bounds) - 2))
+        self._store._f.flush()
+        e = self._entry
+        e["n"] = last + 1
+        e["n_kept"] = self._total_kept
+        e["deviation"] = float(deviation)
+        e.pop("streaming", None)
+        e.pop("stream_state", None)
+        # canonical key order — the finalized entry (hence the final footer
+        # bytes) must match append_series's one-shot form exactly
+        final = {k: e[k] for k in (
+            "n", "n_kept", "dtype", "eps", "stat", "lags", "kappa",
+            "deviation", "value_codec", "stored_nbytes", "payload_nbytes",
+            "meta_nbytes", "meta_raw_nbytes", "has_resid", "blocks")}
+        self._entry = final
+        self._store._series[self.sid] = final
+        self._store._streams.pop(self.sid, None)
+        self._closed = True
+        return final
+
+    # -- resume support ------------------------------------------------------
+
+    def _stash(self) -> dict:
+        """JSON-safe session state for the footer (floats round-trip via
+        repr, so the resume is bit-exact)."""
+        self._consolidate()
+        return dict(
+            dtype=str(self.dtype), with_resid=self.with_resid,
+            bound=self._bound, next=self._next, x_off=self._x_off,
+            committed=self._committed, total_kept=self._total_kept,
+            kept_idx=[int(i) for i in self._kept_idx],
+            kept_vals=[float(v) for v in self._kept_vals],
+            x=[float(v) for v in self._x],
+            client=(self.state_provider() if self.state_provider is not None
+                    else None))

@@ -1,0 +1,649 @@
+"""Streaming CAMEO ingest — the differential harness.
+
+The contract under test (see ``core/streaming`` / ``store.open_stream``):
+for *any* chunking of the input feed, the streaming path produces kept
+masks, reconstructions, deviations and **store bytes** identical to the
+one-shot windowed path (``compress_windowed`` + ``append_series``), across
+window/block boundaries, eps/kappa settings, mid-stream flushes and
+resume-after-close (``mode="a"``) sessions.  Satellites: pushdown answers
+over a streamed store agree with the one-shot store across different
+blockings, and the decoded-block LRU stays exact under interleaved
+append/read soak.
+"""
+import os
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from conftest import hypothesis_or_stubs
+from repro.core.acf import acf, aggregate_series
+from repro.core import measures
+from repro.core.cameo import CameoConfig, compress
+from repro.core.streaming import (RunningAggregates, StreamingCompressor,
+                                  compress_windowed, min_window_len)
+from repro.serving.ts_service import TimeSeriesService, TsServiceConfig
+from repro.store import query as squery
+from repro.store.store import CameoStore
+
+given, settings, st = hypothesis_or_stubs()
+
+CFG = CameoConfig(eps=2e-2, lags=8, mode="rounds", max_rounds=60,
+                  dtype="float64")
+W = 256     # stream window used throughout (keeps jit shapes few)
+
+
+def _series(n, seed=0, offset=0.0):
+    rng = np.random.default_rng(seed)
+    t = np.arange(n)
+    return (3 * np.sin(2 * np.pi * t / 24) + np.sin(2 * np.pi * t / 168)
+            + 0.2 * rng.standard_normal(n) + offset)
+
+
+def _stream(x, cfg, wlen, cuts):
+    """Feed ``x`` split at ``cuts`` through a StreamingCompressor; returns
+    (kept, xr, deviation, windows)."""
+    sc = StreamingCompressor(cfg, wlen)
+    wins = []
+    for chunk in np.split(x, sorted(cuts)):
+        wins += sc.push(chunk)
+    wins += sc.finish()
+    kept = np.concatenate([w.kept for w in wins]) if wins else np.empty(0)
+    xr = np.concatenate([w.xr for w in wins]) if wins else np.empty(0)
+    return kept, xr, sc.deviation(), wins
+
+
+# ---------------------------------------------------------------------------
+# tentpole: chunking invariance, bit-exact vs the one-shot windowed path
+# ---------------------------------------------------------------------------
+
+@given(st.integers(0, 2**32 - 1),
+       st.lists(st.integers(0, 640), max_size=6),
+       st.sampled_from([512, 515, 640]),     # tails: none / verbatim / short
+       st.sampled_from([2e-2, 1e-3]))
+@settings(max_examples=12, deadline=None)
+def test_chunking_invariance_bit_exact(seed, cuts, n, eps):
+    """Any push() chunking — including empty and 1-point chunks — produces
+    masks/reconstructions/deviation bit-identical to compress_windowed."""
+    x = _series(n, seed=seed % 1000)
+    cfg = CameoConfig(eps=float(eps), lags=8, mode="rounds", max_rounds=60,
+                      dtype="float64")
+    ref = compress_windowed(x, cfg, W)
+    kept, xr, dev, _ = _stream(x, cfg, W, [min(c, n) for c in cuts])
+    assert np.array_equal(kept, np.asarray(ref.kept))
+    assert np.array_equal(xr.view(np.uint64),
+                          np.asarray(ref.xr).view(np.uint64))
+    assert dev == float(ref.deviation)
+
+
+def test_windows_equal_oneshot_compress_per_slice():
+    """Each full window's mask/xr is bit-identical to compress() on that
+    slice — the tie back to the paper path."""
+    x = _series(640, seed=3)
+    _, _, _, wins = _stream(x, CFG, W, [100, 400])
+    for w in wins[:2]:      # full windows (the tail is the short-path)
+        ref = compress(jnp.asarray(x[w.start:w.start + W]), CFG)
+        assert np.array_equal(w.kept, np.asarray(ref.kept))
+        assert np.array_equal(w.xr.view(np.uint64),
+                              np.asarray(ref.xr).view(np.uint64))
+        assert w.n_kept == int(ref.n_kept)
+    # the 128-point tail window compresses too (ny >= L+2)
+    assert wins[2].x.shape[0] == 128 and wins[2].n_kept < 128
+
+
+def test_single_window_equals_full_compress():
+    """window_len >= n: streaming reproduces one-shot compress(x) exactly,
+    for any chunking."""
+    x = _series(512, seed=5)
+    ref = compress(jnp.asarray(x), CFG)
+    for cuts in ([], [7], [1, 2, 3, 500]):
+        kept, xr, _, _ = _stream(x, CFG, 512, cuts)
+        assert np.array_equal(kept, np.asarray(ref.kept))
+        assert np.array_equal(xr.view(np.uint64),
+                              np.asarray(ref.xr).view(np.uint64))
+
+
+def test_sequential_mode_streams_too():
+    cfg = CameoConfig(eps=2e-2, lags=8, mode="sequential", hops=8,
+                      window=32, dtype="float64")
+    x = _series(400, seed=7)
+    ref = compress_windowed(x, cfg, 200)
+    kept, xr, dev, wins = _stream(x, cfg, 200, [33, 340])
+    assert np.array_equal(kept, np.asarray(ref.kept))
+    assert np.array_equal(xr.view(np.uint64),
+                          np.asarray(ref.xr).view(np.uint64))
+    r0 = compress(jnp.asarray(x[:200]), cfg)
+    assert np.array_equal(wins[0].kept, np.asarray(r0.kept))
+
+
+def test_kappa_streaming_and_verbatim_tail():
+    cfg = CameoConfig(eps=5e-2, lags=6, kappa=4, mode="rounds",
+                      max_rounds=60, dtype="float64")
+    n = 512 + 17        # tail 17: ndiv=16, ny=4 < L+2 -> verbatim
+    x = _series(n, seed=11)
+    assert min_window_len(cfg) <= 256
+    ref = compress_windowed(x, cfg, 256)
+    kept, xr, dev, wins = _stream(x, cfg, 256, [3, 259, 400])
+    assert np.array_equal(kept, np.asarray(ref.kept))
+    assert np.array_equal(xr.view(np.uint64),
+                          np.asarray(ref.xr).view(np.uint64))
+    assert dev == float(ref.deviation)
+    # verbatim tail: every point kept, reconstruction == original
+    assert wins[-1].x.shape[0] == 17 and wins[-1].kept.all()
+    # per-window tie for kappa mode
+    r0 = compress(jnp.asarray(x[:256]), cfg)
+    assert np.array_equal(wins[0].kept, np.asarray(r0.kept))
+
+
+def test_streaming_deviation_matches_direct_acf():
+    """The incremental Eq. 7 global accounting equals a from-scratch ACF of
+    the assembled reconstruction — finalized AND mid-stream (the pending
+    window's lag pairs are folded on the fly)."""
+    for kappa in (1, 4):
+        cfg = CameoConfig(eps=2e-2, lags=8, kappa=kappa, mode="rounds",
+                          max_rounds=60, dtype="float64")
+        n = 1024
+        x = _series(n, seed=13)
+        sc = StreamingCompressor(cfg, 256)
+        wins = sc.push(x[:768])
+        # mid-stream: exact over the closed-window prefix
+        xr_pre = np.concatenate([w.xr for w in wins])
+        np_pre = (xr_pre.shape[0] // kappa) * kappa
+        y0p = aggregate_series(jnp.asarray(x[:np_pre]), kappa)
+        y1p = aggregate_series(jnp.asarray(xr_pre[:np_pre]), kappa)
+        direct_pre = float(measures.mae(acf(y1p, cfg.lags),
+                                        acf(y0p, cfg.lags)))
+        assert abs(sc.deviation() - direct_pre) < 1e-9
+        wins += sc.push(x[768:]) + sc.finish()
+        dev = sc.deviation()
+        xr = np.concatenate([w.xr for w in wins])
+        y0 = aggregate_series(jnp.asarray(x), kappa)
+        y1 = aggregate_series(jnp.asarray(xr), kappa)
+        direct = float(measures.mae(acf(y1, cfg.lags), acf(y0, cfg.lags)))
+        assert abs(dev - direct) < 1e-9
+        # per-window eps guarantee held everywhere the window compressed
+        assert dev < 10 * cfg.eps      # sanity: global stays near budget
+
+
+def test_running_aggregates_match_batch_extraction():
+    from repro.core.acf import extract_aggregates
+    rng = np.random.default_rng(17)
+    y = rng.standard_normal(500)
+    ra = RunningAggregates(12)
+    for c in np.split(y, [120, 260, 490]):
+        ra.append(c)
+    ra.finalize()
+    got = ra.aggregates()
+    want = extract_aggregates(jnp.asarray(y), 12)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                   rtol=1e-12, atol=1e-9)
+
+
+def test_streaming_compressor_validation():
+    with pytest.raises(ValueError, match="divisible"):
+        StreamingCompressor(CameoConfig(kappa=3), 256)
+    with pytest.raises(ValueError, match="shorter than the minimum"):
+        StreamingCompressor(CameoConfig(lags=200), 128)
+    sc = StreamingCompressor(CFG, 256)
+    sc.push(_series(100))
+    sc.finish()
+    with pytest.raises(ValueError, match="finished"):
+        sc.push(np.zeros(3))
+
+
+# ---------------------------------------------------------------------------
+# tentpole: streamed store bytes == one-shot store bytes
+# ---------------------------------------------------------------------------
+
+def _write_oneshot(path, x, cfg, wlen, block_len):
+    ref = compress_windowed(x, cfg, wlen)
+    with CameoStore.create(path, block_len=block_len) as s:
+        s.append_series("s", ref, cfg, x=x)
+    return ref
+
+
+def _write_streamed(path, x, cfg, wlen, block_len, cuts, reopen_at=()):
+    """Stream ``x`` into ``path``; optionally close+reopen the store (with
+    state stashed in the footer) after the chunks listed in ``reopen_at``."""
+    sc = StreamingCompressor(cfg, wlen)
+    store = CameoStore.create(path, block_len=block_len)
+    sess = store.open_stream("s", cfg)
+    sess.state_provider = sc.state_dict
+    for ci, chunk in enumerate(np.split(x, sorted(cuts))):
+        for w in sc.push(chunk):
+            sess.append_window(w)
+        if ci in reopen_at:
+            store.close()
+            store = CameoStore.open(path, "a")
+            sess = store.open_stream("s", cfg, resume=True)
+            sc = StreamingCompressor.from_state(
+                cfg, sess.restored_client_state)
+            sess.state_provider = sc.state_dict
+    for w in sc.finish():
+        sess.append_window(w)
+    sess.close(deviation=sc.deviation())
+    store.close()
+
+
+@given(st.integers(0, 2**32 - 1),
+       st.lists(st.integers(0, 1280), max_size=5),
+       st.sampled_from([192, 256, 512]))
+@settings(max_examples=8, deadline=None)
+def test_streamed_store_bytes_equal_oneshot(seed, cuts, block_len):
+    """The acceptance criterion at the physical layer: for any chunking,
+    the streamed store file is byte-identical to the one-shot write."""
+    import tempfile
+    x = _series(1280, seed=seed % 1000, offset=5.0)
+    with tempfile.TemporaryDirectory() as tmp:
+        p1, p2 = os.path.join(tmp, "a.cameo"), os.path.join(tmp, "b.cameo")
+        _write_oneshot(p1, x, CFG, W, block_len)
+        _write_streamed(p2, x, CFG, W, block_len,
+                        [min(c, len(x)) for c in cuts])
+        with open(p1, "rb") as f1, open(p2, "rb") as f2:
+            assert f1.read() == f2.read()
+
+
+def test_resume_after_close_bit_exact(tmp_path):
+    """mode="a" resume: close the store mid-stream (state stashed in the
+    footer), reopen, continue — the final file is byte-identical to an
+    uninterrupted run, wherever the interruption lands."""
+    x = _series(1280, seed=23, offset=2.0)
+    p_ref = str(tmp_path / "ref.cameo")
+    _write_oneshot(p_ref, x, CFG, W, 200)
+    with open(p_ref, "rb") as f:
+        want = f.read()
+    cuts = [150, 400, 700, 1000]
+    for reopen_at in ([0], [2], [0, 1, 2, 3]):
+        p = str(tmp_path / f"r{reopen_at[0]}_{len(reopen_at)}.cameo")
+        _write_streamed(p, x, CFG, W, 200, cuts, reopen_at=reopen_at)
+        with open(p, "rb") as f:
+            assert f.read() == want, f"reopen_at={reopen_at}"
+
+
+def test_midstream_flush_serves_readable_prefix(tmp_path):
+    """flush() makes the written prefix durable and readable by a second
+    (read-only) handle while the stream keeps appending."""
+    x = _series(1024, seed=29)
+    ref = compress_windowed(x, CFG, W)
+    refxr = np.asarray(ref.xr)
+    p = str(tmp_path / "mid.cameo")
+    sc = StreamingCompressor(CFG, W)
+    store = CameoStore.create(p, block_len=128)
+    sess = store.open_stream("s", CFG)
+    for w in sc.push(x[:700]):
+        sess.append_window(w)
+    sess.flush()
+    reader = CameoStore.open(p)          # separate handle, footer present
+    n_cov = reader.series_meta("s")["n"]
+    assert 0 < n_cov <= 700
+    got = reader.read_window("s", 0, n_cov)
+    assert np.array_equal(got.view(np.uint64),
+                          refxr[:n_cov].view(np.uint64))
+    ki, kv = reader.read_kept("s")
+    assert np.array_equal(ki, np.flatnonzero(np.asarray(ref.kept)[:n_cov]))
+    v, b = squery.window_mean(reader, "s", 0, n_cov)
+    assert abs(v - x[:n_cov].mean()) <= b
+    # the writer keeps going after the flush (footer truncated first)
+    for w in sc.push(x[700:]) + sc.finish():
+        sess.append_window(w)
+    sess.close(deviation=sc.deviation())
+    store.close()
+    final = CameoStore.open(p)
+    assert np.array_equal(final.read_series("s").view(np.uint64),
+                          refxr.view(np.uint64))
+    assert np.array_equal(final.kept_mask("s"), np.asarray(ref.kept))
+
+
+def test_stream_session_validation(tmp_path):
+    x = _series(600, seed=31)
+    p = str(tmp_path / "v.cameo")
+    store = CameoStore.create(p, block_len=128)
+    sess = store.open_stream("s", CFG)
+    with pytest.raises(ValueError, match="already stored"):
+        store.open_stream("s", CFG)
+    sc = StreamingCompressor(CFG, W)
+    for w in sc.push(x):
+        sess.append_window(w)
+    with pytest.raises(ValueError, match="non-contiguous"):
+        sess.append(999, x[:10], np.ones(10, bool))
+    with pytest.raises(ValueError, match="no incomplete stream"):
+        store.open_stream("t", CFG, resume=True)
+    for w in sc.finish():
+        sess.append_window(w)
+    sess.close()
+    with pytest.raises(ValueError, match="closed"):
+        sess.append(600, x[:10], np.ones(10, bool))
+    store.close()
+    with pytest.raises(ValueError, match="no incomplete stream"):
+        CameoStore.open(p, "a").open_stream("s", CFG, resume=True)
+
+
+def test_exception_mid_feed_leaves_stream_resumable(tmp_path):
+    """An exception inside the session context must NOT finalize the
+    series — the feed is incomplete and has to stay resumable."""
+    x = _series(1280, seed=53)
+    p = str(tmp_path / "exc.cameo")
+    p_ref = str(tmp_path / "ref.cameo")
+    _write_oneshot(p_ref, x, CFG, W, 200)
+    sc = StreamingCompressor(CFG, W)
+    store = CameoStore.create(p, block_len=200)
+    with pytest.raises(RuntimeError, match="feed died"):
+        with store.open_stream("s", CFG) as sess:
+            for w in sc.push(x[:900]):
+                sess.append_window(w)
+            raise RuntimeError("feed died")
+    assert store.series_meta("s").get("streaming"), \
+        "exception must not finalize the stream"
+    store.close()                    # stashes the incomplete session
+    store = CameoStore.open(p, "a")
+    sess = store.open_stream("s", CFG, resume=True)
+    for w in sc.push(x[900:]) + sc.finish():
+        sess.append_window(w)
+    sess.close(deviation=sc.deviation())
+    store.close()
+    with open(p, "rb") as f1, open(p_ref, "rb") as f2:
+        assert f1.read() == f2.read()
+
+
+def test_reopen_append_keeps_footer_until_first_write(tmp_path):
+    """mode="a" must not truncate the footer eagerly: a crash between the
+    reopen and the first new write loses nothing."""
+    x = _series(640, seed=59)
+    p = str(tmp_path / "keep.cameo")
+    _write_oneshot(p, x, CFG, W, 256)
+    with open(p, "rb") as f:
+        before = f.read()
+    w = CameoStore.open(p, "a")      # reopen for append...
+    # ...and "crash" (no writes, no close): the on-disk file is untouched
+    with open(p, "rb") as f:
+        assert f.read() == before
+    r = CameoStore.open(p)           # still a fully valid store
+    assert np.array_equal(r.kept_mask("s"),
+                          np.asarray(compress_windowed(x, CFG, W).kept))
+    w.close()                        # clean close rewrites the same footer
+    with open(p, "rb") as f:
+        assert f.read() == before
+
+
+def test_service_resume_unwinds_on_missing_client_state(tmp_path):
+    """ingest_stream(resume=True) on a stream written through the raw store
+    API must fail cleanly: the stash is restored and the session slot is
+    freed, so a raw-store resume still works afterwards."""
+    x = _series(900, seed=61)
+    cfg = CFG
+    p = str(tmp_path / "raw.cameo")
+    sc = StreamingCompressor(cfg, W)
+    store = CameoStore.create(p, block_len=128)
+    sess = store.open_stream("s", cfg)   # no state_provider attached
+    for w in sc.push(x[:600]):
+        sess.append_window(w)
+    store.close()
+    svc = TimeSeriesService(p, cfg, TsServiceConfig(block_len=128),
+                            resume=True)
+    with pytest.raises(ValueError, match="no compressor state"):
+        svc.ingest_stream("s", resume=True)
+    sess = svc.store.open_stream("s", cfg, resume=True)   # slot is free
+    for w in sc.push(x[600:]) + sc.finish():
+        sess.append_window(w)
+    sess.close(deviation=sc.deviation())
+    svc.close()
+    r = CameoStore.open(p)
+    ref = compress_windowed(x, cfg, W)
+    assert np.array_equal(r.read_series("s").view(np.uint64),
+                          np.asarray(ref.xr).view(np.uint64))
+
+
+def test_resume_cfg_mismatch_preserves_stash(tmp_path):
+    """A resume attempt with the wrong cfg must fail without consuming the
+    stashed state — retrying with the right cfg succeeds."""
+    import dataclasses
+    x = _series(900, seed=73)
+    p = str(tmp_path / "cfg.cameo")
+    sc = StreamingCompressor(CFG, W)
+    store = CameoStore.create(p, block_len=128)
+    sess = store.open_stream("s", CFG)
+    for w in sc.push(x[:600]):
+        sess.append_window(w)
+    store.close()
+    store = CameoStore.open(p, "a")
+    wrong = dataclasses.replace(CFG, eps=0.5)
+    with pytest.raises(ValueError, match="cfg mismatch"):
+        store.open_stream("s", wrong, resume=True)
+    sess = store.open_stream("s", CFG, resume=True)   # stash intact
+    for w in sc.push(x[600:]) + sc.finish():
+        sess.append_window(w)
+    sess.close(deviation=sc.deviation())
+    store.close()
+    ref = compress_windowed(x, CFG, W)
+    r = CameoStore.open(p)
+    assert np.array_equal(r.read_series("s").view(np.uint64),
+                          np.asarray(ref.xr).view(np.uint64))
+
+
+def test_read_kept_empty_before_first_block(tmp_path):
+    p = str(tmp_path / "empty.cameo")
+    store = CameoStore.create(p, block_len=4096)
+    sess = store.open_stream("s", CFG)
+    x = _series(64, seed=67)
+    sess.append(0, x, np.ones(64, bool))     # far short of a block border
+    ki, kv = store.read_kept("s")
+    assert ki.shape == (0,) and kv.shape == (0,)
+    assert store.kept_mask("s").shape == (0,)
+    assert store.read_window("s", 0, 10).shape == (0,)
+
+
+def test_arbitrary_mask_point_by_point_equals_oneshot(tmp_path):
+    """Mask-level differential, independent of the compressor: any kept
+    mask fed through the session one point at a time produces the same
+    store bytes as a one-shot append_series of that mask."""
+    rng = np.random.default_rng(71)
+    n = 1500
+    x = _series(n, seed=71)
+    kept = rng.random(n) < 0.3
+    kept[0] = kept[-1] = True
+    p1 = str(tmp_path / "one.cameo")
+    p2 = str(tmp_path / "pp.cameo")
+
+    class _R:
+        def __init__(self):
+            self.kept = jnp.asarray(kept)
+            self.xr = jnp.asarray(x)
+            self.deviation = 0.0
+
+    with CameoStore.create(p1, block_len=256) as s:
+        s.append_series("s", _R(), CFG, x=x)
+    with CameoStore.create(p2, block_len=256) as s:
+        sess = s.open_stream("s", CFG)
+        for i in range(n):
+            sess.append(i, x[i:i + 1], kept[i:i + 1])
+        sess.close()
+    with open(p1, "rb") as f1, open(p2, "rb") as f2:
+        assert f1.read() == f2.read()
+
+
+# ---------------------------------------------------------------------------
+# satellite: pushdown answers agree across blockings (streamed vs one-shot)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def pushdown_pair(tmp_path_factory):
+    """The same stream written twice with *different* block lengths: the
+    streamed store's block borders land elsewhere, so windows straddle
+    different boundaries — answers must still agree within stated bounds."""
+    x = _series(2048, seed=37, offset=5.0)
+    d = tmp_path_factory.mktemp("pushdown")
+    p1, p2 = str(d / "one.cameo"), str(d / "str.cameo")
+    _write_oneshot(p1, x, CFG, W, 320)
+    _write_streamed(p2, x, CFG, W, 192, [97, 513, 1025, 1700])
+    return CameoStore.open(p1), CameoStore.open(p2), x
+
+
+@given(st.integers(0, 2**32 - 1))
+@settings(max_examples=20, deadline=None)
+def test_pushdown_differential_streamed_vs_oneshot(pushdown_pair, seed):
+    one, strm, x = pushdown_pair
+    rng = np.random.default_rng(seed)
+    n = len(x)
+    a = int(rng.integers(0, n - 64))
+    b = int(rng.integers(a + 40, n + 1))
+    for kind in ("sum", "mean", "var"):
+        v1, b1 = squery.query(one, "s", kind, a, b)
+        v2, b2 = squery.query(strm, "s", kind, a, b)
+        assert abs(v1 - v2) <= b1 + b2, (kind, a, b)
+        truth = dict(sum=x[a:b].sum(), mean=x[a:b].mean(),
+                     var=x[a:b].var())[kind]
+        assert abs(v2 - truth) <= b2, (kind, a, b)
+    if b - a > CFG.lags + 1:
+        v1, b1 = squery.window_acf(one, "s", a, b)
+        v2, b2 = squery.window_acf(strm, "s", a, b)
+        assert np.all(np.abs(v1 - v2) <= b1 + b2), (a, b)
+
+
+def test_pushdown_streamed_blocks_straddled(pushdown_pair):
+    """Deterministic boundary cases: windows that start/end exactly on and
+    one point around every streamed block border."""
+    one, strm, x = pushdown_pair
+    metas = strm.block_metas("s")
+    assert len(metas) > 3, "fixture must have several streamed blocks"
+    for m in metas[1:-1]:
+        for a, b in ((m.t0 - 1, m.t1 + 2), (m.t0, m.t1 + 1),
+                     (m.t0 + 1, m.t1)):
+            v, bound = squery.window_sum(strm, "s", a, b)
+            assert abs(v - x[a:b].sum()) <= bound
+            v1, b1 = squery.window_sum(one, "s", a, b)
+            assert abs(v - v1) <= bound + b1
+
+
+# ---------------------------------------------------------------------------
+# satellite: decoded-block LRU soak under interleaved append/read
+# ---------------------------------------------------------------------------
+
+def _cache_exact(store):
+    c = store._cache
+    assert c.nbytes == sum(e[4] for e in c._d.values()), \
+        "LRU byte accounting drifted"
+    assert c.nbytes <= max(c.budget, 0) or not c._d
+
+
+def test_cache_soak_interleaved_append_read(tmp_path):
+    """Interleave streamed appends with window reads + pushdown queries:
+    the LRU must never serve a stale reconstruction and its byte accounting
+    stays exact after every operation (per-append invalidation regression
+    guard)."""
+    x = _series(2048, seed=41, offset=3.0)
+    ref = compress_windowed(x, CFG, W)
+    refxr = np.asarray(ref.xr)
+    p = str(tmp_path / "soak.cameo")
+    rng = np.random.default_rng(5)
+    sc = StreamingCompressor(CFG, W)
+    store = CameoStore.create(p, block_len=160, cache_bytes=1 << 20)
+    sess = store.open_stream("s", CFG)
+    reads = 0
+    for chunk in np.split(x, [97, 300, 515, 700, 1025, 1400, 1800]):
+        for w in sc.push(chunk):
+            sess.append_window(w)
+        _cache_exact(store)
+        n_cov = store.series_meta("s")["n"]
+        for _ in range(3):
+            if n_cov < 4:
+                break
+            a = int(rng.integers(0, n_cov - 2))
+            b = int(rng.integers(a + 1, n_cov + 1))
+            got = store.read_window("s", a, b)
+            assert np.array_equal(got.view(np.uint64),
+                                  refxr[a:b].view(np.uint64)), (a, b)
+            _cache_exact(store)
+            reads += 1
+        if n_cov > 64:
+            v, bnd = squery.window_mean(store, "s", 0, n_cov)
+            assert abs(v - x[:n_cov].mean()) <= bnd
+            _cache_exact(store)
+    for w in sc.finish():
+        sess.append_window(w)
+    sess.close(deviation=sc.deviation())
+    _cache_exact(store)
+    assert reads > 10
+    stats = store.cache_stats()
+    assert stats["hits"] > 0, "soak must exercise cache hits"
+    got = store.read_series("s")
+    assert np.array_equal(got.view(np.uint64), refxr.view(np.uint64))
+    assert np.array_equal(store.kept_mask("s"), np.asarray(ref.kept))
+    store.close()
+
+
+# ---------------------------------------------------------------------------
+# O(window) state + the service-level ingest_stream API
+# ---------------------------------------------------------------------------
+
+def test_stream_state_stays_bounded(tmp_path):
+    """The compressor buffer and the session's pending buffers stay
+    O(window + block) no matter how long the feed runs."""
+    cfg = CameoConfig(eps=2e-2, lags=8, mode="rounds", max_rounds=40,
+                      dtype="float64")
+    p = str(tmp_path / "b.cameo")
+    store = CameoStore.create(p, block_len=128)
+    sess = store.open_stream("s", cfg)
+    sc = StreamingCompressor(cfg, 256)
+    cap = 128 + 2 * 256 + 64        # block + 2 windows + slack
+    rng = np.random.default_rng(43)
+    fed = 0
+    while fed < 6000:
+        chunk = rng.standard_normal(int(rng.integers(1, 300)))
+        fed += len(chunk)
+        for w in sc.push(chunk):
+            sess.append_window(w)
+        assert sc._buf.shape[0] < 256 + 300
+        pending_x = sess._x.shape[0] + sum(p.shape[0]
+                                           for p in sess._x_parts)
+        pending_kept = sess._kept_idx.shape[0] + sum(
+            p.shape[0] for p in sess._idx_parts)
+        assert pending_x <= cap
+        assert pending_kept <= cap
+    assert len(store.series_meta("s")["blocks"]) > 10
+    for w in sc.finish():
+        sess.append_window(w)
+    sess.close()
+    store.close()
+
+
+def test_service_ingest_stream_end_to_end(tmp_path):
+    """ingest_stream == one-shot windowed path, queries mid-stream work,
+    and service close/reopen resumes bit-exactly."""
+    x = _series(2000, seed=47)
+    cfg = CameoConfig(eps=2e-2, lags=8, mode="rounds", max_rounds=60,
+                      dtype="float64")
+    scfg = TsServiceConfig(block_len=256, stream_window=512)
+    p = str(tmp_path / "svc.cameo")
+    svc = TimeSeriesService(p, cfg, scfg)
+    h = svc.ingest_stream("feed")
+    h.push(x[:700])
+    h.push(x[700:1100])
+    assert svc.stats()["streams"] == 1
+    n_cov = svc.store.series_meta("feed")["n"]
+    mid = svc.query_window("feed", 0, n_cov)
+    v, b = svc.query_aggregate("feed", "mean", 0, n_cov)
+    assert abs(v - x[:n_cov].mean()) <= b
+    with pytest.raises(ValueError, match="already"):
+        svc.ingest_stream("feed")
+    svc.close()                      # stashes the open stream
+
+    svc2 = TimeSeriesService(p, cfg, scfg, resume=True)
+    h2 = svc2.ingest_stream("feed", resume=True)
+    assert h2.resume_from == 1100
+    h2.push(x[1100:])
+    entry = h2.close()
+    dev = h2.deviation()
+    svc2.close()
+
+    ref = compress_windowed(x, cfg, 512)
+    p_ref = str(tmp_path / "ref.cameo")
+    with CameoStore.create(p_ref, block_len=256) as s:
+        s.append_series("feed", ref, cfg, x=x)
+    with open(p, "rb") as f1, open(p_ref, "rb") as f2:
+        assert f1.read() == f2.read()
+    assert dev == float(ref.deviation)
+    assert entry["n"] == 2000 and entry["n_kept"] == int(ref.n_kept)
+    r = CameoStore.open(p)
+    assert np.array_equal(mid, np.asarray(ref.xr)[:len(mid)])
+    assert np.array_equal(r.kept_mask("feed"), np.asarray(ref.kept))
