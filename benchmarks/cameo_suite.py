@@ -547,6 +547,38 @@ def bench_store(full=False):
                  f"{scan_warm:.2e},hit_speedup="
                  f"{scan_secs / max(scan_warm, 1e-9):.1f}x,"
                  f"stats={scan_store.cache_stats()}")
+            # mmap satellite: warm *body fetches* (page cache hot) through
+            # mmap slices vs the seek+read fallback — the micro-path the
+            # mmap replaces; decode/reconstruct time is identical either
+            # way, so it is excluded.  Per-block fetches (the pushdown
+            # edge-decode pattern) are where the saved syscalls show up.
+            blks = store.series_meta(ds)["blocks"]
+            mm_store = CameoStore.open(path, cache_bytes=0)
+            prior = os.environ.get("CAMEO_MMAP")
+            os.environ["CAMEO_MMAP"] = "0"
+            try:
+                pr_store = CameoStore.open(path, cache_bytes=0)
+            finally:
+                if prior is None:
+                    del os.environ["CAMEO_MMAP"]
+                else:
+                    os.environ["CAMEO_MMAP"] = prior
+
+            def fetch_each(st):
+                for blk in blks:
+                    st._read_body(blk)
+            fetch_each(mm_store)
+            fetch_each(pr_store)
+            _, mm_warm = best_of(fetch_each, mm_store, reps=9)
+            _, pr_warm = best_of(fetch_each, pr_store, reps=9)
+            emit(f"store.mmap.{ds}", mm_warm,
+                 f"mmap={mm_store._mm is not None},blocks={len(blks)},"
+                 f"mmap_fetch_s={mm_warm:.2e},pread_fetch_s={pr_warm:.2e},"
+                 f"speedup={pr_warm / max(mm_warm, 1e-9):.2f}x")
+            # close read handles before the tempdir goes away (the mmap
+            # keeps the file pinned on platforms where that blocks rmtree)
+            for st in (store, cold, nocache, scan_store, mm_store, pr_store):
+                st.close()
             rows.append(dict(
                 section="store", dataset=ds, n=n, eps=eps, kept_exact=ok,
                 max_err=max_err,
@@ -557,7 +589,8 @@ def bench_store(full=False):
                 pushdown_within_bound=within,
                 pushdown_secs=push_secs, pushdown_warm_secs=push_warm,
                 pushdown_nocache_secs=push_nocache,
-                scan_secs=scan_secs, window_warm_secs=scan_warm))
+                scan_secs=scan_secs, window_warm_secs=scan_warm,
+                mmap_fetch_secs=mm_warm, pread_fetch_secs=pr_warm))
     save_json("store", rows)
     _update_bench_store_json(rows)
     return rows
@@ -575,7 +608,7 @@ def bench_stream(full=False):
     import tempfile
     import tracemalloc
 
-    from repro.core.streaming import compress_windowed, min_window_len
+    from repro.core.streaming import _compress_windowed, min_window_len
     from repro.serving.ts_service import TimeSeriesService, TsServiceConfig
     from repro.store.store import CameoStore
 
@@ -598,7 +631,7 @@ def bench_stream(full=False):
         with tempfile.TemporaryDirectory() as tmp:
             p_ref = os.path.join(tmp, "ref.cameo")
             t0 = time.perf_counter()
-            ref = compress_windowed(x, cfg, wlen)
+            ref = _compress_windowed(x, cfg, wlen)   # internal oracle: no shim warning
             with CameoStore.create(p_ref, block_len=1024) as s:
                 s.append_series(ds, ref, cfg, x=x)
             oneshot_s = time.perf_counter() - t0
@@ -666,6 +699,138 @@ def bench_stream(full=False):
     save_json("stream", rows)
     _update_bench_stream_json(rows)
     return rows
+
+
+def bench_mvar(full=False):
+    """Multivariate section: shared-index storage gain vs per-column
+    stores (the Sprintz-style saving: the union index stream is encoded
+    once; per-column value streams ride it) and per-column / cross-column
+    pushdown latency vs a decode-and-scan.  Feeds the repo-root
+    ``BENCH_store.json`` ledger (``mvar_*`` keys) that
+    ``benchmarks/perf_smoke.py`` gates CI against."""
+    import os
+    import tempfile
+
+    from repro.core.cameo import compress_multivariate
+    from repro.store import query as squery
+    from repro.store.store import CameoStore
+
+    rows = []
+    eps = 1e-2
+    C = 3
+    for ds in (["pedestrian"] if not full else DATASETS_SMALL):
+        x, spec = bench_series(ds, full)
+        n = len(x)
+        rng = np.random.default_rng(5)
+        scale = float(np.std(x))
+        # correlated fleet: shifted/damped copies of the base channel with
+        # independent sensor noise — the IoT rack the shared index targets
+        X = np.stack([x] + [
+            (0.6 + 0.2 * c) * np.roll(x, 3 * c)
+            + 0.05 * scale * rng.standard_normal(n)
+            for c in range(1, C)], axis=1)
+        cfg = _cfg(spec, eps, mode="rounds", max_rounds=120)
+
+        t0 = time.perf_counter()
+        mres = compress_multivariate(X, cfg)
+        mv_compress_s = time.perf_counter() - t0
+        with tempfile.TemporaryDirectory() as tmp:
+            pm = os.path.join(tmp, "mv.cameo")
+            with CameoStore.create(pm, block_len=1024) as w:
+                w.append_series(ds, mres, cfg, x=X)
+            mv_bytes = os.path.getsize(pm)
+            # end-to-end comparison: C standalone univariate stores, each
+            # with its own greedy kept set (union cost counts against the
+            # shared layout — can dip below 1 for weakly-coupled masks)
+            percol_bytes = 0
+            for c in range(C):
+                pc = os.path.join(tmp, f"c{c}.cameo")
+                res = compress(jnp.asarray(X[:, c]), cfg)
+                with CameoStore.create(pc, block_len=1024) as w:
+                    w.append_series(f"{ds}.{c}", res, cfg, x=X[:, c])
+                percol_bytes += os.path.getsize(pc)
+            shared_gain = percol_bytes / max(mv_bytes, 1)
+            # layout comparison: the SAME union kept set stored as C
+            # univariate series vs one shared-index series — isolates what
+            # encoding the index stream once (+ one header) actually saves
+            union_bytes = 0
+            for c in range(C):
+                pu = os.path.join(tmp, f"u{c}.cameo")
+                fake = type("R", (), dict(
+                    kept=mres.kept,
+                    xr=np.ascontiguousarray(mres.xr[:, c]),
+                    deviation=float(mres.deviations[c])))()
+                with CameoStore.create(pu, block_len=1024) as w:
+                    w.append_series(f"{ds}.{c}", fake, cfg, x=X[:, c])
+                union_bytes += os.path.getsize(pu)
+            index_gain = union_bytes / max(mv_bytes, 1)
+
+            r = CameoStore.open(pm)
+            a, b = n // 8, n // 8 + n // 2
+            squery.query(r, ds, "mean", a, b)           # warm caches
+            _, warm_s = best_of(
+                lambda: squery.query(r, ds, "mean", a, b), reps=9)
+            _, warm_col_s = best_of(
+                lambda: squery.query(r, ds, "mean", a, b, col=0), reps=9)
+            scan = CameoStore.open(pm, cache_bytes=0)
+            scan.read_window(ds, a, b)                  # warm header cache
+            _, scan_s = best_of(
+                lambda: scan.read_window(ds, a, b).mean(axis=0), reps=3)
+            r.close()       # release mmaps before the tempdir is removed
+            scan.close()
+        pushdown_speedup = scan_s / max(warm_s, 1e-12)
+        emit(f"mvar.store.{ds}", mv_compress_s,
+             f"C={C},n={n},mv_bytes={mv_bytes},"
+             f"percol_bytes={percol_bytes},shared_gain={shared_gain:.2f}x,"
+             f"index_gain={index_gain:.2f}x,"
+             f"union_kept={mres.n_kept},dev_max={mres.deviation:.2e}")
+        emit(f"mvar.pushdown.{ds}", warm_s,
+             f"warm_all_cols={warm_s * 1e6:.0f}us,"
+             f"warm_one_col={warm_col_s * 1e6:.0f}us,"
+             f"scan={scan_s * 1e6:.0f}us,"
+             f"speedup={pushdown_speedup:.1f}x")
+        rows.append(dict(
+            section="mvar", dataset=ds, n=n, channels=C, eps=eps,
+            compress_secs=mv_compress_s, mv_bytes=mv_bytes,
+            percol_bytes=percol_bytes, shared_gain=shared_gain,
+            union_bytes=union_bytes, index_gain=index_gain,
+            union_kept=int(mres.n_kept),
+            col_kept=[int(k) for k in mres.col_n_kept],
+            deviation_max=float(mres.deviation),
+            pushdown_warm_secs=warm_s, pushdown_warm_col_secs=warm_col_s,
+            scan_secs=scan_s, pushdown_speedup=pushdown_speedup))
+    save_json("mvar", rows)
+    _update_bench_mvar_json(rows)
+    return rows
+
+
+def _update_bench_mvar_json(rows):
+    """Append the multivariate summary to the BENCH_store.json ledger
+    (``mvar_baseline`` pinned on bootstrap, ``mvar_runs`` capped) — same
+    discipline as ``_update_bench_store_json``."""
+    summary = dict(
+        shared_gain_geomean=geomean([r["shared_gain"] for r in rows]),
+        index_gain_geomean=geomean([r["index_gain"] for r in rows]),
+        pushdown_speedup_geomean=geomean(
+            [r["pushdown_speedup"] for r in rows]),
+        rows=[{k: r[k] for k in
+               ("dataset", "n", "channels", "mv_bytes", "percol_bytes",
+                "shared_gain", "union_bytes", "index_gain",
+                "pushdown_warm_secs", "scan_secs",
+                "pushdown_speedup")} for r in rows],
+    )
+    ledger, path = _load_bench_ledger()
+    if ledger is None:
+        ledger = dict(schema=1, baseline=None, runs=[])
+    if not ledger.get("mvar_baseline"):
+        ledger["mvar_baseline"] = summary
+    ledger.setdefault("mvar_runs", []).append(summary)
+    ledger["mvar_runs"] = ledger["mvar_runs"][-20:]
+    _save_bench_ledger(ledger, path)
+    emit("mvar.bench_json", 0.0,
+         f"shared_gain={summary['shared_gain_geomean']:.2f}x,"
+         f"index_gain={summary['index_gain_geomean']:.2f}x,"
+         f"pushdown_speedup={summary['pushdown_speedup_geomean']:.1f}x")
 
 
 def _load_bench_ledger():

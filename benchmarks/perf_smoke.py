@@ -12,7 +12,10 @@ Runs a small synthetic fixture (seconds, not minutes) and compares
   compressor — same regime on both sides, so the ratio is stable) and the
   O(window) memory ratio (raw streamed bytes over the session's peak
   python-heap working set — a collapse toward 1 means the stream started
-  buffering the whole series).
+  buffering the whole series), and
+* the multivariate rows: the shared-index byte gain of one v4 store vs C
+  standalone per-column stores, and the warm all-columns pushdown vs a
+  decode-and-scan.
 
 Metrics present in only one of {baseline, current} are *skipped with a
 note*, not failed — new rows land in the same PR as their code and are
@@ -61,9 +64,14 @@ TOLERANCE = float(os.environ.get("CAMEO_PERF_SMOKE_TOLERANCE", "0.75"))
 # stream_append_ratio mixes block writes with footer bookkeeping on one
 # side only, so it also gets a looser floor; stream_mem_ratio collapses
 # ~100x when O(window) state regresses to O(n) buffering, so 0.5 is ample.
+# mvar_pushdown_speedup shares pushdown_warm_speedup's mixed-regime noise;
+# mvar_shared_gain is a pure byte ratio (deterministic fixture) — a drop
+# means the shared-index layout itself regressed, so it gets a tight floor.
 PER_METRIC_TOLERANCE = {"pushdown_warm_speedup": 0.30,
                         "stream_append_ratio": 0.50,
-                        "stream_mem_ratio": 0.50}
+                        "stream_mem_ratio": 0.50,
+                        "mvar_pushdown_speedup": 0.30,
+                        "mvar_shared_gain": 0.90}
 _N = 16384
 _STREAM_N = 262144
 
@@ -161,6 +169,70 @@ def _measure() -> dict:
           f"{scan_s * 1e6:.0f}us -> "
           f"{metrics['pushdown_warm_speedup']:.1f}x")
     metrics.update(_measure_stream(cfg))
+    metrics.update(_measure_mvar(cfg))
+    return metrics
+
+
+def _measure_mvar(cfg) -> dict:
+    """Store-side multivariate rows (no compressor): a correlated C-column
+    fixture with precomputed per-column kept masks, appended once as a
+    shared-index v4 series and once as C standalone univariate stores.
+    ``mvar_shared_gain`` is the byte ratio (one index stream vs C), and
+    ``mvar_pushdown_speedup`` the warm all-columns metadata query vs a
+    decode-and-scan."""
+    import tempfile
+
+    from repro.store import query as squery
+    from repro.store.store import CameoStore
+
+    rng = np.random.default_rng(23)
+    n, C = _N, 4
+    t = np.arange(n)
+    base = (np.sin(2 * np.pi * t / 96) + 0.4 * np.sin(2 * np.pi * t / 17)
+            + 0.05 * rng.standard_normal(n))
+    X = np.stack([base] + [
+        (0.6 + 0.1 * c) * np.roll(base, 5 * c)
+        + 0.02 * rng.standard_normal(n) for c in range(1, C)], axis=1)
+    # highly-overlapping per-column masks (correlated sensors): a shared
+    # stride-5 grid plus small per-column jitter
+    masks = []
+    for c in range(C):
+        kept = np.zeros(n, bool)
+        kept[::5] = True
+        kept[rng.choice(n, n // 50, replace=False)] = True
+        kept[0] = kept[-1] = True
+        masks.append(kept)
+    union = np.logical_or.reduce(masks)
+
+    metrics = {}
+    with tempfile.TemporaryDirectory() as tmp:
+        pm = os.path.join(tmp, "mv.cameo")
+        with CameoStore.create(pm, block_len=1024) as w:
+            w.append_series("m", _FakeResult(X, union), cfg, x=X)
+        mv_bytes = os.path.getsize(pm)
+        percol_bytes = 0
+        for c in range(C):
+            pc = os.path.join(tmp, f"c{c}.cameo")
+            with CameoStore.create(pc, block_len=1024) as w:
+                w.append_series("s", _FakeResult(
+                    np.ascontiguousarray(X[:, c]), masks[c]), cfg,
+                    x=X[:, c])
+            percol_bytes += os.path.getsize(pc)
+        store = CameoStore.open(pm)
+        a, b = n // 8, n // 8 + n // 2
+        squery.query(store, "m", "mean", a, b)          # warm
+        warm_s = _best_of(squery.query, store, "m", "mean", a, b, reps=9)
+        scan = CameoStore.open(pm, cache_bytes=0)
+        scan.read_window("m", a, b)                     # warm header cache
+        scan_s = _best_of(lambda: scan.read_window("m", a, b).mean(axis=0))
+        store.close()   # release mmaps before the tempdir is removed
+        scan.close()
+    metrics["mvar_shared_gain"] = percol_bytes / max(mv_bytes, 1)
+    metrics["mvar_pushdown_speedup"] = scan_s / max(warm_s, 1e-12)
+    print(f"mvar: shared {mv_bytes}B vs per-col {percol_bytes}B -> "
+          f"{metrics['mvar_shared_gain']:.2f}x; pushdown warm "
+          f"{warm_s * 1e6:.0f}us vs scan {scan_s * 1e6:.0f}us -> "
+          f"{metrics['mvar_pushdown_speedup']:.1f}x")
     return metrics
 
 

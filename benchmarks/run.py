@@ -31,6 +31,7 @@ BENCHES = {
     "backend": cameo_suite.bench_backend_parity,
     "store": cameo_suite.bench_store,
     "stream": cameo_suite.bench_stream,
+    "mvar": cameo_suite.bench_mvar,
     "fig12": forecast.bench_fig12_forecasting,
     "fig12lm": forecast.bench_fig12_lm_forecaster,
     "fig13": anomaly.bench_fig13_anomaly,

@@ -1,10 +1,12 @@
 """Quickstart: CAMEO-compress a sensor stream with a hard ACF guarantee,
-persist it to a CameoStore file, answer a pushdown aggregate without
-decompressing — then do it all *online*: feed the same sensor as an
-unbounded chunked stream, query it mid-flight, stop and resume the ingest,
-and end up with the identical store bytes.
+then drive everything through the unified ``repro.api`` façade — persist
+to a store file, answer pushdown aggregates without decompressing, write
+a **multivariate** rack of correlated sensors onto one shared index, and
+feed the same sensor as an unbounded chunked stream: query it mid-flight,
+stop and resume the ingest, and end up with the identical store bytes.
 
     PYTHONPATH=src python examples/quickstart.py [--dataset uk_elec] [--eps 1e-3]
+    PYTHONPATH=src python examples/quickstart.py --quick   # CI smoke (~1 min)
 """
 import argparse
 import os
@@ -17,6 +19,7 @@ jax.config.update("jax_enable_x64", True)
 import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
 
+import repro.api as cameo  # noqa: E402
 from repro.baselines.line_simpl import compress_baseline  # noqa: E402
 from repro.core import measures  # noqa: E402
 from repro.core.acf import acf, aggregate_series  # noqa: E402
@@ -30,7 +33,12 @@ def main():
     ap.add_argument("--dataset", default="uk_elec", choices=sorted(DATASETS))
     ap.add_argument("--eps", type=float, default=1e-3)
     ap.add_argument("--length", type=int, default=17520)
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke: short series, batched rounds mode")
     args = ap.parse_args()
+    if args.quick:
+        args.length = min(args.length, 4096)
+        args.eps = max(args.eps, 1e-2)
 
     spec = DATASETS[args.dataset]
     n = (min(args.length, spec.length) // max(spec.kappa, 1)) * max(spec.kappa, 1)
@@ -39,8 +47,13 @@ def main():
 
     # sequential = paper Algorithm 1 (best CR-at-eps; the batched "rounds"
     # mode is the TPU-native variant, see DESIGN.md §2)
-    cfg = CameoConfig(eps=args.eps, lags=spec.lags, kappa=spec.kappa,
-                      mode="sequential", hops=24, window=64, dtype="float64")
+    if args.quick:
+        cfg = CameoConfig(eps=args.eps, lags=spec.lags, kappa=spec.kappa,
+                          mode="rounds", max_rounds=120, dtype="float64")
+    else:
+        cfg = CameoConfig(eps=args.eps, lags=spec.lags, kappa=spec.kappa,
+                          mode="sequential", hops=24, window=64,
+                          dtype="float64")
     res = compress(jnp.asarray(x), cfg)
     idx, vals = kept_points(res)
     recon = decompress(idx, vals, len(x))
@@ -59,19 +72,20 @@ def main():
     r = compress_baseline(jnp.asarray(x), cfg, "vw")
     print(f"VW baseline at the same ACF budget: CR={n / float(r.n_kept):.1f}x")
 
-    # ---- persist to the physical layer and query it back -----------------
-    from repro.store import CameoStore, window_mean
+    # ---- the unified façade: one handle owns storage + bounded queries ---
+    # repro.api.open -> Dataset; Dataset.write/stream ingest, Dataset.series
+    # reads.  Everything below (CameoStore blocks, pushdown metadata, the
+    # streaming windows) is an internal the façade drives.
     path = os.path.join(tempfile.gettempdir(), f"{args.dataset}.cameo")
-    with CameoStore.create(path) as store:
-        store.append_series(args.dataset, res, cfg, x=x)
+    with cameo.open(path, cfg, mode="w") as ds:
+        ds.write(args.dataset, x)
     # cache_bytes budgets the decoded-block LRU: repeated window/pushdown
-    # queries over hot blocks skip pread + bitstream decode + interpolation
-    # (0 disables; default 64 MiB).  The decoders themselves are the
-    # vectorized control-scan + bulk-gather paths — see the decode
-    # throughput table from `python -m benchmarks.run --only store`
-    # (committed summary: BENCH_store.json at the repo root).
-    store = CameoStore.open(path, cache_bytes=32 << 20)
-    stats = store.compression_stats(args.dataset)
+    # queries over hot blocks skip pread + bitstream decode + interpolation;
+    # read-only handles additionally serve block bodies from a page-cache
+    # mmap (CAMEO_MMAP=0 falls back to coalesced preads)
+    ds = cameo.open(path, cache_bytes=32 << 20)
+    s = ds.series(args.dataset)
+    stats = s.stats()
     print(f"store: {stats['stored_nbytes']} bytes on disk -> "
           f"byte-true CR={stats['bytes_cr']:.1f}x "
           f"(codec-only {stats['codec_cr']:.1f}x vs "
@@ -79,48 +93,87 @@ def main():
           f"{stats['meta_nbytes']}B (raw {stats['meta_raw_nbytes']}B)")
 
     a, b = n // 4, 3 * n // 4
-    got = store.read_window(args.dataset, a, b)
-    full = store.read_series(args.dataset)
+    got = s.window(a, b)
+    full = s.window()
     print(f"  random-access window [{a}, {b}) decoded "
           f"{'bit-exactly' if np.array_equal(got, full[a:b]) else 'WRONG'} "
-          f"from {len(store.series_meta(args.dataset)['blocks'])} blocks")
-    mean_pd, bound = window_mean(store, args.dataset, a, b)
+          f"from {len(s.meta['blocks'])} blocks")
+    mean_pd, bound = s.mean(a, b)
     true_mean = float(np.mean(x[a:b]))
     print(f"  pushdown mean over the window: {mean_pd:.6f} "
           f"+/- {bound:.2e} (true {true_mean:.6f}; no full decode)")
-    store.read_window(args.dataset, a, b)    # hot: served from the LRU
-    cs = store.cache_stats()
+    pacf_pd, pacf_bound = s.pacf(a, b)
+    print(f"  pushdown PACF[1] {float(pacf_pd[0]):.4f} "
+          f"+/- {float(pacf_bound[0]):.1e} (first-order propagated bound)")
+    s.window(a, b)                   # hot: served from the LRU
+    cs = ds.cache_stats()
     print(f"  decoded-block cache: {cs['hits']} hits / {cs['misses']} "
           f"misses, {cs['nbytes']} bytes of {cs['budget']} budget")
+    ds.close()
     os.remove(path)
 
+    # ---- multivariate: a rack of correlated sensors on ONE shared index --
+    # Dataset.write with [n, C] compresses every column, unions the kept
+    # masks into a single delta-of-delta index stream (stored once — the
+    # Sprintz saving) and re-evaluates each column on it, enforcing the
+    # per-column eps by exact measurement.  The file flips to the v4 magic
+    # exactly when the first multivariate block is written.
+    rng = np.random.default_rng(0)
+    C = 3
+    X = np.stack([x] + [
+        (0.6 + 0.2 * c) * np.roll(x, 3 * c)
+        + 0.05 * float(np.std(x)) * rng.standard_normal(n)
+        for c in range(1, C)], axis=1)
+    mpath = os.path.join(tempfile.gettempdir(), f"{args.dataset}_mv.cameo")
+    with cameo.open(mpath, cfg, mode="w") as ds:
+        entry = ds.write("rack", X)
+    ds = cameo.open(mpath)
+    s = ds.series("rack")
+    st = s.stats()
+    print(f"multivariate: C={C} columns, union kept {entry['n_kept']}/{n} "
+          f"-> byte-true CR={st['bytes_cr']:.1f}x on one shared index")
+    print(f"  per-column exact deviations (all <= {cfg.eps}): "
+          + ", ".join(f"{d:.2e}" for d in s.deviations))
+    vals_pd, bounds_pd = s.mean(a, b)           # all columns, one pass
+    col_true = X[a:b].mean(axis=0)
+    ok = bool(np.all(np.abs(vals_pd - col_true) <= bounds_pd))
+    print(f"  cross-column pushdown mean ({'within' if ok else 'OUTSIDE'} "
+          f"bounds): " + ", ".join(f"{v:.4f}" for v in vals_pd))
+    ki, kv = s.kept()
+    col0 = s.window(a, b, col=0)
+    print(f"  single-column decode col=0 over [{a}, {b}) "
+          f"{'bit-exact' if np.array_equal(col0, s.window(a, b)[:, 0]) else 'WRONG'}"
+          f"; kept values are the originals: "
+          f"{np.array_equal(kv, X[ki])}")
+    ds.close()
+    os.remove(mpath)
+
     # ---- streaming ingest: feed chunks, query mid-stream, resume ---------
-    # The service holds O(window) state no matter how long the feed runs:
-    # windows compress the moment they fill (same per-window eps guarantee)
-    # and blocks hit disk the moment their border is provable.  The final
-    # file is byte-identical to compressing the same windows one shot.
+    # Dataset.stream holds O(window) state no matter how long the feed
+    # runs: windows compress the moment they fill (same per-window eps
+    # guarantee) and blocks hit disk the moment their border is provable.
+    # The final file is byte-identical to the one-shot windowed write.
     from repro.core.streaming import min_window_len
-    from repro.serving.ts_service import TimeSeriesService, TsServiceConfig
     spath = os.path.join(tempfile.gettempdir(), f"{args.dataset}_stream.cameo")
     wlen = max(min(2048, n // 4) // cfg.kappa * cfg.kappa,
                min_window_len(cfg))
-    scfg = TsServiceConfig(block_len=wlen // 2, stream_window=wlen)
     chunk = 999                      # the feed arrives in odd-sized chunks
-    svc = TimeSeriesService(spath, cfg, scfg)
-    feed = svc.ingest_stream(args.dataset)
+    ds = cameo.open(spath, cfg, mode="w", block_len=wlen // 2,
+                    stream_window=wlen)
+    feed = ds.stream(args.dataset)
     half = n // 2
     for lo in range(0, half, chunk):
         feed.push(x[lo:lo + chunk])
-    cov = svc.store.series_meta(args.dataset)["n"]
+    cov = ds.series(args.dataset).meta["n"]
     if cov:                          # blocks already durable -> queryable
-        mean_mid, bound_mid = svc.query_aggregate(args.dataset, "mean",
-                                                  0, cov)
+        mean_mid, bound_mid = ds.series(args.dataset).mean(0, cov)
         print(f"stream: fed {feed.n_seen}/{n} pts; {cov} already queryable "
               f"-> mid-stream mean {mean_mid:.6f} +/- {bound_mid:.2e}")
-    svc.close()                      # stop mid-feed: state stashed in footer
+    ds.close()                       # stop mid-feed: state stashed in footer
 
-    svc = TimeSeriesService(spath, cfg, scfg, resume=True)   # ...reopen
-    feed = svc.ingest_stream(args.dataset, resume=True)
+    ds = cameo.open(spath, cfg, mode="a", block_len=wlen // 2,
+                    stream_window=wlen)                      # ...reopen
+    feed = ds.stream(args.dataset, resume=True)
     resumed_at = feed.resume_from
     for lo in range(resumed_at, n, chunk):                   # keep feeding
         feed.push(x[lo:lo + chunk])
@@ -129,12 +182,13 @@ def main():
           f"{entry['n_kept']}/{n} kept, "
           f"exact global ACF deviation {feed.deviation():.2e} "
           f"(per-window guarantee <= {cfg.eps})")
-    got = svc.query_window(args.dataset, a, b)
-    full_s = svc.store.read_series(args.dataset)
+    s = ds.series(args.dataset)
+    got = s.window(a, b)
+    full_s = s.window()
     print(f"  streamed store serves [{a}, {b}) "
           f"{'bit-exactly' if np.array_equal(got, full_s[a:b]) else 'WRONG'}"
-          f"; blocks={len(svc.store.series_meta(args.dataset)['blocks'])}")
-    svc.close()
+          f"; blocks={len(s.meta['blocks'])}")
+    ds.close()
     os.remove(spath)
 
 

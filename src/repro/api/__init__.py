@@ -1,0 +1,21 @@
+"""``repro.api`` — the unified dataset façade over the CAMEO stack.
+
+>>> import repro.api as cameo
+>>> ds = cameo.open("fleet.cameo", CameoConfig(eps=1e-3, lags=24))
+>>> ds.write("sensor-1", x)                 # 1-D: univariate
+>>> ds.write("rack-7", X)                   # [n, C]: multivariate (v4)
+>>> with ds.stream("feed") as w:            # unbounded chunked ingest
+...     w.push(chunk)
+>>> s = ds.series("rack-7")
+>>> s.mean(a, b)                            # ([C], [C]) value + bound
+>>> s.acf(col=0)                            # one column's pushdown ACF
+>>> ds.close()
+
+See :mod:`repro.api.dataset` for the full contract.  The legacy entry
+points (``TimeSeriesService.submit``/``ingest_stream``, the free
+``repro.store.window_*`` functions, ``compress_windowed``) are deprecated
+shims over the same internals.
+"""
+from repro.api.dataset import Dataset, Series, StreamWriter, open
+
+__all__ = ["Dataset", "Series", "StreamWriter", "open"]

@@ -501,6 +501,146 @@ def compress_batch(xs, cfg: CameoConfig, mesh=None,
     return jax.jit(sharded)(xs)
 
 
+class MVCompressResult(NamedTuple):
+    """Multivariate compression result: one shared kept-index stream, per-
+    column values re-evaluated on it (see :func:`compress_multivariate`)."""
+
+    kept: np.ndarray        # bool [n] — shared union kept mask
+    xr: np.ndarray          # float [n, C] — per-column reconstructions
+    deviation: float        # max per-column deviation (the stored headline)
+    n_kept: int             # |union|
+    iters: int              # total compressor rounds/removals across columns
+    deviations: np.ndarray  # [C] exact measured per-column deviation
+    col_n_kept: np.ndarray  # [C] per-column own kept counts (pre-union)
+
+
+def _column_masks(X: np.ndarray, cfg: CameoConfig, eps_c: np.ndarray,
+                  cols) -> tuple:
+    """(masks[C, n] for the requested ``cols``, iters) — rounds mode batches
+    same-eps columns through ``compress_batch``; anything else runs
+    per-column ``compress``."""
+    import jax as _jax
+
+    masks = {}
+    iters = 0
+    cols = list(cols)
+    if cfg.mode == "rounds" and len(cols) > 1:
+        by_eps = {}
+        for c in cols:
+            by_eps.setdefault(float(eps_c[c]), []).append(c)
+        for eps, group in by_eps.items():
+            gcfg = dataclasses.replace(cfg, eps=eps)
+            if len(group) > 1:
+                res = compress_batch(X[:, group].T, gcfg)
+                _jax.block_until_ready(res.kept)
+                for i, c in enumerate(group):
+                    masks[c] = np.asarray(res.kept[i])
+                    iters += int(res.iters[i])
+            else:
+                res = compress(jnp.asarray(X[:, group[0]]), gcfg)
+                masks[group[0]] = np.asarray(res.kept)
+                iters += int(res.iters)
+    else:
+        for c in cols:
+            res = compress(jnp.asarray(X[:, c]),
+                           dataclasses.replace(cfg, eps=float(eps_c[c])))
+            masks[c] = np.asarray(res.kept)
+            iters += int(res.iters)
+    return masks, iters
+
+
+_mv_recon_jit = None
+
+
+def _union_reconstruct(x_col: np.ndarray, union: np.ndarray) -> np.ndarray:
+    """Canonical one-shot interpolation of one column on the shared index —
+    the same jitted ``_reconstruct`` the store decode uses, so the measured
+    per-column deviation is exact for what readers will actually see."""
+    global _mv_recon_jit
+    if _mv_recon_jit is None:
+        _mv_recon_jit = jax.jit(_reconstruct)
+    return np.asarray(_mv_recon_jit(jnp.asarray(x_col), jnp.asarray(union)))
+
+
+def _column_deviation(x_col: np.ndarray, xr_col: np.ndarray,
+                      cfg: CameoConfig) -> float:
+    """Exact measured D(S(recon), S(orig)) of one column (Eq. 7 path)."""
+    transform = _stat_transform(cfg)
+    mfn = _measure_fn(cfg)
+    y0 = aggregate_series(jnp.asarray(x_col, cfg.jdtype()), cfg.kappa)
+    y1 = aggregate_series(jnp.asarray(xr_col, cfg.jdtype()), cfg.kappa)
+    ny = int(y0.shape[0])
+    s0 = transform(acf_from_aggregates(
+        extract_aggregates(y0, cfg.lags, backend=cfg.backend), ny))
+    s1 = transform(acf_from_aggregates(
+        extract_aggregates(y1, cfg.lags, backend=cfg.backend), ny))
+    return float(mfn(s1, s0))
+
+
+def compress_multivariate(X, cfg: CameoConfig, *,
+                          max_retries: int = 4) -> MVCompressResult:
+    """Compress a multivariate series ``X [n, C]`` onto one shared index.
+
+    The Sprintz-style shared-timestamp layout: every column is compressed
+    independently (``compress_batch`` over the columns in rounds mode), the
+    per-column kept masks are **unioned** into a single index stream, and
+    every column is then *re-evaluated on the shared index* — its stored
+    values are the original ``X[idx, c]`` at every union index, so each
+    column's reconstruction interpolates through strictly more original
+    points than its own greedy solution kept.
+
+    The per-column ε guarantee is *enforced by measurement*, not assumed:
+    each column's exact deviation is recomputed on the shared index, and a
+    column that exceeds ``cfg.eps`` (possible in principle — the ACF is not
+    monotone in pointwise error) is recompressed at half its budget and the
+    union rebuilt, up to ``max_retries`` times; a still-violating column
+    finally keeps all of its points (deviation exactly 0).  With
+    ``target_cr`` set there is no ε to enforce and the measured deviations
+    are reported as-is.
+
+    Returns an :class:`MVCompressResult` whose ``kept``/``xr`` feed
+    ``CameoStore.append_series`` (v4 shared-index block layout) directly.
+    """
+    X = np.asarray(X)
+    if X.ndim != 2:
+        raise ValueError(f"compress_multivariate wants [n, C], got {X.shape}")
+    if cfg.kappa > 1:
+        X = X[:(X.shape[0] // cfg.kappa) * cfg.kappa]
+    n, C = X.shape
+    eps_c = np.full(C, float(cfg.eps))
+    masks, iters = _column_masks(X, cfg, eps_c, range(C))
+    enforce = cfg.target_cr is None and np.isfinite(cfg.eps)
+    retries = 0
+    while True:
+        union = np.zeros(n, bool)
+        for c in range(C):
+            union |= masks[c]
+        xr = np.stack([_union_reconstruct(X[:, c], union)
+                       for c in range(C)], axis=1)
+        devs = np.array([_column_deviation(X[:, c], xr[:, c], cfg)
+                         for c in range(C)])
+        bad = [c for c in range(C) if enforce and devs[c] > cfg.eps
+               and not masks[c].all()]
+        if not bad:
+            break
+        if retries >= max_retries:
+            for c in bad:     # last resort: the column keeps everything
+                masks[c] = np.ones(n, bool)
+            continue          # keep-all columns measure deviation 0 next pass
+        retries += 1
+        eps_c[bad] = eps_c[bad] / 2.0
+        new_masks, it = _column_masks(X, cfg, eps_c, bad)
+        masks.update(new_masks)
+        iters += it
+    # per-column counts of the masks that actually went into the union
+    # (recompressed/keep-all columns included, not their discarded firsts)
+    col_n_kept = np.array([int(masks[c].sum()) for c in range(C)])
+    return MVCompressResult(
+        kept=union, xr=xr, deviation=float(devs.max()) if C else 0.0,
+        n_kept=int(union.sum()), iters=iters, deviations=devs,
+        col_n_kept=col_n_kept)
+
+
 def kept_points(res: CompressResult):
     """(indices, values) numpy views of the kept points."""
     kept = np.asarray(res.kept)

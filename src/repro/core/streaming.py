@@ -48,6 +48,7 @@ it had never stopped.
 """
 from __future__ import annotations
 
+import warnings
 from typing import List, NamedTuple, Optional
 
 import jax.numpy as jnp
@@ -57,9 +58,11 @@ from repro.core.acf import Aggregates, acf_from_aggregates, aggregate_series
 from repro.core.cameo import (
     CameoConfig,
     CompressResult,
+    MVCompressResult,
     _measure_fn,
     _stat_transform,
     compress,
+    compress_multivariate,
 )
 from repro.kernels import ops as _ops
 
@@ -356,19 +359,196 @@ class StreamingCompressor:
 
 
 # ---------------------------------------------------------------------------
-# one-shot reference for the streaming semantics
+# multivariate streaming: shared-index windows, per-column accounting
 # ---------------------------------------------------------------------------
 
-def compress_windowed(x, cfg: CameoConfig,
-                      window_len: int = 4096) -> CompressResult:
-    """One-shot windowed compression — the reference the streaming path is
-    differentially tested against (it feeds the whole series as a single
-    chunk, so any chunked ``push`` sequence must match it bit-for-bit).
+class MVWindowResult(NamedTuple):
+    """One closed multivariate stream window (shared kept mask)."""
 
-    Returns a whole-series :class:`CompressResult`: concatenated mask and
-    reconstruction, the exact measured global deviation, and the global
-    stream statistics.  ``iters`` is the total across windows.
+    start: int          # absolute index of the window's first point
+    x: np.ndarray       # original points [m, C]
+    kept: np.ndarray    # bool [m] — shared union mask (window-local)
+    xr: np.ndarray      # reconstruction [m, C]
+    n_kept: int
+    iters: int
+
+
+class MVStreamingCompressor:
+    """Window-at-a-time multivariate CAMEO over an unbounded feed.
+
+    The multivariate sibling of :class:`StreamingCompressor`: chunks are
+    ``[m, C]``, each full window closes through
+    :func:`~repro.core.cameo.compress_multivariate` (per-window per-column
+    ε guarantee on one shared kept index), and **per-column**
+    :class:`RunningAggregates` pairs keep the exact global Eq. 7 accounting
+    of every original/reconstructed column stream — ``deviations()`` is the
+    exact measured per-column global deviation, O(C·L) state.  Chunking
+    invariance, window-border kept points and JSON-safe bit-exact
+    ``state_dict()`` resume all carry over from the univariate contract.
     """
+
+    def __init__(self, cfg: CameoConfig, window_len: int = 4096,
+                 channels: int = None, *, start: int = 0):
+        if channels is None or int(channels) < 1:
+            raise ValueError("MVStreamingCompressor needs channels >= 1")
+        if window_len % cfg.kappa:
+            raise ValueError(f"window_len={window_len} not divisible by "
+                             f"kappa={cfg.kappa}")
+        if window_len < min_window_len(cfg):
+            raise ValueError(
+                f"window_len={window_len} shorter than the minimum "
+                f"{min_window_len(cfg)} for lags={cfg.lags}, "
+                f"kappa={cfg.kappa}")
+        self.cfg = cfg
+        self.window_len = int(window_len)
+        self.channels = int(channels)
+        self._buf = np.empty((0, self.channels), np.dtype(cfg.dtype))
+        self._next_start = int(start)
+        self.n_seen = int(start)
+        self.windows = 0
+        self.n_kept = 0
+        self.iters = 0
+        self._finished = False
+        self._orig = [RunningAggregates(cfg.lags, cfg.backend)
+                      for _ in range(self.channels)]
+        self._recon = [RunningAggregates(cfg.lags, cfg.backend)
+                       for _ in range(self.channels)]
+
+    # -- feeding -------------------------------------------------------------
+
+    def push(self, chunk) -> List[MVWindowResult]:
+        """Absorb an arbitrary-size ``[m, C]`` chunk; returns the windows
+        it closed."""
+        if self._finished:
+            raise ValueError("stream already finished")
+        chunk = np.asarray(chunk, self._buf.dtype)
+        if chunk.ndim != 2 or chunk.shape[1] != self.channels:
+            raise ValueError(f"chunks must be [m, {self.channels}], "
+                             f"got {chunk.shape}")
+        if chunk.size:
+            self._buf = np.concatenate([self._buf, chunk])
+            self.n_seen += chunk.shape[0]
+        out = []
+        W = self.window_len
+        while self._buf.shape[0] >= W:
+            out.append(self._close(self._buf[:W], final=False))
+            self._buf = self._buf[W:]
+            self._next_start += W
+        return out
+
+    def finish(self) -> List[MVWindowResult]:
+        if self._finished:
+            return []
+        out = []
+        if self._buf.shape[0]:
+            out.append(self._close(self._buf, final=True))
+            self._next_start += self._buf.shape[0]
+            self._buf = self._buf[:0]
+        for ra in self._orig + self._recon:
+            ra.finalize()
+        self._finished = True
+        return out
+
+    # -- window close --------------------------------------------------------
+
+    def _close(self, w_x: np.ndarray, final: bool) -> MVWindowResult:
+        cfg = self.cfg
+        m = w_x.shape[0]
+        ndiv = (m // cfg.kappa) * cfg.kappa
+        if ndiv // cfg.kappa >= cfg.lags + 2:
+            res = compress_multivariate(w_x[:ndiv], cfg)
+            kept = np.asarray(res.kept)
+            xr = np.asarray(res.xr)
+            iters = int(res.iters)
+            if ndiv < m:    # kappa-remainder of the final window: verbatim
+                kept = np.concatenate([kept, np.ones(m - ndiv, bool)])
+                xr = np.concatenate([xr, w_x[ndiv:]])
+        else:               # too short for the aggregate math: verbatim
+            kept = np.ones(m, bool)
+            xr = np.asarray(w_x).copy()
+            iters = 0
+        if ndiv:
+            for c in range(self.channels):
+                self._orig[c].append(aggregate_series(
+                    np.asarray(w_x[:ndiv, c], np.float64), cfg.kappa))
+                self._recon[c].append(aggregate_series(
+                    np.asarray(xr[:ndiv, c], np.float64), cfg.kappa))
+        w = MVWindowResult(start=self._next_start, x=np.asarray(w_x),
+                           kept=kept, xr=xr, n_kept=int(kept.sum()),
+                           iters=iters)
+        self.windows += 1
+        self.n_kept += w.n_kept
+        self.iters += iters
+        return w
+
+    # -- exact global accounting --------------------------------------------
+
+    def deviations(self) -> np.ndarray:
+        """[C] exact measured per-column global deviation so far."""
+        transform = _stat_transform(self.cfg)
+        mfn = _measure_fn(self.cfg)
+        out = np.zeros(self.channels)
+        for c in range(self.channels):
+            ny = self._orig[c].n
+            if ny <= self.cfg.lags + 1:
+                continue
+            s0 = transform(acf_from_aggregates(
+                self._orig[c].aggregates(), ny))
+            s1 = transform(acf_from_aggregates(
+                self._recon[c].aggregates(), ny))
+            out[c] = float(mfn(s1, s0))
+        return out
+
+    def deviation(self) -> float:
+        """Max per-column exact deviation (the headline number)."""
+        return float(self.deviations().max()) if self.channels else 0.0
+
+    # -- resume support ------------------------------------------------------
+
+    def state_dict(self) -> dict:
+        return dict(
+            version=1, kind="mvar", window_len=self.window_len,
+            channels=self.channels, dtype=str(self._buf.dtype),
+            next_start=self._next_start, n_seen=self.n_seen,
+            windows=self.windows, n_kept=self.n_kept, iters=self.iters,
+            finished=self._finished,
+            buf=self._buf.astype(np.float64).tolist(),
+            orig=[ra.state_dict() for ra in self._orig],
+            recon=[ra.state_dict() for ra in self._recon])
+
+    @classmethod
+    def from_state(cls, cfg: CameoConfig, state: dict):
+        out = cls(cfg, int(state["window_len"]), int(state["channels"]))
+        out._buf = np.asarray(state["buf"], np.float64).reshape(
+            -1, out.channels).astype(np.dtype(state["dtype"]))
+        out._next_start = int(state["next_start"])
+        out.n_seen = int(state["n_seen"])
+        out.windows = int(state["windows"])
+        out.n_kept = int(state["n_kept"])
+        out.iters = int(state["iters"])
+        out._finished = bool(state["finished"])
+        out._orig = [RunningAggregates.from_state(s, cfg.backend)
+                     for s in state["orig"]]
+        out._recon = [RunningAggregates.from_state(s, cfg.backend)
+                      for s in state["recon"]]
+        return out
+
+
+def compressor_from_state(cfg: CameoConfig, state: dict):
+    """Rebuild the right streaming compressor (uni- or multivariate) from a
+    ``state_dict()`` blob — the store footer stash does not record which
+    class wrote it, the state does."""
+    if state.get("kind") == "mvar":
+        return MVStreamingCompressor.from_state(cfg, state)
+    return StreamingCompressor.from_state(cfg, state)
+
+
+# ---------------------------------------------------------------------------
+# one-shot references for the streaming semantics
+# ---------------------------------------------------------------------------
+
+def _compress_windowed(x, cfg: CameoConfig,
+                       window_len: int = 4096) -> CompressResult:
     x = np.asarray(x)
     sc = StreamingCompressor(cfg, window_len)
     wins = sc.push(x) + sc.finish()
@@ -380,3 +560,41 @@ def compress_windowed(x, cfg: CameoConfig,
         deviation=jnp.asarray(sc.deviation()),
         n_kept=jnp.asarray(sc.n_kept), iters=jnp.asarray(sc.iters),
         stat_orig=s0, stat_new=s1)
+
+
+def compress_windowed(x, cfg: CameoConfig,
+                      window_len: int = 4096) -> CompressResult:
+    """One-shot windowed compression — the reference the streaming path is
+    differentially tested against (it feeds the whole series as a single
+    chunk, so any chunked ``push`` sequence must match it bit-for-bit).
+
+    Returns a whole-series :class:`CompressResult`: concatenated mask and
+    reconstruction, the exact measured global deviation, and the global
+    stream statistics.  ``iters`` is the total across windows.
+
+    .. deprecated:: repro.api
+        Application code should go through the façade —
+        ``repro.api.open(path, cfg).stream(sid)`` for ingest; this function
+        stays as the differential-test oracle.
+    """
+    warnings.warn(
+        "compress_windowed is deprecated as an application entry point; "
+        "use repro.api.open(...).stream(sid) (it remains the streaming "
+        "differential-test oracle)", DeprecationWarning, stacklevel=2)
+    return _compress_windowed(x, cfg, window_len)
+
+
+def compress_windowed_mv(X, cfg: CameoConfig,
+                         window_len: int = 4096) -> MVCompressResult:
+    """One-shot windowed multivariate compression — the differential
+    reference for :class:`MVStreamingCompressor` (single-chunk feed)."""
+    X = np.asarray(X)
+    sc = MVStreamingCompressor(cfg, window_len, X.shape[1])
+    wins = sc.push(X) + sc.finish()
+    kept = np.concatenate([w.kept for w in wins])
+    xr = np.concatenate([w.xr for w in wins])
+    devs = sc.deviations()
+    return MVCompressResult(
+        kept=kept, xr=xr, deviation=float(devs.max()),
+        n_kept=int(sc.n_kept), iters=int(sc.iters), deviations=devs,
+        col_n_kept=np.full(X.shape[1], -1))

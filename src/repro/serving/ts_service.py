@@ -1,5 +1,14 @@
 """Batched time-series ingest + query service over the CameoStore.
 
+.. deprecated:: repro.api
+    The service's ingest entry points (``submit``, ``ingest_stream``) are
+    **deprecated shims** over the unified :mod:`repro.api` façade —
+    ``repro.api.open(path, cfg)`` returns a ``Dataset`` whose ``write`` /
+    ``write_batch`` / ``stream`` / ``series`` methods are the single
+    documented surface, with first-class multivariate series.  The shims
+    keep working and stay byte-identical to the façade (they drive the
+    same internals), but new code should not use them.
+
 The fleet-of-sensors front-end: producers ``submit`` raw series, the
 service buffers them into length groups and drives one
 ``compress_batch`` per group (the TPU-native vmapped rounds mode — one
@@ -40,13 +49,14 @@ hit/miss/eviction counters for capacity planning.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Dict, List, Optional, Tuple
 
 import jax
 import numpy as np
 
+from repro.api.dataset import StreamWriter
 from repro.core.cameo import CameoConfig, compress, compress_batch
-from repro.core.streaming import StreamingCompressor
 from repro.store.query import query as _pushdown_query
 from repro.store.store import CameoStore
 
@@ -62,82 +72,28 @@ class TsServiceConfig:
     stream_window: int = 4096     # default ingest_stream window length
 
 
-class StreamIngest:
+class StreamIngest(StreamWriter):
     """One unbounded-feed ingest stream: chunks in, blocks out, O(window)
-    state.  Obtain via :meth:`TimeSeriesService.ingest_stream`; feed with
-    :meth:`push` (any chunk sizes — the result is chunking-invariant) and
-    :meth:`close` when the feed ends.  Mid-feed, the series' written
-    prefix serves window/pushdown queries like any stored series.
+    state.  A thin service-bookkeeping shim over the façade's
+    :class:`repro.api.StreamWriter` (same code path, so service streams
+    stay byte-identical to ``Dataset.stream`` writes).  Obtain via
+    :meth:`TimeSeriesService.ingest_stream`; feed with :meth:`push` and
+    :meth:`close` when the feed ends.
     """
 
     def __init__(self, service: "TimeSeriesService", sid: str,
                  window_len: int, resume: bool):
         self._svc = service
-        self.sid = sid
-        ccfg = service.ccfg
-        store = service.store
-        if resume:
-            self._sess = store.open_stream(sid, ccfg, resume=True)
-            state = self._sess.restored_client_state
-            if state is None:
-                # unwind: re-stash the session state and release the slot,
-                # so a raw-store resume of the same stream still works
-                store._series[sid]["stream_state"] = self._sess._stash()
-                store._streams.pop(sid, None)
-                raise ValueError(
-                    f"series {sid!r}: stream was not opened through "
-                    "ingest_stream — no compressor state to resume")
-            self._comp = StreamingCompressor.from_state(ccfg, state)
-        else:
-            self._comp = StreamingCompressor(ccfg, window_len)
-            self._sess = store.open_stream(
-                sid, ccfg, with_resid=service.scfg.store_residuals)
-        self._sess.state_provider = self._comp.state_dict
-        self.closed = False
-
-    @property
-    def resume_from(self) -> int:
-        """Absolute index of the next point this stream expects."""
-        return self._comp.n_seen
-
-    @property
-    def n_seen(self) -> int:
-        return self._comp.n_seen
-
-    def deviation(self) -> float:
-        """Exact measured global ACF deviation of the stream so far."""
-        return self._comp.deviation()
-
-    def push(self, chunk) -> int:
-        """Feed a chunk; compresses and stores every window it closes.
-        Returns the number of windows closed."""
-        wins = self._comp.push(chunk)
-        for w in wins:
-            self._sess.append_window(w)
-        return len(wins)
-
-    def flush(self) -> None:
-        """Durability checkpoint: footer (incl. resume state) rewritten."""
-        self._sess.flush()
+        super().__init__(service.store, service.ccfg, sid,
+                         window_len=window_len,
+                         with_resid=service.scfg.store_residuals,
+                         resume=resume)
 
     def close(self) -> dict:
-        """Flush the final partial window, finalize the series, and return
-        its catalog entry."""
-        for w in self._comp.finish():
-            self._sess.append_window(w)
-        entry = self._sess.close(deviation=self._comp.deviation())
+        entry = super().close()
         self._svc._streams.pop(self.sid, None)
         self._svc._ingested += 1
-        self.closed = True
         return entry
-
-    def __enter__(self):
-        return self
-
-    def __exit__(self, *exc):
-        # finalize only on clean exit — see StreamSession.__exit__
-        if exc[0] is None and not self.closed:
-            self.close()
 
 
 class TimeSeriesService:
@@ -174,7 +130,16 @@ class TimeSeriesService:
 
     def submit(self, sid: str, x) -> None:
         """Queue one series for compression; auto-flushes its length group
-        when ``max_batch`` series are waiting."""
+        when ``max_batch`` series are waiting.
+
+        .. deprecated:: repro.api
+            Use ``repro.api.open(path, cfg).write(sid, x)`` (or
+            ``write_batch`` for fleets) — identical bytes, one surface.
+        """
+        warnings.warn(
+            "TimeSeriesService.submit is deprecated; use "
+            "repro.api.open(...).write/write_batch",
+            DeprecationWarning, stacklevel=2)
         if sid in self.store or any(
                 s == sid for g in self._pending.values() for s, _ in g):
             raise ValueError(f"series {sid!r} already submitted")
@@ -220,7 +185,15 @@ class TimeSeriesService:
         with ``resume=True``) continues an interrupted stream from the
         state stashed in the store footer; feed points from
         ``handle.resume_from`` onward.
+
+        .. deprecated:: repro.api
+            Use ``repro.api.open(path, cfg).stream(sid)`` — identical
+            bytes, one surface, multivariate-capable.
         """
+        warnings.warn(
+            "TimeSeriesService.ingest_stream is deprecated; use "
+            "repro.api.open(...).stream(sid)",
+            DeprecationWarning, stacklevel=2)
         if not resume and (sid in self.store or any(
                 s == sid for g in self._pending.values() for s, _ in g)):
             raise ValueError(f"series {sid!r} already submitted")

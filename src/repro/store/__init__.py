@@ -1,5 +1,9 @@
 """CameoStore: the physical block store under the CAMEO compressor.
 
+Application code should reach this layer through the :mod:`repro.api`
+façade (``repro.api.open(path, cfg)``) — the modules here are the
+internals it drives:
+
 * ``store.codec``  — byte-true bitstream codecs (delta-of-delta kept-index
   packing, Gorilla/Chimp XOR value streams, optional zstd/zlib wrap) and
   the byte-true ``compression_ratio_bytes``.  Both directions are
@@ -10,41 +14,73 @@
   sufficient statistics and pushdown metadata.  Format v3 stores only the
   ``sxx`` row and the edge vectors (the four moment rows are derived at
   parse time, ~2.3x header shrink); vectors are compacted losslessly with
-  xor-delta + byte-plane shuffle coding.  v2 files read fine.
+  xor-delta + byte-plane shuffle coding.  Format v4 adds **multivariate
+  blocks**: one shared delta-of-delta index stream per block, per-column
+  Gorilla/Chimp value streams and per-column Eq. 7 metadata
+  (``build_mblock``/``parse_mblock``; ``MBlockMeta.col(c)`` projects one
+  column onto the univariate header contract).  v2/v3 files read fine,
+  and files that never hold a multivariate series keep the v3 magic
+  bit-identically.
 * ``store.store``  — append-oriented writer / random-access reader
-  (``CameoStore``); window decodes touch only overlapping blocks (misses
-  fetched with coalesced preads), are bit-exact vs the compressor's
-  reconstruction, and ride a byte-budgeted decoded-block LRU
-  (``cache_bytes``).  ``open_stream`` opens a :class:`StreamSession` that
-  appends blocks as stream windows close (``core/streaming``), serves the
-  written prefix mid-stream, and resumes bit-exactly from footer-stashed
-  state — the finalized file is byte-identical to the one-shot write.
+  (``CameoStore``); window decodes touch only overlapping blocks, are
+  bit-exact vs the compressor's reconstruction, and ride a byte-budgeted
+  decoded-block LRU (``cache_bytes``).  Read-only opens are served from a
+  **page-cache-backed mmap** where available (``CAMEO_MMAP=0`` or
+  non-POSIX environments fall back to coalesced preads).  ``open_stream``
+  opens a :class:`StreamSession` (univariate or multivariate) that
+  appends blocks as stream windows close, serves the written prefix
+  mid-stream, and resumes bit-exactly from footer-stashed state — the
+  finalized file is byte-identical to the one-shot write.
 * ``store.query``  — Plato-style pushdown aggregates (sum/mean/var/ACF)
-  with deterministic error bounds; edge-block decodes hit the same LRU.
+  with deterministic error bounds; ``ColumnView`` projects one column of
+  a multivariate series onto the same machinery, and ``query(...,
+  col=None)`` answers all columns off a single header pass.
 
 Exports resolve lazily (PEP 562): ``store.codec`` is plain numpy + stdlib
 and must stay importable without dragging in jax — ``baselines/lossless.py``
 pulls its vectorized Table-2 counters from there — while ``store.store`` /
 ``store.blocks`` need jax for the bit-exact block reconstruction.
+
+The free ``window_*`` re-exports are **deprecated** in favor of
+``repro.api`` ``Series.sum/mean/var/acf`` (same code underneath;
+``repro.store.query`` itself is the internal engine and does not warn).
 """
+import functools
 import importlib
+import warnings
 
 _EXPORTS = {
     "CameoStore": "repro.store.store",
     "StreamSession": "repro.store.store",
-    "window_acf": "repro.store.query",
-    "window_mean": "repro.store.query",
-    "window_sum": "repro.store.query",
-    "window_var": "repro.store.query",
     "chimp_stream_bits": "repro.store.codec",
     "compression_ratio_bytes": "repro.store.codec",
     "encode_series_payload": "repro.store.codec",
     "gorilla_stream_bits": "repro.store.codec",
 }
+# deprecated free-function query surface: kept working, but warns — the
+# façade (repro.api Series.sum/mean/var/acf) is the documented path
+_DEPRECATED_QUERY = ("window_acf", "window_mean", "window_sum", "window_var")
 _SUBMODULES = ("blocks", "codec", "query", "store")
 
 
+def _deprecated_query(name):
+    fn = getattr(importlib.import_module("repro.store.query"), name)
+
+    @functools.wraps(fn)
+    def shim(*args, **kwargs):
+        warnings.warn(
+            f"repro.store.{name} is deprecated; use repro.api.open(...)"
+            f".series(sid).{name.split('_', 1)[1]} (or repro.store.query."
+            f"{name} if you really want the internal engine)",
+            DeprecationWarning, stacklevel=2)
+        return fn(*args, **kwargs)
+
+    return shim
+
+
 def __getattr__(name):
+    if name in _DEPRECATED_QUERY:
+        return _deprecated_query(name)
     if name in _EXPORTS:
         return getattr(importlib.import_module(_EXPORTS[name]), name)
     if name in _SUBMODULES:
@@ -53,4 +89,5 @@ def __getattr__(name):
 
 
 def __dir__():
-    return sorted(set(globals()) | set(_EXPORTS) | set(_SUBMODULES))
+    return sorted(set(globals()) | set(_EXPORTS) | set(_DEPRECATED_QUERY)
+                  | set(_SUBMODULES))

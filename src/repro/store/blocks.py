@@ -375,6 +375,215 @@ def parse_block(body: bytes, *, with_payload: bool = True):
 
 
 # ---------------------------------------------------------------------------
+# multivariate blocks (store format v4): one shared index stream per block,
+# per-column value streams + per-column pushdown metadata
+# ---------------------------------------------------------------------------
+
+# fixed mvar header: t0 t1 n_kept C | L kappa hv_len tv_len | stat vcodec
+# idx_ent vals_ent flags meta_codec | eps | idx_bits val_bits | raw_nbytes
+# idx_nbytes vals_nbytes meta_nbytes
+_MHDR = struct.Struct("<QQIH HHHH BBBBBB d QQ IIII")
+
+
+@dataclasses.dataclass(frozen=True)
+class MBlockMeta:
+    """Decoded multivariate block header.
+
+    The per-column fields are arrays over the ``channels`` axis; ``col(c)``
+    projects one column into an ordinary :class:`BlockMeta` (the Eq. 7
+    moment rows derived exactly as for v3 univariate headers), so the
+    pushdown machinery in ``store/query.py`` serves any single column
+    without knowing the block is multivariate.
+    """
+
+    t0: int
+    t1: int
+    n_kept: int
+    channels: int
+    L: int
+    kappa: int
+    stat: str
+    eps: float
+    is_last: bool
+    has_resid: bool
+    vmin: np.ndarray        # [C]
+    vmax: np.ndarray        # [C]
+    vsum: np.ndarray        # [C]
+    vsumsq: np.ndarray      # [C]
+    r1: np.ndarray          # [C]
+    r2: np.ndarray          # [C]
+    rx: np.ndarray          # [C]
+    emax: np.ndarray        # [C]
+    sxx: np.ndarray         # [C, L] Eq. 7 lagged products per column
+    head_vec: np.ndarray    # [C, min(L, owned)]
+    tail_vec: np.ndarray    # [C, min(L, owned)]
+    idx_bits: int
+    val_bits: int
+    raw_nbytes: int
+    payload_nbytes: int
+    vcodec: str
+    entropy: str
+
+    @property
+    def span(self) -> int:
+        return self.t1 - self.t0 + 1
+
+    @property
+    def o0(self) -> int:
+        return self.t0
+
+    @property
+    def o1(self) -> int:
+        return self.t1 + 1 if self.is_last else self.t1
+
+    def col(self, c: int) -> BlockMeta:
+        """Single-column view: a v3-equivalent univariate header whose
+        moment rows are derived from this block's per-column metadata."""
+        agg = derive_aggregate_rows(
+            self.sxx[c], self.head_vec[c], self.tail_vec[c],
+            float(self.vsum[c]), float(self.vsumsq[c]), self.o1 - self.t0)
+        return BlockMeta(
+            t0=self.t0, t1=self.t1, n_kept=self.n_kept, L=self.L,
+            kappa=self.kappa, stat=self.stat, eps=self.eps,
+            is_last=self.is_last, has_resid=self.has_resid,
+            vmin=float(self.vmin[c]), vmax=float(self.vmax[c]),
+            vsum=float(self.vsum[c]), vsumsq=float(self.vsumsq[c]),
+            r1=float(self.r1[c]), r2=float(self.r2[c]),
+            rx=float(self.rx[c]), emax=float(self.emax[c]),
+            agg=agg, head_vec=self.head_vec[c], tail_vec=self.tail_vec[c],
+            idx_bits=self.idx_bits, val_bits=self.val_bits,
+            raw_nbytes=self.raw_nbytes, payload_nbytes=self.payload_nbytes,
+            vcodec=self.vcodec, entropy=self.entropy)
+
+
+def build_mblock(kept_idx, kept_vals, *, t0: int, t1: int, is_last: bool,
+                 owned_xr: np.ndarray, L: int, kappa: int, stat: str,
+                 eps: float, resid: Optional[np.ndarray] = None,
+                 value_codec: str = "gorilla", entropy: str = "auto"):
+    """Encode one multivariate block -> ``(body, info)``.
+
+    ``kept_vals`` is ``[k, C]`` (per-column values on the shared kept
+    index), ``owned_xr`` ``[owned, C]`` the per-column reconstructions over
+    the owned range, ``resid`` optionally ``[owned, C]``.  The index stream
+    is encoded **once** — the Sprintz-style shared-timestamp saving — while
+    values and the Eq. 7 pushdown metadata stay per-column, so single-column
+    reads and per-column error bounds cost nothing extra.
+    """
+    kept_idx = np.asarray(kept_idx, np.int64)
+    kept_vals = np.asarray(kept_vals, np.float64)
+    owned_xr = np.asarray(owned_xr, np.float64)
+    if kept_vals.ndim != 2 or owned_xr.ndim != 2:
+        raise ValueError("multivariate blocks want [k, C] values and "
+                         "[owned, C] reconstructions")
+    C = kept_vals.shape[1]
+    local_idx = kept_idx - t0
+
+    idx_bytes = _codec.encode_indices(local_idx)
+    idx_payload, idx_ent = _codec.entropy_wrap(idx_bytes, entropy)
+    streams = [_codec.VALUE_ENCODERS[value_codec](
+        np.ascontiguousarray(kept_vals[:, c])) for c in range(C)]
+    vals_raw = b"".join(len(s).to_bytes(4, "little") + s for s in streams)
+    vals_payload, vals_ent = _codec.entropy_wrap(vals_raw, entropy)
+    val_bits = sum(_codec.VALUE_BIT_COUNTERS[value_codec](
+        np.ascontiguousarray(kept_vals[:, c])) for c in range(C))
+
+    h = min(L, owned_xr.shape[0])
+    hv = owned_xr[:h].T                      # [C, h]
+    tv = owned_xr[owned_xr.shape[0] - h:].T  # [C, h]
+    sxx = np.stack([_slice_lag_products(owned_xr[:, c], L)
+                    for c in range(C)])      # [C, L]
+    flags = _FLAG_LAST if is_last else 0
+    if resid is not None:
+        resid = np.asarray(resid, np.float64)
+        flags |= _FLAG_RESID
+        r1 = resid.sum(axis=0)
+        r2 = np.einsum("nc,nc->c", resid, resid)
+        rx = np.einsum("nc,nc->c", owned_xr, resid)
+        emax = (np.abs(resid).max(axis=0) if resid.shape[0]
+                else np.zeros(C))
+    else:
+        r1 = r2 = rx = emax = np.zeros(C)
+    scalars = np.stack([
+        owned_xr.min(axis=0), owned_xr.max(axis=0),
+        owned_xr.sum(axis=0), np.einsum("nc,nc->c", owned_xr, owned_xr),
+        r1, r2, rx, emax])                   # [8, C]
+
+    meta_flat = np.concatenate([scalars.ravel(), sxx.ravel(),
+                                hv.ravel(), tv.ravel()])
+    meta_payload, meta_codec = pack_meta_vectors(meta_flat, entropy)
+
+    raw_nbytes = len(idx_bytes) + len(vals_raw)
+    header = _MHDR.pack(
+        t0, t1, int(kept_idx.shape[0]), C,
+        L, kappa, h, h,
+        STAT_CODES[stat], _VCODEC_CODES[value_codec],
+        _ENTROPY_CODES[idx_ent], _ENTROPY_CODES[vals_ent], flags,
+        _ENTROPY_CODES[meta_codec],
+        float(eps),
+        _codec.index_stream_bits(local_idx), val_bits,
+        raw_nbytes, len(idx_payload), len(vals_payload), len(meta_payload))
+    body = header + meta_payload + idx_payload + vals_payload
+    info = dict(payload_nbytes=len(idx_payload) + len(vals_payload),
+                meta_nbytes=len(meta_payload),
+                meta_raw_nbytes=int(meta_flat.nbytes))
+    return body + struct.pack("<I", zlib.crc32(body)), info
+
+
+def parse_mblock(body: bytes, *, with_payload: bool = True):
+    """Decode a multivariate block body -> ``(MBlockMeta, kept_idx_global,
+    kept_vals [k, C])``; ``with_payload=False`` skips the bitstreams."""
+    crc_stored, = struct.unpack("<I", body[-4:])
+    body = body[:-4]
+    if zlib.crc32(body) != crc_stored:
+        raise IOError("block corrupt: crc mismatch")
+    (t0, t1, n_kept, C, L, kappa, hv_len, tv_len, stat_c, vcodec_c,
+     idx_ent_c, vals_ent_c, flags, meta_c, eps, idx_bits, val_bits,
+     raw_nbytes, idx_nbytes, vals_nbytes,
+     meta_nbytes) = _MHDR.unpack(body[:_MHDR.size])
+    off = _MHDR.size
+    meta_count = 8 * C + C * L + C * hv_len + C * tv_len
+    meta_flat = unpack_meta_vectors(body[off:off + meta_nbytes], meta_count,
+                                    _ENTROPY_NAMES[meta_c])
+    off += meta_nbytes
+    scalars = meta_flat[:8 * C].reshape(8, C)
+    p = 8 * C
+    sxx = meta_flat[p:p + C * L].reshape(C, L)
+    p += C * L
+    hv = meta_flat[p:p + C * hv_len].reshape(C, hv_len)
+    p += C * hv_len
+    tv = meta_flat[p:p + C * tv_len].reshape(C, tv_len)
+    meta = MBlockMeta(
+        t0=t0, t1=t1, n_kept=n_kept, channels=C, L=L, kappa=kappa,
+        stat=STAT_NAMES[stat_c], eps=eps,
+        is_last=bool(flags & _FLAG_LAST),
+        has_resid=bool(flags & _FLAG_RESID),
+        vmin=scalars[0], vmax=scalars[1], vsum=scalars[2],
+        vsumsq=scalars[3], r1=scalars[4], r2=scalars[5], rx=scalars[6],
+        emax=scalars[7], sxx=sxx, head_vec=hv, tail_vec=tv,
+        idx_bits=idx_bits, val_bits=val_bits, raw_nbytes=raw_nbytes,
+        payload_nbytes=idx_nbytes + vals_nbytes,
+        vcodec=_VCODEC_NAMES[vcodec_c],
+        entropy=_ENTROPY_NAMES[vals_ent_c])
+    if not with_payload:
+        return meta, None, None
+    idx_raw = _codec.entropy_unwrap(body[off:off + idx_nbytes],
+                                    _ENTROPY_NAMES[idx_ent_c])
+    local_idx = _codec.decode_indices(idx_raw, n_kept)
+    off += idx_nbytes
+    vals_raw = _codec.entropy_unwrap(body[off:off + vals_nbytes],
+                                     _ENTROPY_NAMES[vals_ent_c])
+    vals = np.empty((n_kept, C), np.float64)
+    pos = 0
+    for c in range(C):
+        slen = int.from_bytes(vals_raw[pos:pos + 4], "little")
+        pos += 4
+        vals[:, c] = _codec.VALUE_DECODERS[meta.vcodec](
+            vals_raw[pos:pos + slen], n_kept)
+        pos += slen
+    return meta, local_idx + t0, vals
+
+
+# ---------------------------------------------------------------------------
 # bit-exact block reconstruction
 # ---------------------------------------------------------------------------
 

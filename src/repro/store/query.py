@@ -232,13 +232,64 @@ AGGREGATES = {
 }
 
 
-def query(store, sid: str, kind: str, a=None, b=None):
+class ColumnView:
+    """Single-column façade over a multivariate series.
+
+    Duck-types the four store entry points the pushdown machinery touches
+    (``series_meta`` / ``_overlapping`` / ``block_meta`` / ``read_window``),
+    projecting every multivariate block header onto one column
+    (``MBlockMeta.col``) and every decode onto one value stream — so the
+    aggregate functions above serve per-column answers *unchanged*, with
+    the same deterministic bound structure they give univariate series.
+    """
+
+    def __init__(self, store, sid: str, col: int):
+        C = store.channels(sid)
+        if not (0 <= int(col) < C):
+            raise ValueError(f"column {col} outside [0, {C}) for {sid!r}")
+        self._store = store
+        self._sid = sid
+        self.col = int(col)
+
+    def series_meta(self, sid: str) -> dict:
+        return self._store.series_meta(self._sid)
+
+    def _overlapping(self, sid: str, a: int, b: int):
+        return self._store._overlapping(self._sid, a, b)
+
+    def block_meta(self, sid: str, bi: int):
+        meta = self._store.block_meta(self._sid, bi)
+        return meta.col(self.col) if hasattr(meta, "col") else meta
+
+    def read_window(self, sid: str, a: int, b: int):
+        return self._store.read_window(self._sid, a, b, col=self.col)
+
+
+def query(store, sid: str, kind: str, a=None, b=None, col=None):
     """Dispatch a pushdown aggregate; ``a``/``b`` default to the full
-    series.  Returns ``(value, bound)``."""
+    series.  Returns ``(value, bound)``.
+
+    For a multivariate series, ``col`` selects one column; with
+    ``col=None`` the aggregate runs across **all** columns off a single
+    header pass (interior block headers are parsed once and cached, every
+    column projects from the same ``MBlockMeta``), returning stacked
+    ``(values [C, ...], bounds [C, ...])`` arrays.
+    """
     if kind not in AGGREGATES:
         raise ValueError(f"unknown aggregate {kind!r}; have "
                          f"{sorted(AGGREGATES)}")
-    n = store.series_meta(sid)["n"]
+    entry = store.series_meta(sid)
+    n = entry["n"]
     a = 0 if a is None else a
     b = n if b is None else b
-    return AGGREGATES[kind](store, sid, a, b)
+    C = int(entry.get("channels", 1))
+    if C == 1:
+        if col not in (None, 0):
+            raise ValueError(f"column {col} outside [0, 1) for "
+                             f"univariate series {sid!r}")
+        return AGGREGATES[kind](store, sid, a, b)
+    if col is not None:
+        return AGGREGATES[kind](ColumnView(store, sid, col), sid, a, b)
+    vals, bounds = zip(*(AGGREGATES[kind](ColumnView(store, sid, c),
+                                          sid, a, b) for c in range(C)))
+    return np.asarray(vals), np.asarray(bounds)

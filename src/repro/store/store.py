@@ -1,19 +1,28 @@
 """CameoStore — the on-disk physical layer under the compressor.
 
+Application code reaches this layer through the :mod:`repro.api` façade
+(``repro.api.open`` → ``Dataset.write/stream/series``); the store is the
+internal it drives.
+
 File layout (append-oriented: blocks stream to disk as series are ingested,
 the index is a footer written on ``flush``/``close``)::
 
-    magic "CAMEOST\\x03"
+    magic "CAMEOST\\x03" (or \\x04 once a multivariate block exists)
     [u32 body_len][block body + crc32] ...      (blocks, any series order)
     footer JSON (zlib)                           (series catalog)
     [u64 footer_offset][u32 footer_len][magic]
 
-Format v3 (this magic) derives the four redundant aggregate header rows
-from the edge vectors + scalar moments at parse time instead of storing
-them (see ``store/blocks.py`` — ~2.3x further header shrink on top of the
-v2 shuffle+delta coding).  v2 files read fine (the per-block flags byte
-says which layout a body uses); v1 files are refused loudly — reingest
-them.
+Format v3 derives the four redundant aggregate header rows from the edge
+vectors + scalar moments at parse time instead of storing them (see
+``store/blocks.py`` — ~2.3x further header shrink on top of the v2
+shuffle+delta coding).  Format **v4** adds multivariate series — one
+shared delta-of-delta kept-index stream per block, per-column value
+streams and per-column Eq. 7 metadata; the v4 magic is written exactly
+when the first multivariate block is (``_require_mvar`` rewrites the head
+magic in place), so univariate-only files stay bit-identical to v3
+writers.  v2/v3 files read fine (the per-block flags byte / catalog
+``channels`` say which layout a body uses); v1 files are refused loudly —
+reingest them.
 
 A crashed writer leaves a file without a footer; ``CameoStore.open`` refuses
 it loudly rather than serving a partial catalog.  Reopening with
@@ -50,7 +59,11 @@ reconstruction, so hot windows and repeated pushdown queries run at
 memcpy speed.  ``append_series`` invalidates the appended series' entries
 and ``cache_stats()`` reports hits/misses/evictions for the serving layer.
 Cache-miss fetches of multi-block windows coalesce blocks that sit
-contiguously in the file into single preads.
+contiguously in the file into single preads; **read-only opens** go one
+further and serve block bodies from an mmap of the file, so warm misses
+are page-cache slices with no syscalls at all (``CAMEO_MMAP=0`` or
+platforms without usable mmap fall back to the pread path — results are
+byte-identical either way).
 
 Roundtrip contract (tested property-style): for any compressed series,
 ``read_kept`` reproduces the kept mask and kept values bit-exactly, and
@@ -75,13 +88,16 @@ from repro.store import codec as _codec
 from repro.store.blocks import (
     BlockMeta,
     build_block,
+    build_mblock,
     parse_block,
+    parse_mblock,
     plan_block_bounds,
     reconstruct_block,
 )
 
 MAGIC = b"CAMEOST\x03"
-_MAGICS = {2: b"CAMEOST\x02", 3: MAGIC}   # readable format versions
+_MAGICS = {2: b"CAMEOST\x02", 3: MAGIC,   # readable format versions
+           4: b"CAMEOST\x04"}             # v4 = v3 + multivariate blocks
 _TAIL = struct.Struct("<QI")          # footer offset, footer byte length
 DEFAULT_CACHE_BYTES = 64 << 20
 
@@ -186,12 +202,15 @@ class CameoStore:
         self._streams: Dict[str, "StreamSession"] = {}  # open ingest streams
         self._writable = mode in ("w", "a")
         self._footer_dirty = False   # a footer sits at EOF; truncate first
+        self._mm = None              # mmap view (read-only opens, POSIX)
         if mode == "w":
             self._f = open(path, "w+b")
             self._f.write(_MAGICS[self.version])
         elif mode in ("r", "a"):
             self._f = open(path, "r+b" if mode == "a" else "rb")
             self._load_footer()
+            if mode == "r":
+                self._mm = self._open_mmap()
             if mode == "a":
                 # defer the footer truncation to the first append: until new
                 # bytes exist, the old footer (the sole copy of the catalog
@@ -229,7 +248,24 @@ class CameoStore:
             return
         if self._writable:
             self._write_footer()
+        if self._mm is not None:
+            self._mm.close()
+            self._mm = None
         self._f.close()
+
+    # -- mmap read path ------------------------------------------------------
+
+    def _open_mmap(self):
+        """Page-cache-backed view of a finalized store file; ``None`` when
+        disabled (``CAMEO_MMAP=0``) or unavailable (non-POSIX mmap quirks,
+        empty/special files) — callers fall back to pread."""
+        if os.environ.get("CAMEO_MMAP", "1").lower() in ("0", "false", "off"):
+            return None
+        try:
+            import mmap as _mmap
+            return _mmap.mmap(self._f.fileno(), 0, access=_mmap.ACCESS_READ)
+        except (ImportError, AttributeError, ValueError, OSError):
+            return None
 
     def flush(self):
         """Rewrite the footer so everything ingested so far — including the
@@ -304,6 +340,106 @@ class CameoStore:
 
     # -- ingest -------------------------------------------------------------
 
+    def _check_mvar_writable(self):
+        """Validate (without touching the file) that this store's format
+        can hold multivariate series."""
+        if self.version < 3:
+            raise ValueError(
+                "multivariate series need a v3+ store (the v2 compat "
+                "format is univariate-only)")
+
+    def _require_mvar(self):
+        """Flip the file format to v4 at the first multivariate block.
+
+        Files that only ever hold univariate series keep the v3 magic and
+        stay bit-identical to pre-v4 writers; the upgrade (head magic
+        rewritten in place, footer magic follows ``self.version``) happens
+        exactly when the first multivariate block is written.  Ordering
+        matters for crash safety: any stale footer is truncated *before*
+        the head magic flips, so a crash mid-upgrade leaves a file that is
+        already recognizably mid-write (no footer) — never an intact v3
+        footer behind a v4 head, which ``_load_footer``'s tail==head check
+        would refuse even though the old catalog was still good.
+        """
+        self._check_mvar_writable()
+        if self.version < 4:
+            self._ensure_appendable()
+            self.version = 4
+            self._f.seek(0)
+            self._f.write(_MAGICS[4])
+
+    @property
+    def _block_meta_version(self) -> int:
+        """Univariate block layout version (v4 files still write v3
+        univariate block bodies — v4 only adds the multivariate layout)."""
+        return min(self.version, 3)
+
+    def _mvar_body(self, kept_idx, kept_vals, *, t0: int, t1: int,
+                   is_last: bool, dtype: str, cfg, x64, x_off: int = 0):
+        """Encode one multivariate block: per-column canonical
+        reconstructions over the owned range + optional residual moments.
+        Shared by ``append_series`` and ``StreamSession`` so streamed and
+        one-shot multivariate files stay byte-identical."""
+        self._require_mvar()
+        o1 = t1 + 1 if is_last else t1
+        C = kept_vals.shape[1]
+        owned = np.stack(
+            [reconstruct_block(kept_idx - t0,
+                               np.ascontiguousarray(kept_vals[:, c]),
+                               t1 - t0 + 1, dtype)[:o1 - t0]
+             for c in range(C)], axis=1)
+        resid = None if x64 is None else x64[t0 - x_off:o1 - x_off] - owned
+        return build_mblock(
+            kept_idx, kept_vals, t0=t0, t1=t1, is_last=is_last,
+            owned_xr=owned, L=cfg.lags, kappa=cfg.kappa, stat=cfg.stat,
+            eps=cfg.eps, resid=resid, value_codec=self.value_codec,
+            entropy=self.entropy)
+
+    def _append_multivariate(self, sid: str, res, cfg, X=None) -> dict:
+        """Write one multivariate series (see ``append_series``)."""
+        kept = np.asarray(res.kept)
+        xr = np.asarray(res.xr)
+        n, C = xr.shape
+        self._check_mvar_writable()
+        kept_idx = np.nonzero(kept)[0].astype(np.int64)
+        kept_vals = np.ascontiguousarray(xr[kept_idx])
+        x64 = None if X is None else np.asarray(X, np.float64)[:n]
+        bounds = plan_block_bounds(kept_idx, self.block_len, cfg.lags)
+        devs = np.asarray(getattr(res, "deviations",
+                                  np.full(C, float(res.deviation))),
+                          np.float64)
+
+        blocks: List[dict] = []
+        nbytes = payload_nbytes = meta_nbytes = meta_raw_nbytes = 0
+        for bi in range(len(bounds) - 1):
+            t0, t1 = bounds[bi], bounds[bi + 1]
+            is_last = bi == len(bounds) - 2
+            sel = (kept_idx >= t0) & (kept_idx <= t1)
+            body, binfo = self._mvar_body(
+                kept_idx[sel], kept_vals[sel], t0=t0, t1=t1,
+                is_last=is_last, dtype=str(xr.dtype), cfg=cfg, x64=x64)
+            off = self._append_body(body)
+            nbytes += 4 + len(body)
+            payload_nbytes += binfo["payload_nbytes"]
+            meta_nbytes += binfo["meta_nbytes"]
+            meta_raw_nbytes += binfo["meta_raw_nbytes"]
+            blocks.append(dict(offset=off, nbytes=len(body), t0=t0, t1=t1))
+        self._f.flush()
+        entry = dict(
+            n=n, n_kept=int(kept_idx.shape[0]), dtype=str(xr.dtype),
+            eps=float(cfg.eps), stat=cfg.stat, lags=int(cfg.lags),
+            kappa=int(cfg.kappa), deviation=float(res.deviation),
+            value_codec=self.value_codec, stored_nbytes=nbytes,
+            payload_nbytes=payload_nbytes,
+            meta_nbytes=meta_nbytes, meta_raw_nbytes=meta_raw_nbytes,
+            has_resid=x64 is not None, channels=C,
+            deviations=[float(d) for d in devs], blocks=blocks)
+        self._series[sid] = entry
+        self._cache.invalidate(sid)
+        for key in [k for k in self._metas if k[0] == sid]:
+            del self._metas[key]
+        return entry
+
     def append_series(self, sid: str, res, cfg, x=None) -> dict:
         """Write one compressed series.
 
@@ -330,6 +466,8 @@ class CameoStore:
             raise ValueError(f"series {sid!r} already stored")
         kept = np.asarray(res.kept)
         xr = np.asarray(res.xr)
+        if xr.ndim == 2:
+            return self._append_multivariate(sid, res, cfg, X=x)
         n = int(kept.shape[0])
         kept_idx = np.nonzero(kept)[0].astype(np.int64)
         x64 = None if x is None else np.asarray(x, np.float64)[:n]
@@ -351,7 +489,7 @@ class CameoStore:
                 L=cfg.lags, kappa=cfg.kappa, stat=cfg.stat, eps=cfg.eps,
                 resid=None if x64 is None else x64[t0:o1] - owned_xr,
                 value_codec=self.value_codec, entropy=self.entropy,
-                meta_version=self.version)
+                meta_version=self._block_meta_version)
             off = self._append_body(body)
             nbytes += 4 + len(body)
             payload_nbytes += binfo["payload_nbytes"]
@@ -374,7 +512,7 @@ class CameoStore:
         return entry
 
     def open_stream(self, sid: str, cfg, *, dtype: str = None,
-                    with_resid: bool = True,
+                    with_resid: bool = True, channels: int = 1,
                     resume: bool = False) -> "StreamSession":
         """Open a streaming append session for one series.
 
@@ -429,6 +567,13 @@ class CameoStore:
                 value_codec=self.value_codec, stored_nbytes=0,
                 payload_nbytes=0, meta_nbytes=0, meta_raw_nbytes=0,
                 has_resid=bool(with_resid), blocks=[], streaming=True)
+            if int(channels) > 1:
+                # validate only — the v4 magic flips at the first
+                # multivariate block write, so a crash between open and
+                # the first block leaves the old footer fully readable
+                self._check_mvar_writable()
+                entry["channels"] = int(channels)
+                entry["deviations"] = [0.0] * int(channels)
             self._series[sid] = entry
             sess = StreamSession(self, sid, cfg, dtype=entry["dtype"],
                                  with_resid=with_resid, entry=entry)
@@ -449,6 +594,10 @@ class CameoStore:
     # -- block access -------------------------------------------------------
 
     def _read_body(self, blk: dict) -> bytes:
+        if self._mm is not None:
+            off = blk["offset"]
+            blen, = struct.unpack_from("<I", self._mm, off)
+            return self._mm[off + 4:off + 4 + blen]
         self._f.seek(blk["offset"])
         blen, = struct.unpack("<I", self._f.read(4))
         return self._f.read(blen)
@@ -456,7 +605,11 @@ class CameoStore:
     def _read_bodies(self, blks: List[dict]) -> List[bytes]:
         """One body per catalog entry; blocks that sit contiguously in the
         file are fetched with a single seek+read instead of one pread per
-        block (multi-block windows of an uninterleaved series are one IO)."""
+        block (multi-block windows of an uninterleaved series are one IO).
+        With an mmap attached every body is a page-cache slice — no
+        syscalls at all, so no coalescing is needed."""
+        if self._mm is not None:
+            return [self._read_body(b) for b in blks]
         out: List[bytes] = []
         i = 0
         while i < len(blks):
@@ -475,15 +628,26 @@ class CameoStore:
             i = j + 1
         return out
 
+    def channels(self, sid: str) -> int:
+        """Number of value columns (1 for univariate series)."""
+        return int(self._series[sid].get("channels", 1))
+
+    def _parse(self, sid: str):
+        """Body parser for this series' block layout (v4 multivariate
+        blocks vs the univariate v2/v3 layout)."""
+        return parse_mblock if self.channels(sid) > 1 else parse_block
+
     def block_meta(self, sid: str, bi: int) -> BlockMeta:
         """Header metadata of one block (no bitstream decode) — cached, so
-        repeated pushdown queries never re-read interior blocks."""
+        repeated pushdown queries never re-read interior blocks.  For a
+        multivariate series this is an ``MBlockMeta``; project one column
+        with ``.col(c)``."""
         key = (sid, bi)
         meta = self._metas.get(key)
         if meta is None:
             blk = self._series[sid]["blocks"][bi]
-            meta, _, _ = parse_block(self._read_body(blk),
-                                     with_payload=False)
+            meta, _, _ = self._parse(sid)(self._read_body(blk),
+                                          with_payload=False)
             self._metas[key] = meta
         return meta
 
@@ -491,12 +655,13 @@ class CameoStore:
         """Header-only metadata of every block of a series; uncached
         headers are fetched with coalesced preads."""
         blks = self._series[sid]["blocks"]
+        parse = self._parse(sid)
         missing = [bi for bi in range(len(blks))
                    if (sid, bi) not in self._metas]
         if missing:
             bodies = self._read_bodies([blks[bi] for bi in missing])
             for bi, body in zip(missing, bodies):
-                meta, _, _ = parse_block(body, with_payload=False)
+                meta, _, _ = parse(body, with_payload=False)
                 self._metas[(sid, bi)] = meta
         return [self._metas[(sid, bi)] for bi in range(len(blks))]
 
@@ -513,11 +678,14 @@ class CameoStore:
                 entries[bi] = e
         if misses:
             blks = self._series[sid]["blocks"]
+            parse = self._parse(sid)
             bodies = self._read_bodies([blks[bi] for bi in misses])
             for bi, body in zip(misses, bodies):
-                meta, idx, vals = parse_block(body)
+                meta, idx, vals = parse(body)
+                pmeta = (meta.sxx.nbytes if hasattr(meta, "sxx")
+                         else meta.agg.nbytes)
                 e = [meta, idx, vals, None,
-                     idx.nbytes + vals.nbytes + meta.agg.nbytes
+                     idx.nbytes + vals.nbytes + pmeta
                      + meta.head_vec.nbytes + meta.tail_vec.nbytes + 256]
                 self._cache.put((sid, bi), e)
                 self._metas[(sid, bi)] = meta
@@ -549,12 +717,15 @@ class CameoStore:
         """(indices, values) of the stored kept points over the readable
         range ``[0, n)`` — for a still-streaming series that excludes the
         last block's right border (it reappears as the next block's first
-        point when the stream continues)."""
+        point when the stream continues).  Multivariate values come back
+        ``[k, C]`` (the shared index stream is one array either way)."""
         entry = self._series[sid]
         dtype = np.dtype(entry["dtype"])
+        C = int(entry.get("channels", 1))
         nb = len(entry["blocks"])
         if nb == 0:      # streaming series before its first block commits
-            return np.empty(0, np.int64), np.empty(0, dtype)
+            return (np.empty(0, np.int64),
+                    np.empty(0 if C == 1 else (0, C), dtype))
         idx_parts, val_parts = [], []
         streaming = bool(entry.get("streaming"))
         for bi, e in enumerate(self._blocks(sid, list(range(nb)))):
@@ -571,33 +742,55 @@ class CameoStore:
         mask[self.read_kept(sid)[0]] = True
         return mask
 
-    def read_window(self, sid: str, a: int, b: int) -> np.ndarray:
+    def read_window(self, sid: str, a: int, b: int,
+                    col: int = None) -> np.ndarray:
         """Reconstruction slice ``xr[a:b]``, decoding only the blocks whose
         range overlaps the window.  Bit-exact vs the full reconstruction.
         Per-block reconstructions are attached to the LRU entries, so a hot
-        window skips pread, bitstream decode *and* interpolation."""
+        window skips pread, bitstream decode *and* interpolation.
+
+        For a multivariate series the slice is ``[b-a, C]``; ``col``
+        selects a single column (``[b-a]``).  All columns of a touched
+        block are reconstructed and cached together — a per-column query
+        loop pays the interpolation once."""
         entry = self._series[sid]
         n = entry["n"]
+        C = int(entry.get("channels", 1))
+        if col is not None and not (0 <= int(col) < C):
+            raise ValueError(f"column {col} outside [0, {C}) for {sid!r}")
         a, b = max(int(a), 0), min(int(b), n)
         dtype = np.dtype(entry["dtype"])
         if b <= a:
-            return np.empty(0, dtype)
-        out = np.empty(b - a, dtype)
+            return np.empty((0,) if C == 1 or col is not None else (0, C),
+                            dtype)
+        out = np.empty((b - a,) if C == 1 else (b - a, C), dtype)
         bis = self._overlapping(sid, a, b)
         for bi, e in zip(bis, self._blocks(sid, bis)):
             meta, xr_b = e[_E_META], e[_E_XR]
             if xr_b is None:
-                xr_b = reconstruct_block(e[_E_IDX] - meta.t0, e[_E_VALS],
-                                         meta.span, str(dtype))
+                if C == 1:
+                    xr_b = reconstruct_block(
+                        e[_E_IDX] - meta.t0, e[_E_VALS], meta.span,
+                        str(dtype))
+                else:
+                    xr_b = np.stack(
+                        [reconstruct_block(
+                            e[_E_IDX] - meta.t0,
+                            np.ascontiguousarray(e[_E_VALS][:, c]),
+                            meta.span, str(dtype)) for c in range(C)],
+                        axis=1)
                 e[_E_XR] = xr_b
                 self._cache.grow((sid, bi), xr_b.nbytes)
             lo, hi = max(a, meta.o0), min(b, meta.o1)
             out[lo - a:hi - a] = xr_b[lo - meta.t0:hi - meta.t0]
+        if col is not None and C > 1:
+            return np.ascontiguousarray(out[:, col])
         return out
 
-    def read_series(self, sid: str) -> np.ndarray:
-        """Whole-series reconstruction (bit-exact vs ``CompressResult.xr``)."""
-        return self.read_window(sid, 0, self._series[sid]["n"])
+    def read_series(self, sid: str, col: int = None) -> np.ndarray:
+        """Whole-series reconstruction (bit-exact vs ``CompressResult.xr``;
+        ``[n, C]`` for multivariate series, ``col`` selects one column)."""
+        return self.read_window(sid, 0, self._series[sid]["n"], col=col)
 
     # -- accounting ---------------------------------------------------------
 
@@ -615,10 +808,11 @@ class CameoStore:
         expose what the shuffle+delta coding saved on header metadata.
         """
         e = self._series[sid]
-        raw_nbytes = 8 * e["n"]
+        C = int(e.get("channels", 1))
+        raw_nbytes = 8 * e["n"] * C
         payload = e.get("payload_nbytes", e["stored_nbytes"])
         return dict(
-            n=e["n"], n_kept=e["n_kept"],
+            n=e["n"], n_kept=e["n_kept"], channels=C,
             point_cr=e["n"] / max(e["n_kept"], 1),
             stored_nbytes=e["stored_nbytes"],
             payload_nbytes=payload,
@@ -661,10 +855,13 @@ class StreamSession:
         self.dtype = np.dtype(dtype)
         self.with_resid = bool(with_resid)
         self._entry = entry
+        self.channels = int(entry.get("channels", 1))
         self._block_len = max(int(store.block_len), int(cfg.lags))
         self._closed = False
         self.state_provider = None        # callable -> JSON-safe blob
         self.restored_client_state = None
+        # pending value/original buffers are [k] univariate, [k, C] mvar
+        vshape = (0,) if self.channels == 1 else (0, self.channels)
         # pending state: consolidated arrays + unconsolidated append parts
         # (appends go to the lists; concatenation is deferred until a block
         # border is actually provable, so tiny-chunk feeds stay O(1)
@@ -674,8 +871,8 @@ class StreamSession:
         self._x_parts: List[np.ndarray] = []
         if stash is None:
             self._kept_idx = np.empty(0, np.int64)
-            self._kept_vals = np.empty(0, self.dtype)
-            self._x = np.empty(0, np.float64)
+            self._kept_vals = np.empty(vshape, self.dtype)
+            self._x = np.empty(vshape, np.float64)
             self._x_off = 0          # absolute index of _x[0]
             self._next = None        # expected start of the next append
             self._bound = None       # last committed block border
@@ -683,9 +880,11 @@ class StreamSession:
             self._total_kept = 0     # unique kept points seen
         else:
             self._kept_idx = np.asarray(stash["kept_idx"], np.int64)
-            self._kept_vals = np.asarray(stash["kept_vals"],
-                                         np.float64).astype(self.dtype)
-            self._x = np.asarray(stash["x"], np.float64)
+            self._kept_vals = np.asarray(
+                stash["kept_vals"],
+                np.float64).reshape(-1, *vshape[1:]).astype(self.dtype)
+            self._x = np.asarray(stash["x"],
+                                 np.float64).reshape(-1, *vshape[1:])
             self._x_off = int(stash["x_off"])
             self._next = None if stash["next"] is None else int(stash["next"])
             self._bound = (None if stash["bound"] is None
@@ -729,9 +928,15 @@ class StreamSession:
             raise ValueError(f"stream session for {self.sid!r} is closed")
         x = np.asarray(x)
         kept = np.asarray(kept, bool)
-        if x.shape != kept.shape or x.ndim != 1:
-            raise ValueError(f"window shapes disagree: x {x.shape} vs "
-                             f"kept {kept.shape}")
+        if self.channels == 1:
+            if x.shape != kept.shape or x.ndim != 1:
+                raise ValueError(f"window shapes disagree: x {x.shape} vs "
+                                 f"kept {kept.shape}")
+        elif (x.ndim != 2 or x.shape[1] != self.channels
+                or kept.shape != x.shape[:1]):
+            raise ValueError(
+                f"multivariate window wants x [m, {self.channels}] and "
+                f"kept [m]; got x {x.shape}, kept {kept.shape}")
         if self._next is not None and int(start) != self._next:
             raise ValueError(f"non-contiguous append: expected index "
                              f"{self._next}, got {start}")
@@ -787,18 +992,27 @@ class StreamSession:
             kept, vals = kept[:j + 1], vals[:j + 1]
         t0 = int(kept[0])
         o1 = t1 + 1 if is_last else t1
-        owned_xr = reconstruct_block(kept - t0, vals, t1 - t0 + 1,
-                                     str(self.dtype))[:o1 - t0]
-        resid = None
-        if self.with_resid:
-            resid = self._x[t0 - self._x_off:o1 - self._x_off] - owned_xr
         cfg = self.cfg
         store = self._store
-        body, binfo = build_block(
-            kept, vals, t0=t0, t1=t1, is_last=is_last, owned_xr=owned_xr,
-            L=cfg.lags, kappa=cfg.kappa, stat=cfg.stat, eps=cfg.eps,
-            resid=resid, value_codec=store.value_codec,
-            entropy=store.entropy, meta_version=store.version)
+        if self.channels > 1:
+            body, binfo = store._mvar_body(
+                kept, vals, t0=t0, t1=t1, is_last=is_last,
+                dtype=str(self.dtype), cfg=cfg,
+                x64=self._x if self.with_resid else None,
+                x_off=self._x_off)
+        else:
+            owned_xr = reconstruct_block(kept - t0, vals, t1 - t0 + 1,
+                                         str(self.dtype))[:o1 - t0]
+            resid = None
+            if self.with_resid:
+                resid = (self._x[t0 - self._x_off:o1 - self._x_off]
+                         - owned_xr)
+            body, binfo = build_block(
+                kept, vals, t0=t0, t1=t1, is_last=is_last,
+                owned_xr=owned_xr, L=cfg.lags, kappa=cfg.kappa,
+                stat=cfg.stat, eps=cfg.eps, resid=resid,
+                value_codec=store.value_codec, entropy=store.entropy,
+                meta_version=store._block_meta_version)
         off = store._append_body(body)
         e = self._entry
         bi = len(e["blocks"])
@@ -830,12 +1044,13 @@ class StreamSession:
 
     # -- finalize ------------------------------------------------------------
 
-    def close(self, deviation: float = 0.0) -> dict:
+    def close(self, deviation: float = 0.0, deviations=None) -> dict:
         """Write the tail blocks (full ``plan_block_bounds`` rule, the last
         one owning the stream's end point), finalize the catalog entry to
         the exact one-shot form, and return it.  ``deviation`` is recorded
         in the catalog (the serving layer passes the streaming compressor's
-        exact measured global deviation)."""
+        exact measured global deviation); multivariate sessions also record
+        the per-column ``deviations``."""
         if self._closed:
             raise ValueError(f"stream session for {self.sid!r} already "
                              "closed")
@@ -859,14 +1074,21 @@ class StreamSession:
         e["n"] = last + 1
         e["n_kept"] = self._total_kept
         e["deviation"] = float(deviation)
+        if self.channels > 1:
+            e["deviations"] = [float(d) for d in (
+                deviations if deviations is not None
+                else [deviation] * self.channels)]
         e.pop("streaming", None)
         e.pop("stream_state", None)
         # canonical key order — the finalized entry (hence the final footer
         # bytes) must match append_series's one-shot form exactly
-        final = {k: e[k] for k in (
-            "n", "n_kept", "dtype", "eps", "stat", "lags", "kappa",
-            "deviation", "value_codec", "stored_nbytes", "payload_nbytes",
-            "meta_nbytes", "meta_raw_nbytes", "has_resid", "blocks")}
+        keys = ("n", "n_kept", "dtype", "eps", "stat", "lags", "kappa",
+                "deviation", "value_codec", "stored_nbytes",
+                "payload_nbytes", "meta_nbytes", "meta_raw_nbytes",
+                "has_resid")
+        keys += (("channels", "deviations", "blocks") if self.channels > 1
+                 else ("blocks",))
+        final = {k: e[k] for k in keys}
         self._entry = final
         self._store._series[self.sid] = final
         self._store._streams.pop(self.sid, None)
@@ -884,7 +1106,7 @@ class StreamSession:
             bound=self._bound, next=self._next, x_off=self._x_off,
             committed=self._committed, total_kept=self._total_kept,
             kept_idx=[int(i) for i in self._kept_idx],
-            kept_vals=[float(v) for v in self._kept_vals],
-            x=[float(v) for v in self._x],
+            kept_vals=np.asarray(self._kept_vals, np.float64).tolist(),
+            x=np.asarray(self._x, np.float64).tolist(),
             client=(self.state_provider() if self.state_provider is not None
                     else None))

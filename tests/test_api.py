@@ -1,0 +1,257 @@
+"""The repro.api façade: univariate operations are byte/answer-identical
+to the legacy call paths they replace, streams resume, and the deprecated
+entry points warn but keep working."""
+import os
+import warnings
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+import repro.api as cameo
+from repro.core.acf import acf, pacf_from_acf
+from repro.core.cameo import CameoConfig, compress
+from repro.core.streaming import _compress_windowed, min_window_len
+from repro.serving.ts_service import TimeSeriesService, TsServiceConfig
+from repro.store import query as squery
+from repro.store.store import CameoStore
+
+CFG = CameoConfig(eps=2e-2, lags=12, mode="rounds", max_rounds=60,
+                  dtype="float64")
+
+
+def _series(n=2048, seed=0):
+    rng = np.random.default_rng(seed)
+    t = np.arange(n)
+    return (np.sin(2 * np.pi * t / 24) + np.sin(2 * np.pi * t / 168)
+            + 0.1 * rng.standard_normal(n))
+
+
+# ---------------------------------------------------------------------------
+# differential façade contract (univariate)
+# ---------------------------------------------------------------------------
+
+def test_write_bytes_identical_to_legacy_submit(tmp_path):
+    x = _series(2048, seed=1)
+    p_old = str(tmp_path / "old.cameo")
+    p_new = str(tmp_path / "new.cameo")
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        with TimeSeriesService(p_old, CFG,
+                               TsServiceConfig(block_len=512)) as svc:
+            svc.submit("s", x)
+    with cameo.open(p_new, CFG, mode="w", block_len=512) as ds:
+        ds.write("s", x)
+    assert open(p_old, "rb").read() == open(p_new, "rb").read()
+    # and the file stays v3: no multivariate block was ever written
+    assert open(p_new, "rb").read(8) == b"CAMEOST\x03"
+
+
+def test_series_answers_identical_to_legacy_query(tmp_path):
+    x = _series(2048, seed=2)
+    p = str(tmp_path / "q.cameo")
+    with cameo.open(p, CFG, mode="w", block_len=512) as ds:
+        ds.write("s", x)
+    ds = cameo.open(p)             # read-only handle, no cfg needed
+    s = ds.series("s")
+    store = CameoStore.open(p)
+    n = len(x)
+    assert np.array_equal(s.window(100, 1800), store.read_window("s", 100,
+                                                                 1800))
+    assert np.array_equal(s.window(), store.read_series("s"))
+    for name, legacy in (("sum", squery.window_sum),
+                         ("mean", squery.window_mean),
+                         ("var", squery.window_var),
+                         ("acf", squery.window_acf)):
+        got = getattr(s, name)(64, n - 64)
+        ref = legacy(store, "s", 64, n - 64)
+        assert np.array_equal(np.asarray(got[0]), np.asarray(ref[0])), name
+        assert np.array_equal(np.asarray(got[1]), np.asarray(ref[1])), name
+    ki, kv = s.kept()
+    ki2, kv2 = store.read_kept("s")
+    assert np.array_equal(ki, ki2) and np.array_equal(kv, kv2)
+    assert s.n == n and s.channels == 1
+    assert s.stats()["bytes_cr"] > 1.0
+    assert s.deviations.shape == (1,)
+    ds.close()
+    store.close()
+
+
+def test_stream_bytes_identical_to_legacy_and_oneshot(tmp_path):
+    x = _series(3000, seed=3)
+    wlen = max(1024, min_window_len(CFG))
+    p_old = str(tmp_path / "old.cameo")
+    p_new = str(tmp_path / "new.cameo")
+    p_ref = str(tmp_path / "ref.cameo")
+    scfg = TsServiceConfig(block_len=512, stream_window=wlen)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        with TimeSeriesService(p_old, CFG, scfg) as svc:
+            h = svc.ingest_stream("s")
+            for lo in range(0, 3000, 271):
+                h.push(x[lo:lo + 271])
+            h.close()
+    with cameo.open(p_new, CFG, mode="w", block_len=512,
+                    stream_window=wlen) as ds:
+        with ds.stream("s") as w:
+            for lo in range(0, 3000, 271):
+                w.push(x[lo:lo + 271])
+    # one-shot windowed reference through the internal oracle
+    ref = _compress_windowed(x, CFG, wlen)
+    with CameoStore.create(p_ref, block_len=512) as st:
+        st.append_series("s", ref, CFG, x=x)
+    old_b, new_b, ref_b = (open(p, "rb").read()
+                           for p in (p_old, p_new, p_ref))
+    assert new_b == old_b
+    assert new_b == ref_b
+
+
+def test_stream_resume_roundtrip(tmp_path):
+    x = _series(3000, seed=4)
+    wlen = max(1024, min_window_len(CFG))
+    p1 = str(tmp_path / "full.cameo")
+    p2 = str(tmp_path / "res.cameo")
+    with cameo.open(p1, CFG, mode="w", block_len=512,
+                    stream_window=wlen) as ds:
+        with ds.stream("s") as w:
+            for lo in range(0, 3000, 333):
+                w.push(x[lo:lo + 333])
+    ds = cameo.open(p2, CFG, mode="w", block_len=512, stream_window=wlen)
+    w = ds.stream("s")
+    for lo in range(0, 1332, 333):
+        w.push(x[lo:lo + 333])
+    ds.close()                      # stop mid-feed
+    ds = cameo.open(p2, CFG, mode="a", block_len=512, stream_window=wlen)
+    w = ds.stream("s", resume=True)
+    for lo in range(w.resume_from, 3000, 333):
+        w.push(x[lo:lo + 333])
+    entry = w.close()
+    ds.close()
+    assert open(p1, "rb").read() == open(p2, "rb").read()
+    assert entry["n"] == 3000
+
+
+def test_write_batch_equals_per_series(tmp_path):
+    xs = {f"s{i}": _series(512, seed=10 + i) for i in range(3)}
+    xs["long"] = _series(1024, seed=20)
+    p = str(tmp_path / "b.cameo")
+    with cameo.open(p, CFG, mode="w", block_len=256) as ds:
+        entries = ds.write_batch(xs)
+    assert sorted(entries) == sorted(xs)
+    r = CameoStore.open(p)
+    for sid, x in xs.items():
+        ref = np.asarray(compress(jnp.asarray(x), CFG).xr)
+        assert np.array_equal(r.read_series(sid).view(np.uint64),
+                              ref.view(np.uint64)), sid
+    with pytest.raises(ValueError, match="1-D"):
+        with cameo.open(str(tmp_path / "b2.cameo"), CFG, mode="w") as ds:
+            ds.write_batch({"m": np.zeros((64, 2))})
+
+
+def test_pacf_value_and_bound(tmp_path):
+    x = _series(2048, seed=6)
+    p = str(tmp_path / "p.cameo")
+    with cameo.open(p, CFG, mode="w", block_len=512) as ds:
+        ds.write("s", x)
+    s = cameo.open(p).series("s")
+    av, ab = s.acf(100, 1900)
+    pv, pb = s.pacf(100, 1900)
+    # value: exactly the compressor's Durbin-Levinson transform of the
+    # pushdown ACF answer
+    assert np.array_equal(pv, np.asarray(pacf_from_acf(jnp.asarray(av))))
+    # bound: covers the PACF of the exact reconstruction ACF
+    xr = np.asarray(s.window(100, 1900), np.float64)
+    ref = np.asarray(pacf_from_acf(acf(jnp.asarray(xr), CFG.lags)))
+    assert np.all(np.abs(pv - ref) <= pb)
+
+
+# ---------------------------------------------------------------------------
+# handle ergonomics + validation
+# ---------------------------------------------------------------------------
+
+def test_open_modes(tmp_path):
+    p = str(tmp_path / "m.cameo")
+    with pytest.raises(ValueError, match="needs a CameoConfig"):
+        cameo.open(p)              # missing file defaults to "w": needs cfg
+    with cameo.open(p, CFG) as ds:          # default "w" on a fresh path
+        ds.write("s", _series(512, seed=7))
+        assert ds.writable and "s" in ds and list(ds) == ["s"]
+    ds = cameo.open(p)                      # default "r" once it exists
+    assert not ds.writable
+    with pytest.raises(IOError, match="read-only"):
+        ds.write("t", _series(512))
+    assert ds.stats()["series"] == 1
+    ds.close()
+    with cameo.open(p, CFG, mode="a") as ds:  # append
+        ds.write("t", _series(512, seed=8))
+    assert sorted(cameo.open(p).sids()) == ["s", "t"]
+    with pytest.raises(ValueError, match="unknown mode"):
+        cameo.open(p, CFG, mode="x")
+    with pytest.raises(ValueError, match=r"\[n\] or \[n, C\]"):
+        with cameo.open(str(tmp_path / "z.cameo"), CFG) as ds:
+            ds.write("bad", np.zeros((4, 4, 4)))
+
+
+def test_single_column_2d_writes_univariate(tmp_path):
+    """[n, 1] input squeezes to a plain univariate series (no v4 block)."""
+    x = _series(1024, seed=9)
+    p = str(tmp_path / "c1.cameo")
+    with cameo.open(p, CFG, mode="w", block_len=256) as ds:
+        ds.write("s", x[:, None])
+    assert open(p, "rb").read(8) == b"CAMEOST\x03"
+    s = cameo.open(p).series("s")
+    assert s.channels == 1 and s.window().ndim == 1
+
+
+# ---------------------------------------------------------------------------
+# deprecation shims
+# ---------------------------------------------------------------------------
+
+def test_legacy_entry_points_warn(tmp_path):
+    x = _series(1024, seed=12)
+    p = str(tmp_path / "w.cameo")
+    with TimeSeriesService(p, CFG, TsServiceConfig(block_len=256)) as svc:
+        with pytest.warns(DeprecationWarning, match="submit is deprecated"):
+            svc.submit("s", x)
+        svc.flush()
+        with pytest.warns(DeprecationWarning,
+                          match="ingest_stream is deprecated"):
+            h = svc.ingest_stream("t", window_len=max(512,
+                                                      min_window_len(CFG)))
+        h.push(x)
+        h.close()
+
+    import repro.store as store_pkg
+    r = CameoStore.open(p)
+    with pytest.warns(DeprecationWarning, match="window_mean is deprecated"):
+        v, b = store_pkg.window_mean(r, "s", 10, 500)
+    # the shim forwards to the very same engine the façade uses
+    assert (v, b) == squery.window_mean(r, "s", 10, 500)
+
+    from repro.core.streaming import compress_windowed
+    with pytest.warns(DeprecationWarning, match="compress_windowed"):
+        compress_windowed(x, CFG, max(512, min_window_len(CFG)))
+
+
+def test_mvar_convenience_through_facade(tmp_path):
+    """Dataset.write with [n, C] + Series col reads (smoke-level; the deep
+    multivariate contracts live in test_multivariate.py)."""
+    rng = np.random.default_rng(13)
+    n = 1536
+    X = np.stack([_series(n, seed=14),
+                  _series(n, seed=15) + 0.5], axis=1)
+    p = str(tmp_path / "mv.cameo")
+    with cameo.open(p, CFG, mode="w", block_len=384) as ds:
+        entry = ds.write("m", X)
+    assert entry["channels"] == 2
+    assert open(p, "rb").read(8) == b"CAMEOST\x04"
+    s = cameo.open(p).series("m")
+    assert s.channels == 2
+    assert s.window().shape == (n, 2)
+    v, b = s.mean(100, 1400)
+    assert v.shape == b.shape == (2,)
+    for c in range(2):
+        assert abs(v[c] - X[100:1400, c].mean()) <= b[c]
+    pv, pb = s.pacf(col=1)
+    assert pv.shape == (CFG.lags,)
+    assert np.all(s.deviations <= CFG.eps + 1e-12)

@@ -1,0 +1,303 @@
+"""Multivariate contracts: shared-index roundtrips are bit-exact per
+column, per-column ε holds measured on the decode, pushdown bounds hold
+across blockings, and streamed ingest is byte-identical to one-shot."""
+import os
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from conftest import hypothesis_or_stubs
+from repro.core.acf import acf, aggregate_series
+from repro.core.cameo import CameoConfig, compress_multivariate
+from repro.core.measures import mae
+from repro.core.streaming import (MVStreamingCompressor, compress_windowed_mv,
+                                  min_window_len)
+from repro.store import query as squery
+from repro.store.store import CameoStore
+
+given, settings, st = hypothesis_or_stubs()
+
+CFG = CameoConfig(eps=2e-2, lags=12, mode="rounds", max_rounds=60,
+                  dtype="float64")
+
+
+def _mv_series(n=2048, C=3, seed=0):
+    rng = np.random.default_rng(seed)
+    t = np.arange(n)
+    base = 3 * np.sin(2 * np.pi * t / 24) + np.sin(2 * np.pi * t / 168)
+    cols = [base + 0.2 * rng.standard_normal(n)]
+    for c in range(1, C):
+        cols.append(0.5 / c * base + c
+                    + np.cos(2 * np.pi * t / (24 * c))
+                    + 0.15 * rng.standard_normal(n))
+    return np.stack(cols, axis=1)
+
+
+@pytest.fixture(scope="module")
+def stored_mv(tmp_path_factory):
+    X = _mv_series(3072, C=3, seed=5)
+    res = compress_multivariate(X, CFG)
+    path = str(tmp_path_factory.mktemp("mv") / "m.cameo")
+    with CameoStore.create(path, block_len=512) as w:
+        w.append_series("m", res, CFG, x=X)
+    return CameoStore.open(path), X, res
+
+
+# ---------------------------------------------------------------------------
+# compression contract
+# ---------------------------------------------------------------------------
+
+def test_union_mask_and_values(stored_mv):
+    store, X, res = stored_mv
+    # union keeps strictly every column's own kept points and the endpoints
+    assert res.kept[0] and res.kept[-1]
+    assert res.n_kept == int(res.kept.sum())
+    idx = np.flatnonzero(res.kept)
+    # per-column values on the shared index are the ORIGINALS
+    assert np.array_equal(res.xr[idx], X[idx])
+
+
+def test_per_column_eps_guarantee(stored_mv):
+    """The acceptance criterion: every column's measured ACF deviation on
+    the decoded reconstruction respects the configured ε."""
+    store, X, res = stored_mv
+    got = store.read_series("m")
+    for c in range(X.shape[1]):
+        s0 = acf(jnp.asarray(aggregate_series(
+            jnp.asarray(X[:, c]), CFG.kappa)), CFG.lags)
+        s1 = acf(jnp.asarray(aggregate_series(
+            jnp.asarray(got[:, c], np.float64), CFG.kappa)), CFG.lags)
+        dev = float(mae(s1, s0))
+        assert dev <= CFG.eps + 1e-12, (c, dev)
+        # the recorded per-column deviation is the measured one
+        np.testing.assert_allclose(
+            store.series_meta("m")["deviations"][c], dev,
+            rtol=1e-9, atol=1e-12)
+
+
+def test_roundtrip_bit_exact(stored_mv):
+    store, X, res = stored_mv
+    got = store.read_series("m")
+    assert got.shape == X.shape
+    assert np.array_equal(got.view(np.uint64), res.xr.view(np.uint64))
+    ki, kv = store.read_kept("m")
+    assert np.array_equal(ki, np.flatnonzero(res.kept))
+    assert np.array_equal(kv.view(np.uint64), X[ki].view(np.uint64))
+    assert np.array_equal(store.kept_mask("m"), res.kept)
+
+
+def test_column_decode_equals_standalone_store(stored_mv, tmp_path):
+    """The differential façade contract: decoding any single column equals
+    compressing-and-storing that column's kept points standalone on the
+    shared index."""
+    store, X, res = stored_mv
+
+    class _Fake:
+        pass
+
+    for c in range(X.shape[1]):
+        f = _Fake()
+        f.kept = res.kept
+        f.xr = np.ascontiguousarray(res.xr[:, c])
+        f.deviation = float(res.deviations[c])
+        p = str(tmp_path / f"col{c}.cameo")
+        with CameoStore.create(p, block_len=512) as w:
+            w.append_series("c", f, CFG, x=X[:, c])
+        r = CameoStore.open(p)
+        assert np.array_equal(
+            r.read_series("c").view(np.uint64),
+            store.read_series("m", col=c).view(np.uint64)), c
+        ki_u, kv_u = r.read_kept("c")
+        ki_m, kv_m = store.read_kept("m")
+        assert np.array_equal(ki_u, ki_m)           # shared index bit-exact
+        assert np.array_equal(kv_u, kv_m[:, c])     # kept values bit-exact
+
+
+def test_window_reads_equal_slices(stored_mv):
+    store, X, res = stored_mv
+    rng = np.random.default_rng(2)
+    n = X.shape[0]
+    for _ in range(25):
+        a = int(rng.integers(0, n))
+        b = int(rng.integers(a, n + 1))
+        got = store.read_window("m", a, b)
+        assert np.array_equal(got, res.xr[a:b])
+        c = int(rng.integers(0, X.shape[1]))
+        assert np.array_equal(store.read_window("m", a, b, col=c),
+                              res.xr[a:b, c])
+
+
+def test_target_cr_mode_reports_deviations():
+    X = _mv_series(1024, C=2, seed=9)
+    cfg = CameoConfig(eps=2e-2, lags=8, mode="rounds", max_rounds=40,
+                      target_cr=4.0, dtype="float64")
+    res = compress_multivariate(X, cfg)
+    assert res.n_kept >= X.shape[0] / 4.0 / 2  # union of two ~4x columns
+    assert np.all(np.isfinite(res.deviations))
+
+
+def test_bad_shapes_rejected():
+    with pytest.raises(ValueError, match=r"\[n, C\]"):
+        compress_multivariate(np.zeros(100), CFG)
+
+
+# ---------------------------------------------------------------------------
+# pushdown bounds per column, across blockings
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("block_len", [256, 512, 1024])
+def test_pushdown_bounds_across_blockings(tmp_path, block_len):
+    X = _mv_series(2048, C=2, seed=11)
+    res = compress_multivariate(X, CFG)
+    p = str(tmp_path / f"b{block_len}.cameo")
+    with CameoStore.create(p, block_len=block_len) as w:
+        w.append_series("m", res, CFG, x=X)
+    r = CameoStore.open(p)
+    rng = np.random.default_rng(block_len)
+    n = X.shape[0]
+    for _ in range(20):
+        a = int(rng.integers(0, n - 400))
+        b = int(rng.integers(a + 300, n + 1))
+        for c in range(X.shape[1]):
+            s, bs = squery.query(r, "m", "sum", a, b, col=c)
+            assert abs(s - X[a:b, c].sum()) <= bs
+            v, bv = squery.query(r, "m", "var", a, b, col=c)
+            assert abs(v - X[a:b, c].var()) <= bv
+            av, ab_ = squery.query(r, "m", "acf", a, b, col=c)
+            ref = np.asarray(acf(jnp.asarray(res.xr[a:b, c]), CFG.lags))
+            assert np.all(np.abs(av - ref) <= ab_)
+    # cross-column form: one call, stacked per-column answers
+    vals, bounds = squery.query(r, "m", "mean", 64, n - 64)
+    assert vals.shape == bounds.shape == (X.shape[1],)
+    for c in range(X.shape[1]):
+        assert abs(vals[c] - X[64:n - 64, c].mean()) <= bounds[c]
+
+
+def test_column_view_validation(stored_mv):
+    store, X, res = stored_mv
+    with pytest.raises(ValueError, match="outside"):
+        squery.ColumnView(store, "m", X.shape[1])
+    with pytest.raises(ValueError, match="outside"):
+        squery.ColumnView(store, "m", -1)
+
+
+# ---------------------------------------------------------------------------
+# streaming: chunking invariance + byte identity + resume
+# ---------------------------------------------------------------------------
+
+def _stream_store(path, X, cfg, wlen, chunks, block_len=512):
+    with CameoStore.create(path, block_len=block_len) as store:
+        sess = store.open_stream("m", cfg, channels=X.shape[1])
+        comp = MVStreamingCompressor(cfg, wlen, X.shape[1])
+        sess.state_provider = comp.state_dict
+        lo = 0
+        for sz in chunks:
+            for w in comp.push(X[lo:lo + sz]):
+                sess.append_window(w)
+            lo += sz
+        for w in comp.finish():
+            sess.append_window(w)
+        sess.close(deviation=comp.deviation(), deviations=comp.deviations())
+
+
+def test_streamed_bytes_equal_oneshot_across_chunkings(tmp_path):
+    X = _mv_series(3072, C=2, seed=21)
+    wlen = max(512, min_window_len(CFG))
+    ref = compress_windowed_mv(X, CFG, wlen)
+    p_ref = str(tmp_path / "ref.cameo")
+    with CameoStore.create(p_ref, block_len=512) as w:
+        w.append_series("m", ref, CFG, x=X)
+    ref_bytes = open(p_ref, "rb").read()
+    n = X.shape[0]
+    for chunks in ([n], [1000] * 3 + [n - 3000], [333] * (n // 333) + [n % 333]):
+        p = str(tmp_path / f"c{chunks[0]}.cameo")
+        _stream_store(p, X, CFG, wlen, [c for c in chunks if c])
+        assert open(p, "rb").read() == ref_bytes, chunks
+    # and the one-shot windowed result is itself within per-column eps on
+    # every full window's kappa-divisible span (per-window guarantee)
+    assert np.all(ref.deviations >= 0)
+
+
+def test_streamed_pushdown_matches_oneshot(tmp_path):
+    """Pushdown answers + bounds are identical for streamed vs one-shot
+    ingest (same bytes -> same blocks -> same metadata), across a blocking
+    different from the window length."""
+    X = _mv_series(2560, C=2, seed=23)
+    wlen = max(512, min_window_len(CFG))
+    ref = compress_windowed_mv(X, CFG, wlen)
+    p1 = str(tmp_path / "one.cameo")
+    p2 = str(tmp_path / "str.cameo")
+    with CameoStore.create(p1, block_len=384) as w:
+        w.append_series("m", ref, CFG, x=X)
+    _stream_store(p2, X, CFG, wlen, [700] * 3 + [460], block_len=384)
+    r1, r2 = CameoStore.open(p1), CameoStore.open(p2)
+    for kind in ("sum", "mean", "var", "acf"):
+        for c in range(2):
+            v1, b1 = squery.query(r1, "m", kind, 100, 2400, col=c)
+            v2, b2 = squery.query(r2, "m", kind, 100, 2400, col=c)
+            assert np.array_equal(np.asarray(v1), np.asarray(v2))
+            assert np.array_equal(np.asarray(b1), np.asarray(b2))
+
+
+def test_mv_stream_resume_bit_exact(tmp_path):
+    import repro.api as cameo
+    X = _mv_series(3000, C=2, seed=29)
+    wlen = max(512, min_window_len(CFG))
+    p1 = str(tmp_path / "full.cameo")
+    p2 = str(tmp_path / "resumed.cameo")
+    ds = cameo.open(p1, CFG, mode="w", block_len=512, stream_window=wlen)
+    w = ds.stream("m", channels=2)
+    for lo in range(0, 3000, 271):
+        w.push(X[lo:lo + 271])
+    w.close()
+    ds.close()
+    ds = cameo.open(p2, CFG, mode="w", block_len=512, stream_window=wlen)
+    w = ds.stream("m", channels=2)
+    for lo in range(0, 1500, 271):
+        w.push(X[lo:lo + 271])
+    ds.close()                     # stop mid-feed: state stashed in footer
+    ds = cameo.open(p2, CFG, mode="a", block_len=512, stream_window=wlen)
+    w = ds.stream("m", resume=True)
+    assert w.channels == 2
+    for lo in range(w.resume_from, 3000, 271):
+        w.push(X[lo:lo + 271])
+    w.close()
+    ds.close()
+    assert open(p1, "rb").read() == open(p2, "rb").read()
+
+
+def test_mv_stream_rejects_bad_chunks():
+    comp = MVStreamingCompressor(CFG, 512, 3)
+    with pytest.raises(ValueError, match=r"\[m, 3\]"):
+        comp.push(np.zeros((10, 2)))
+    with pytest.raises(ValueError, match="channels"):
+        MVStreamingCompressor(CFG, 512, None)
+
+
+# ---------------------------------------------------------------------------
+# property roundtrip
+# ---------------------------------------------------------------------------
+
+@given(st.integers(0, 2**32 - 1), st.integers(2, 4),
+       st.sampled_from([256, 512]))
+@settings(max_examples=6, deadline=None)
+def test_mv_roundtrip_property(seed, C, block_len):
+    """For arbitrary fleets and blockings: the shared index stream and
+    every column's kept values round-trip bit-exactly, and per-column
+    deviations respect ε."""
+    X = _mv_series(1536, C=C, seed=seed % 997)
+    res = compress_multivariate(X, CFG)
+    assert np.all(res.deviations <= CFG.eps + 1e-12)
+    import tempfile
+    with tempfile.TemporaryDirectory() as tmpdir:
+        p = os.path.join(tmpdir, "m.cameo")
+        with CameoStore.create(p, block_len=block_len) as w:
+            w.append_series("m", res, CFG, x=X)
+        r = CameoStore.open(p)
+        ki, kv = r.read_kept("m")
+        assert np.array_equal(ki, np.flatnonzero(res.kept))
+        assert np.array_equal(kv.view(np.uint64), X[ki].view(np.uint64))
+        got = r.read_series("m")
+        assert np.array_equal(got.view(np.uint64),
+                              res.xr.view(np.uint64))

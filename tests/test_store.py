@@ -347,6 +347,154 @@ def test_v2_store_read_compatibility(tmp_path):
         assert np.all(np.abs(np.asarray(v2v) - np.asarray(v3v)) <= b2 + b3)
 
 
+def test_v3_univariate_files_unchanged_and_readable(tmp_path):
+    """Format hygiene, part 1: a store that only ever holds univariate
+    series writes the v3 magic at head and tail — bit-identical to a
+    pre-v4 writer — and reads back exactly."""
+    x = _series(1024, seed=31)
+    res = compress(jnp.asarray(x), CFG)
+    p = str(tmp_path / "v3.cameo")
+    with CameoStore.create(p, block_len=256) as w:
+        w.append_series("s", res, CFG, x=x)
+    raw = open(p, "rb").read()
+    assert raw[:8] == b"CAMEOST\x03" and raw[-8:] == b"CAMEOST\x03"
+    r = CameoStore.open(p)
+    assert r.version == 3
+    assert np.array_equal(r.read_series("s").view(np.uint64),
+                          np.asarray(res.xr).view(np.uint64))
+
+
+def test_v4_magic_only_when_multivariate(tmp_path):
+    """Format hygiene, part 2: the v4 magic appears exactly when a
+    multivariate block is written — and univariate series inside a v4
+    file still read bit-exactly (their block bodies stay v3-layout)."""
+    from repro.core.cameo import compress_multivariate
+    x = _series(1024, seed=32)
+    X = np.stack([x, np.roll(x, 3) + 1.0], axis=1)
+    res = compress(jnp.asarray(x), CFG)
+    mres = compress_multivariate(X, CFG)
+    p = str(tmp_path / "v4.cameo")
+    with CameoStore.create(p, block_len=256) as w:
+        w.append_series("u", res, CFG, x=x)
+        assert w.version == 3          # still univariate-only
+        w.append_series("m", mres, CFG, x=X)
+        assert w.version == 4          # upgraded at the first mvar block
+    raw = open(p, "rb").read()
+    assert raw[:8] == b"CAMEOST\x04" and raw[-8:] == b"CAMEOST\x04"
+    r = CameoStore.open(p)
+    assert r.version == 4
+    assert r.channels("u") == 1 and r.channels("m") == 2
+    assert np.array_equal(r.read_series("u").view(np.uint64),
+                          np.asarray(res.xr).view(np.uint64))
+    assert np.array_equal(r.read_series("m").view(np.uint64),
+                          mres.xr.view(np.uint64))
+    # v2 compat stores refuse multivariate ingest loudly
+    p2 = str(tmp_path / "v2.cameo")
+    with CameoStore.create(p2, block_len=256, version=2) as w:
+        with pytest.raises(ValueError, match="univariate-only"):
+            w.append_series("m", mres, CFG, x=X)
+        w.append_series("u", res, CFG, x=x)
+    assert open(p2, "rb").read(8) == b"CAMEOST\x02"
+
+
+def test_mvar_stream_open_crash_leaves_v3_footer_readable(tmp_path):
+    """Crash-safety: opening a multivariate stream touches nothing until
+    its first block commits, so a crash between open and first block
+    leaves the head magic at v3 and the old footer (hence every
+    previously stored series) fully readable."""
+    x = _series(1024, seed=41)
+    res = compress(jnp.asarray(x), CFG)
+    p = str(tmp_path / "crash.cameo")
+    with CameoStore.create(p, block_len=256) as w:
+        w.append_series("u", res, CFG, x=x)
+    w = CameoStore.open(p, mode="a")
+    w.open_stream("mv", CFG, channels=2)
+    w._f.close()                    # simulate a crash: no flush, no close
+    raw = open(p, "rb").read()
+    assert raw[:8] == b"CAMEOST\x03" and raw[-8:] == b"CAMEOST\x03"
+    r = CameoStore.open(p)          # must NOT be refused
+    assert np.array_equal(r.read_series("u").view(np.uint64),
+                          np.asarray(res.xr).view(np.uint64))
+
+
+def test_univariate_col_argument_validated(stored):
+    store, x, xr, kept = stored
+    with pytest.raises(ValueError, match="outside"):
+        squery.query(store, "s", "mean", 0, 100, col=5)
+    with pytest.raises(ValueError, match="outside"):
+        store.read_window("s", 0, 100, col=5)
+    # col=0 on a univariate series is the series itself
+    assert np.array_equal(store.read_window("s", 0, 100, col=0), xr[:100])
+    v0 = squery.query(store, "s", "mean", 0, 100, col=0)
+    assert v0 == squery.query(store, "s", "mean", 0, 100)
+
+
+def test_mvar_block_roundtrip_and_crc(tmp_path):
+    """build_mblock/parse_mblock: shared index + per-column values round-
+    trip bit-exactly, per-column metadata matches the slice truth, and the
+    crc catches corruption."""
+    from repro.store.blocks import build_mblock, parse_mblock
+    rng = np.random.default_rng(33)
+    idx = np.sort(rng.choice(1000, 80, replace=False)).astype(np.int64)
+    idx[0], idx[-1] = 0, 999
+    vals = rng.standard_normal((80, 3))
+    owned = np.stack([np.interp(np.arange(1000), idx, vals[:, c])
+                      for c in range(3)], axis=1)
+    body, info = build_mblock(
+        idx, vals, t0=0, t1=999, is_last=True, owned_xr=owned,
+        L=8, kappa=1, stat="acf", eps=1e-2,
+        resid=0.01 * rng.standard_normal((1000, 3)))
+    meta, gidx, gvals = parse_mblock(body)
+    assert meta.channels == 3 and meta.n_kept == 80 and meta.is_last
+    assert np.array_equal(gidx, idx)
+    assert np.array_equal(gvals.view(np.uint64), vals.view(np.uint64))
+    for c in range(3):
+        np.testing.assert_allclose(meta.vsum[c], owned[:, c].sum())
+        cm = meta.col(c)
+        assert cm.n_kept == 80 and cm.L == 8
+        ref = _slice_aggregates(owned[:, c], 8)
+        assert np.array_equal(cm.agg[4].view(np.uint64),
+                              ref[4].view(np.uint64))
+        np.testing.assert_allclose(cm.agg, ref, rtol=1e-12, atol=1e-9)
+    bad = bytearray(body)
+    bad[len(bad) // 2] ^= 0xFF
+    with pytest.raises(IOError, match="crc"):
+        parse_mblock(bytes(bad))
+
+
+def test_mmap_reads_match_pread_path(stored, monkeypatch):
+    """mmap satellite: read-only opens serve byte/bit-identical results
+    with and without the mmap fast path (CAMEO_MMAP=0 forces preads)."""
+    store, x, xr, kept = stored
+    r_mm = CameoStore.open(store.path)
+    monkeypatch.setenv("CAMEO_MMAP", "0")
+    r_rd = CameoStore.open(store.path)
+    if r_mm._mm is None:
+        pytest.skip("mmap unavailable on this platform")
+    assert r_rd._mm is None
+    blks = store.series_meta("s")["blocks"]
+    assert [r_mm._read_body(b) for b in blks] == \
+        [r_rd._read_body(b) for b in blks]
+    assert r_mm._read_bodies(blks) == r_rd._read_bodies(blks)
+    assert np.array_equal(r_mm.read_series("s").view(np.uint64),
+                          r_rd.read_series("s").view(np.uint64))
+    ki1, kv1 = r_mm.read_kept("s")
+    ki2, kv2 = r_rd.read_kept("s")
+    assert np.array_equal(ki1, ki2) and np.array_equal(kv1, kv2)
+    for kind in ("sum", "var", "acf"):
+        v1, b1 = squery.query(r_mm, "s", kind, 64, 3000)
+        v2, b2 = squery.query(r_rd, "s", kind, 64, 3000)
+        assert np.array_equal(np.asarray(v1), np.asarray(v2))
+        assert np.array_equal(np.asarray(b1), np.asarray(b2))
+    # writable opens never mmap (the file grows under them)
+    monkeypatch.delenv("CAMEO_MMAP")
+    r_a = CameoStore.open(store.path, mode="a")
+    assert r_a._mm is None
+    r_a._f.close()            # drop without footer rewrite: file untouched
+    r_mm.close()
+    r_rd.close()
+
+
 def test_unknown_version_refused(tmp_path):
     p = str(tmp_path / "v9.cameo")
     x = _series(512, seed=2)
