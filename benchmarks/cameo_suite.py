@@ -608,7 +608,8 @@ def bench_stream(full=False):
     import tempfile
     import tracemalloc
 
-    from repro.core.streaming import _compress_windowed, min_window_len
+    from repro.core.streaming import (_compress_windowed, compile_cache_size,
+                                      min_window_len)
     from repro.serving.ts_service import TimeSeriesService, TsServiceConfig
     from repro.store.store import CameoStore
 
@@ -626,44 +627,86 @@ def bench_stream(full=False):
         wlen = max(1024 // kap * kap, min_window_len(cfg))
         scfg = TsServiceConfig(block_len=1024, stream_window=wlen)
 
-        # one-shot windowed reference (also warms the per-window jit cache
-        # the streamed run reuses — identical window shapes)
+        # cold pass first: pays the one-time XLA compile for the window
+        # bucket (full windows and the padded tail share one program) and
+        # produces the one-shot reference bytes.  Timing it separately
+        # keeps compile cost out of BOTH throughput numbers — the original
+        # baseline folded first-compile into oneshot_secs, which made
+        # stream_vs_oneshot meaningless and pts_per_s incomparable.
         with tempfile.TemporaryDirectory() as tmp:
             p_ref = os.path.join(tmp, "ref.cameo")
+            p_cold = os.path.join(tmp, "cold.cameo")
             t0 = time.perf_counter()
             ref = _compress_windowed(x, cfg, wlen)   # internal oracle: no shim warning
-            with CameoStore.create(p_ref, block_len=1024) as s:
+            # the store write compiles reconstruct_block on first use, so
+            # the cold pass must exercise it too or the compile lands in
+            # the timed one-shot below
+            with CameoStore.create(p_cold, block_len=1024) as s:
                 s.append_series(ds, ref, cfg, x=x)
-            oneshot_s = time.perf_counter() - t0
+            warmup_s = time.perf_counter() - t0
+            # warm one-shot reference: jit cache hot, so the timed number
+            # (and stream_vs_oneshot) is compute against compute.  Best-of-3
+            # on both sides of the ratio: single-shot wall times on a busy
+            # host swing enough to flip the comparison either way.
+            oneshot_s = float("inf")
+            for _ in range(3):
+                t0 = time.perf_counter()
+                ref = _compress_windowed(x, cfg, wlen)
+                with CameoStore.create(p_ref, block_len=1024) as s:
+                    s.append_series(ds, ref, cfg, x=x)
+                oneshot_s = min(oneshot_s, time.perf_counter() - t0)
+            compile_s = max(warmup_s - oneshot_s, 0.0)
 
-            # streamed ingest through the service, chunk at a time; the
-            # steady-state python-heap working set is measured after a
-            # warm-up of 3 windows (one-time import/compile allocations
-            # excluded), so ``peak_delta`` is the actual O(window) state
-            # the acceptance criterion asserts on
-            p_str = os.path.join(tmp, "str.cameo")
-            push_times = []
+            # streamed ingest through the service, chunk at a time.  The
+            # timed passes run untraced — tracemalloc slows the python side
+            # of the push loop, which would bias stream_vs_oneshot against
+            # the stream — and a separate traced pass measures the steady-
+            # state python-heap working set after a warm-up of 3 windows
+            # (one-time import/compile allocations excluded), so
+            # ``peak_delta`` is the actual O(window) state the acceptance
+            # criterion asserts on
             warm_pts = 3 * wlen
-            peak_delta = 0
-            tracemalloc.start()
-            t0 = time.perf_counter()
-            with TimeSeriesService(p_str, cfg, scfg) as svc:
-                h = svc.ingest_stream(ds)
+
+            def run_stream(path, traced=False):
+                push_t = []
+                peak = base = 0
                 measuring = False
-                base = 0
-                for lo in range(0, n, chunk):
-                    if not measuring and lo >= warm_pts:
-                        tracemalloc.reset_peak()
-                        base = tracemalloc.get_traced_memory()[0]
-                        measuring = True
-                    t1 = time.perf_counter()
-                    h.push(x[lo:lo + chunk])
-                    push_times.append(time.perf_counter() - t1)
-                h.close()
-                peak_delta = max(
-                    tracemalloc.get_traced_memory()[1] - base, 1)
-            stream_s = time.perf_counter() - t0
-            tracemalloc.stop()
+                if traced:
+                    tracemalloc.start()
+                t0 = time.perf_counter()
+                with TimeSeriesService(path, cfg, scfg) as svc:
+                    h = svc.ingest_stream(ds)
+                    for lo in range(0, n, chunk):
+                        if traced and not measuring and lo >= warm_pts:
+                            tracemalloc.reset_peak()
+                            base = tracemalloc.get_traced_memory()[0]
+                            measuring = True
+                        t1 = time.perf_counter()
+                        h.push(x[lo:lo + chunk])
+                        push_t.append(time.perf_counter() - t1)
+                    h.close()
+                    if traced:
+                        peak = max(
+                            tracemalloc.get_traced_memory()[1] - base, 1)
+                wall = time.perf_counter() - t0
+                if traced:
+                    tracemalloc.stop()
+                return wall, push_t, peak
+
+            p_str = os.path.join(tmp, "str.cameo")
+            cache_before = compile_cache_size()
+            stream_s, push_times, _ = run_stream(p_str)
+            for rep in (2, 3):
+                wall_r, push_r, _ = run_stream(
+                    os.path.join(tmp, f"str{rep}.cameo"))
+                if wall_r < stream_s:
+                    stream_s, push_times = wall_r, push_r
+            _, _, peak_delta = run_stream(
+                os.path.join(tmp, "str_mem.cameo"), traced=True)
+            # the padded tail must reuse the full-window program (pad-to-
+            # bucket), so a properly warmed stream never traces anything —
+            # across all three passes
+            recompiles = compile_cache_size() - cache_before
 
             with open(p_ref, "rb") as f1, open(p_str, "rb") as f2:
                 bytes_equal = f1.read() == f2.read()
@@ -674,6 +717,9 @@ def bench_stream(full=False):
         mem_ratio = 8.0 * streamed_pts / peak_delta
         window_state = 8 * (wlen + scfg.block_len)
         ok_mem = peak_delta < 64 * window_state    # O(window), not O(n)
+        emit(f"stream.warmup.{ds}", warmup_s,
+             f"compile_s={compile_s:.2f},oneshot_warm_s={oneshot_s:.2f},"
+             f"recompiles={recompiles}")
         emit(f"stream.ingest.{ds}", stream_s,
              f"bytes_equal={bytes_equal},oneshot_s={oneshot_s:.2f},"
              f"pts/s={n / max(stream_s, 1e-9):.3e},"
@@ -682,6 +728,12 @@ def bench_stream(full=False):
         emit(f"stream.memory.{ds}", 0.0,
              f"steady_peak={peak_delta},streamed_nbytes={8 * streamed_pts},"
              f"mem_ratio={mem_ratio:.1f}x,O(window)_ok={ok_mem}")
+        # compile cost rides in its own row so the ledger keeps it visible
+        # without polluting the throughput summary statistics
+        rows.append(dict(
+            section="stream_compile", dataset=ds, window=wlen,
+            warmup_secs=warmup_s, compile_secs=compile_s,
+            recompiles=recompiles))
         rows.append(dict(
             section="stream", dataset=ds, n=n, window=wlen, chunk=chunk,
             eps=eps, bytes_equal=bytes_equal, oneshot_secs=oneshot_s,
@@ -696,6 +748,10 @@ def bench_stream(full=False):
             raise AssertionError(
                 f"{ds}: streamed ingest held {peak_delta} bytes — not "
                 f"O(window) (budget {64 * window_state})")
+        if recompiles:
+            raise AssertionError(
+                f"{ds}: streamed ingest retraced {recompiles} program(s) "
+                f"after warmup — pad-to-bucket should make it zero")
     save_json("stream", rows)
     _update_bench_stream_json(rows)
     return rows
@@ -863,14 +919,27 @@ def _save_bench_ledger(ledger, path):
 
 def _update_bench_stream_json(rows):
     """Append the streaming-ingest summary to the BENCH_store.json ledger
-    (``stream_baseline`` pinned on bootstrap, ``stream_runs`` capped) —
-    same discipline as ``_update_bench_store_json``."""
+    (``stream_runs`` capped) — same discipline as
+    ``_update_bench_store_json``, with one deliberate exception:
+    ``stream_baseline`` is re-pinned when the pinned summary predates warm
+    timing (``timing != "warm"``).  The original pin folded first-compile
+    into both timings, so its absolute pts/s and its stream-vs-oneshot
+    ratio measured XLA tracing, not ingest — comparing against it would
+    gate nothing.  ``stream_vs_oneshot`` is streamed seconds over warm
+    one-shot seconds (≈1.0 means streaming costs nothing over one-shot)."""
+    comp = [r for r in rows if r.get("section") == "stream_compile"]
+    rows = [r for r in rows if r.get("section") == "stream"]
     summary = dict(
+        timing="warm",
         mem_ratio_geomean=geomean([r["mem_ratio"] for r in rows]),
         pts_per_s_geomean=geomean([r["pts_per_s"] for r in rows]),
         stream_vs_oneshot=geomean(
-            [r["oneshot_secs"] / max(r["stream_secs"], 1e-12)
+            [r["stream_secs"] / max(r["oneshot_secs"], 1e-12)
              for r in rows]),
+        compile_secs_geomean=(geomean(
+            [max(r["compile_secs"], 1e-12) for r in comp])
+            if comp else None),
+        recompiles=sum(r["recompiles"] for r in comp) if comp else None,
         bytes_equal=all(r["bytes_equal"] for r in rows),
         rows=[{k: r[k] for k in
                ("dataset", "n", "window", "chunk", "stream_secs",
@@ -880,12 +949,14 @@ def _update_bench_stream_json(rows):
     ledger, path = _load_bench_ledger()
     if ledger is None:
         ledger = dict(schema=1, baseline=None, runs=[])
-    if not ledger.get("stream_baseline"):
+    base = ledger.get("stream_baseline")
+    if not base or base.get("timing") != "warm":
         ledger["stream_baseline"] = summary
     ledger.setdefault("stream_runs", []).append(summary)
     ledger["stream_runs"] = ledger["stream_runs"][-20:]
     _save_bench_ledger(ledger, path)
     emit("stream.bench_json", 0.0,
+         f"pts_per_s={summary['pts_per_s_geomean']:.3e},"
          f"mem_ratio={summary['mem_ratio_geomean']:.1f}x,"
          f"stream_vs_oneshot={summary['stream_vs_oneshot']:.2f}x,"
          f"bytes_equal={summary['bytes_equal']}")

@@ -46,7 +46,14 @@ import json
 import os
 import sys
 
-import jax
+# Same CPU-runtime selection as benchmarks/run.py: the gated ingest
+# throughput must measure the configuration the bench ships, and the flag
+# only takes effect before the first jax computation.
+if "--xla_cpu_use_thunk_runtime" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + " --xla_cpu_use_thunk_runtime=false").strip()
+
+import jax  # noqa: E402
 import numpy as np
 
 jax.config.update("jax_enable_x64", True)  # float64 store fixture
@@ -71,7 +78,14 @@ PER_METRIC_TOLERANCE = {"pushdown_warm_speedup": 0.30,
                         "stream_append_ratio": 0.50,
                         "stream_mem_ratio": 0.50,
                         "mvar_pushdown_speedup": 0.30,
-                        "mvar_shared_gain": 0.90}
+                        "mvar_shared_gain": 0.90,
+                        # absolute pts/s, compared against the committed
+                        # `stream_baseline` bench geomean — unlike the
+                        # ratios above it moves with runner hardware, so
+                        # the floor only catches order-of-regression
+                        # events (a cold-dispatch or recompile-per-window
+                        # regression costs 3-20x, well below 0.30)
+                        "stream_pts_per_s": 0.30}
 _N = 16384
 _STREAM_N = 262144
 
@@ -169,8 +183,56 @@ def _measure() -> dict:
           f"{scan_s * 1e6:.0f}us -> "
           f"{metrics['pushdown_warm_speedup']:.1f}x")
     metrics.update(_measure_stream(cfg))
+    metrics.update(_measure_stream_compress())
     metrics.update(_measure_mvar(cfg))
     return metrics
+
+
+def _measure_stream_compress() -> dict:
+    """Compressor-in-the-loop streamed ingest at the `stream` bench's
+    per-window workload (window 1024, eps 1e-2, L=24, rounds cap 120 on
+    the pedestrian series), so ``stream_pts_per_s`` is directly comparable
+    to the committed ``stream_baseline`` geomean.  Also the no-recompile
+    check: after the warm pass, further ingests — including the padded
+    tail window, whose length differs from the bucket — must not grow the
+    jit cache."""
+    import tempfile
+
+    from repro.core.cameo import CameoConfig
+    from repro.core.streaming import StreamingCompressor, compile_cache_size
+    from repro.data.synthetic import make_dataset
+    from repro.store.store import CameoStore
+
+    cfg = CameoConfig(eps=1e-2, lags=24, mode="rounds", max_rounds=120,
+                      dtype="float64")
+    wlen = 1024
+    n = 4 * wlen + 520                 # 4 full windows + a padded tail
+    x = np.asarray(make_dataset("pedestrian"), np.float64)[:n]
+
+    def ingest(path):
+        sc = StreamingCompressor(cfg, wlen)
+        with CameoStore.create(path, block_len=1024) as store:
+            sess = store.open_stream("s", cfg)
+            for lo in range(0, n, 731):
+                for w in sc.push(x[lo:lo + 731]):
+                    sess.append_window(w)
+            for w in sc.finish():
+                sess.append_window(w)
+            sess.close(deviation=sc.deviation())
+
+    with tempfile.TemporaryDirectory() as tmp:
+        ingest(os.path.join(tmp, "warm.cameo"))        # compile both buckets
+        cache_n = compile_cache_size()
+        best = min(_best_of(ingest, os.path.join(tmp, f"t{i}.cameo"),
+                            reps=1) for i in range(3))
+        recompiles = compile_cache_size() - cache_n
+    assert not recompiles, \
+        f"streamed ingest retraced {recompiles} program(s) after warmup — " \
+        "the padded tail must reuse the full-window bucket"
+    pts = n / max(best, 1e-12)
+    print(f"stream compress: {best * 1e3:.0f}ms for {n} pts -> "
+          f"{pts:.0f} pts/s (recompiles=0)")
+    return {"stream_pts_per_s": pts}
 
 
 def _measure_mvar(cfg) -> dict:
@@ -356,6 +418,23 @@ def _gate(metrics: dict) -> int:
         # so this is a skip, not a failure
         print(f"{key}: current {metrics[key]:.1f}x has no committed "
               "baseline — SKIPPED (pin with --write-baseline to gate it)")
+    # the ingest-throughput floor gates against the `stream` bench's own
+    # re-pinned ledger entry (same per-window workload), independent of
+    # whether stream_pts_per_s has been pinned into smoke_baseline yet
+    sb = dict(ledger.get("stream_baseline") or {})
+    cur = metrics.get("stream_pts_per_s")
+    if sb.get("timing") == "warm" and cur is not None:
+        base = float(sb["pts_per_s_geomean"])
+        floor = PER_METRIC_TOLERANCE["stream_pts_per_s"] * base
+        status = "ok" if cur >= floor else "REGRESSED"
+        print(f"stream_pts_per_s: current {cur:.0f} vs stream_baseline "
+              f"{base:.0f} (floor {floor:.0f}) {status}")
+        if cur < floor:
+            failures.append("stream_pts_per_s")
+    elif cur is not None:
+        print("stream_pts_per_s: no warm stream_baseline in the ledger — "
+              "SKIPPED (run `python -m benchmarks.run --only stream` and "
+              "commit BENCH_store.json)")
     if failures:
         print(f"perf-smoke FAILED: {failures} regressed more than "
               f"{(1 - TOLERANCE) * 100:.0f}% vs the committed "

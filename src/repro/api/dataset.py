@@ -35,6 +35,7 @@ deprecated shims over the same internals.
 """
 from __future__ import annotations
 
+import dataclasses
 import os
 from typing import Dict, List, Optional
 
@@ -222,11 +223,18 @@ class StreamWriter:
     (stashing resume state in the footer) and ``close()`` finalizes the
     series **byte-identical** to the one-shot windowed write of the same
     feed.  The result is chunking-invariant bit-for-bit.
+
+    ``queue_depth`` pipelines the ingest: up to K filled windows accumulate
+    and close as one batched ``[K, window]`` device program (see
+    ``core/streaming.StreamingCompressor``).  Store bytes are invariant to
+    the depth — windows are merely emitted in bursts — so the default of 1
+    (compress each window the moment it fills) is purely a latency choice.
     """
 
     def __init__(self, store: CameoStore, ccfg: CameoConfig, sid: str, *,
                  window_len: int = 4096, with_resid: bool = True,
-                 channels: int = 1, resume: bool = False):
+                 channels: int = 1, resume: bool = False,
+                 queue_depth: int = None):
         self.sid = sid
         if resume:
             self._sess = store.open_stream(sid, ccfg, resume=True)
@@ -240,12 +248,18 @@ class StreamWriter:
                     f"series {sid!r}: stream was not opened through the "
                     "streaming façade — no compressor state to resume")
             self._comp = compressor_from_state(ccfg, state)
+            if queue_depth is not None:   # explicit override wins over state
+                if queue_depth < 1:
+                    raise ValueError(f"queue_depth={queue_depth} must be >= 1")
+                self._comp.queue_depth = int(queue_depth)
         else:
             if int(channels) > 1:
-                self._comp = MVStreamingCompressor(ccfg, window_len,
-                                                   channels)
+                self._comp = MVStreamingCompressor(
+                    ccfg, window_len, channels,
+                    queue_depth=queue_depth or 1)
             else:
-                self._comp = StreamingCompressor(ccfg, window_len)
+                self._comp = StreamingCompressor(
+                    ccfg, window_len, queue_depth=queue_depth or 1)
             self._sess = store.open_stream(
                 sid, ccfg, with_resid=with_resid, channels=channels)
         self._sess.state_provider = self._comp.state_dict
@@ -281,11 +295,10 @@ class StreamWriter:
 
     def push(self, chunk) -> int:
         """Feed a chunk (``[m]``, or ``[m, C]`` for multivariate streams);
-        compresses and stores every window it closes.  Returns the number
-        of windows closed."""
+        compresses and stores every window it closes (one burst append per
+        batched drain).  Returns the number of windows closed."""
         wins = self._comp.push(chunk)
-        for w in wins:
-            self._sess.append_window(w)
+        self._sess.append_windows(wins)
         return len(wins)
 
     def flush(self) -> None:
@@ -295,8 +308,7 @@ class StreamWriter:
     def close(self) -> dict:
         """Flush the final partial window, finalize the series, and return
         its catalog entry."""
-        for w in self._comp.finish():
-            self._sess.append_window(w)
+        self._sess.append_windows(self._comp.finish())
         if getattr(self._comp, "channels", 1) > 1:
             entry = self._sess.close(deviation=self._comp.deviation(),
                                      deviations=self._comp.deviations())
@@ -359,7 +371,7 @@ class Dataset:
 
     # -- ingest --------------------------------------------------------------
 
-    def write(self, sid: str, x) -> dict:
+    def write(self, sid: str, x, *, eps=None) -> dict:
         """Compress and persist one series; returns its catalog entry.
 
         1-D ``x [n]`` stores a univariate series (bit- and byte-identical
@@ -369,19 +381,34 @@ class Dataset:
         delta-of-delta index stream, and every column re-evaluates on the
         shared index with its exact deviation measured (and enforced)
         against the per-column ε — the v4 block layout.
+
+        ``eps`` overrides the dataset's compression budget for this write:
+        a scalar replaces ``cfg.eps``; on a multivariate series a length-C
+        sequence gives **each column its own ε budget** (enforced per
+        column through the repair loop; see ``compress_multivariate``).
         """
         self._require_write()
         x = np.asarray(x)
         if x.ndim == 2 and x.shape[1] == 1:
             x = x[:, 0]
+        cfg = self.cfg
+        eps_c = None
+        if eps is not None:
+            if np.ndim(eps) == 0:
+                cfg = dataclasses.replace(cfg, eps=float(eps))
+            elif x.ndim == 2:
+                eps_c = np.asarray(eps, np.float64)
+            else:
+                raise ValueError(
+                    "per-column eps budgets need a 2-D [n, C] series")
         if x.ndim == 1:
-            res = compress(x, self.cfg)
+            res = compress(x, cfg)
             return self._store.append_series(
-                sid, res, self.cfg, x=x if self.store_residuals else None)
+                sid, res, cfg, x=x if self.store_residuals else None)
         if x.ndim == 2:
-            res = compress_multivariate(x, self.cfg)
+            res = compress_multivariate(x, cfg, eps_c=eps_c)
             return self._store.append_series(
-                sid, res, self.cfg, x=x if self.store_residuals else None)
+                sid, res, cfg, x=x if self.store_residuals else None)
         raise ValueError(f"series must be [n] or [n, C], got {x.shape}")
 
     def write_batch(self, items: Dict[str, np.ndarray]) -> Dict[str, dict]:
@@ -418,20 +445,22 @@ class Dataset:
         return out
 
     def stream(self, sid: str, *, window_len: int = None, channels: int = 1,
-               resume: bool = False) -> StreamWriter:
+               resume: bool = False, queue_depth: int = None) -> StreamWriter:
         """Open a continuous-feed ingest stream for ``sid``.
 
         ``channels > 1`` opens a multivariate stream (push ``[m, C]``
         chunks).  ``resume=True`` (on a dataset opened with ``mode="a"``)
         continues an interrupted stream from the footer-stashed state;
-        feed points from ``writer.resume_from`` onward.
+        feed points from ``writer.resume_from`` onward.  ``queue_depth=K``
+        batches K filled windows into one device program per drain (bytes
+        are invariant to the depth; default 1 compresses synchronously).
         """
         self._require_write()
         return StreamWriter(
             self._store, self.cfg, sid,
             window_len=window_len or self.stream_window,
             with_resid=self.store_residuals, channels=channels,
-            resume=resume)
+            resume=resume, queue_depth=queue_depth)
 
     # -- reads ---------------------------------------------------------------
 

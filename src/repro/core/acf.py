@@ -63,6 +63,29 @@ def extract_aggregates(x: jax.Array, L: int,
     return Aggregates(sx=sx, sxl=sxl, sx2=sx2, sxl2=sxl2, sxx=sxx)
 
 
+def extract_aggregates_masked(x: jax.Array, L: int, n_valid,
+                              backend: str = "auto") -> Aggregates:
+    """ExtractAggregates over a zero-padded buffer: aggregates of
+    ``x[:n_valid]`` where ``n_valid`` may be a traced scalar.
+
+    ``x`` must be zero beyond ``n_valid`` (the padded-bucket discipline of
+    the rounds mode): the tail sums and the lagged products are then exact
+    as-is, and only the head prefix sums need dynamic gathers.  Not jitted —
+    intended to be traced inside a caller's jit.
+    """
+    from repro.kernels.ops import lag_dot  # deferred: kernels sit below core
+    csum = jnp.cumsum(x)
+    csum2 = jnp.cumsum(x * x)
+    total, total2 = csum[-1], csum2[-1]
+    l = jnp.arange(1, L + 1)
+    sx = csum[n_valid - 1 - l]
+    sx2 = csum2[n_valid - 1 - l]
+    sxl = total - csum[l - 1]
+    sxl2 = total2 - csum2[l - 1]
+    sxx = lag_dot(x, L, backend=backend)
+    return Aggregates(sx=sx, sxl=sxl, sx2=sx2, sxl2=sxl2, sxx=sxx)
+
+
 def acf_from_aggregates(agg: Aggregates, n: int) -> jax.Array:
     """Eq. (2).  Returns the ACF for lags ``1..L`` (shape ``[L]``)."""
     L = agg.sx.shape[0]

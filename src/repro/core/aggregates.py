@@ -41,13 +41,19 @@ _lag_masks = _ref.head_tail_masks
 # Dense exact update (rounds mode)
 # ---------------------------------------------------------------------------
 
-def apply_delta_dense(agg: Aggregates, y_old: jax.Array, delta: jax.Array) -> Aggregates:
+def apply_delta_dense(agg: Aggregates, y_old: jax.Array, delta: jax.Array,
+                      ny=None) -> Aggregates:
     """Exact aggregate update for an arbitrary dense delta vector.
 
     ``y_old`` is the reconstruction *before* the update.  Cost: O(ny + L) for
     the four moment sums (via cumulative sums) + O(ny * L) for ``sxx``.
+
+    ``ny`` (optionally traced) gives the valid length when ``y_old``/``delta``
+    live in a zero-padded bucket; both must be zero beyond it.
     """
-    ny = y_old.shape[0]
+    nyb = y_old.shape[0]
+    if ny is None:
+        ny = nyb
     L = agg.sx.shape[0]
     l = jnp.arange(1, L + 1)
 
@@ -62,7 +68,7 @@ def apply_delta_dense(agg: Aggregates, y_old: jax.Array, delta: jax.Array) -> Ag
     dsxl2 = etot - ce[l - 1]
 
     def lag_term(ll):
-        mask = (jnp.arange(ny) <= (ny - 1 - ll)).astype(y_old.dtype)
+        mask = (jnp.arange(nyb) <= (ny - 1 - ll)).astype(y_old.dtype)
         y_sh = jnp.roll(y_old, -ll)
         d_sh = jnp.roll(delta, -ll)
         # new*new - old*old expanded: d_t*y_{t+l} + y_t*d_{t+l} + d_t*d_{t+l}
@@ -185,14 +191,19 @@ def acf_after_window_delta(agg: Aggregates, y: jax.Array, starts: jax.Array,
         agg, y_ctx, starts, dwins, ny=y.shape[0], off=0)
 
 
-def segment_deltas(xr: jax.Array, prev: jax.Array, nxt: jax.Array,
+def segment_interp(xr: jax.Array, prev: jax.Array, nxt: jax.Array,
                    i: jax.Array, W: int):
-    """Delta window from removing point(s) ``i``: the interior of segment
-    (prev[i], nxt[i]) is re-interpolated on the line between the endpoints.
+    """Interpolated values over the interior of segment (prev[i], nxt[i]):
+    the line between the segment endpoints, evaluated at the first ``W``
+    interior positions.
 
-    Vectorized over ``i``; returns ``(dwin [..., W], start [...], span [...])``
-    with deltas zero beyond the span (spans > W are truncated — callers treat
-    those candidates as unrankable).
+    Vectorized over ``i``; returns ``(vals [..., W], absj [..., W],
+    start [...], span [...])``.  ``absj`` are the absolute indices the
+    values land on (clipped in-range); positions at or beyond the span
+    carry garbage values the caller must mask (spans > W are truncated).
+    The arithmetic matches :func:`interpolate_at` bit-for-bit, so a
+    scatter of these values is exactly the reconstruction
+    :func:`~repro.core.cameo._reconstruct` would produce there.
     """
     n = xr.shape[0]
     dt = xr.dtype
@@ -206,9 +217,24 @@ def segment_deltas(xr: jax.Array, prev: jax.Array, nxt: jax.Array,
     qc = jnp.clip(q, 0, n - 1)[..., None]
     denom = jnp.maximum((q - p).astype(dt), 1.0)[..., None]
     t = (absj - jnp.clip(p, 0, n - 1)[..., None]).astype(dt) / denom
-    newv = xr[pc] + (xr[qc] - xr[pc]) * t
+    vals = xr[pc] + (xr[qc] - xr[pc]) * t
+    return vals, absj, start, span
+
+
+def segment_deltas(xr: jax.Array, prev: jax.Array, nxt: jax.Array,
+                   i: jax.Array, W: int):
+    """Delta window from removing point(s) ``i``: the interior of segment
+    (prev[i], nxt[i]) is re-interpolated on the line between the endpoints.
+
+    Vectorized over ``i``; returns ``(dwin [..., W], start [...], span [...])``
+    with deltas zero beyond the span (spans > W are truncated — callers treat
+    those candidates as unrankable).
+    """
+    dt = xr.dtype
+    vals, absj, start, span = segment_interp(xr, prev, nxt, i, W)
+    j = jnp.arange(W, dtype=jnp.int32)
     m = (j < span[..., None]).astype(dt)
-    dwin = (newv - xr[absj]) * m
+    dwin = (vals - xr[absj]) * m
     return dwin, start, span
 
 
@@ -231,6 +257,22 @@ def alive_neighbors(alive: jax.Array):
     nxt_incl = jax.lax.associative_scan(jnp.minimum, right_ids, reverse=True)
     nxt = jnp.concatenate([nxt_incl[1:], jnp.array([n], jnp.int32)])
     return prev, nxt
+
+
+def neighbors_after_removal(prev: jax.Array, nxt: jax.Array,
+                            removed: jax.Array):
+    """``alive_neighbors`` after removing an *independent* set, by pointer
+    jump: a removed point's own neighbors are alive (no two removed points
+    are alive-adjacent), so any index whose neighbor was removed inherits
+    that neighbor's neighbor.  O(n) gathers instead of two associative
+    scans — exact (integer) equivalence with recomputing from scratch.
+    """
+    n = prev.shape[0]
+    pj = jnp.clip(prev, 0, n - 1)
+    qj = jnp.clip(nxt, 0, n - 1)
+    prev_new = jnp.where(removed[pj] & (prev >= 0), prev[pj], prev)
+    nxt_new = jnp.where(removed[qj] & (nxt <= n - 1), nxt[qj], nxt)
+    return prev_new, nxt_new
 
 
 def interpolate_at(x: jax.Array, prev: jax.Array, nxt: jax.Array, i: jax.Array):

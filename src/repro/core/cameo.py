@@ -44,18 +44,23 @@ import numpy as np
 
 from repro.core import measures as _measures
 from repro.core.acf import (
+    Aggregates,
     acf_from_aggregates,
     aggregate_series,
     extract_aggregates,
+    extract_aggregates_masked,
 )
 from repro.core.aggregates import (
     alive_neighbors,
     apply_delta_dense,
     apply_delta_window,
     interpolate_at,
+    neighbors_after_removal,
     segment_deltas,
 )
+from repro.kernels import fused_round as _fused
 from repro.kernels import ops as _ops
+from repro.kernels import ref as _ref
 
 
 @dataclasses.dataclass(frozen=True)
@@ -74,7 +79,10 @@ class CameoConfig:
     impact_chunk: int = 4096
     rank: str = "window"           # "window" (exact Eq. 9) | "single" (Alg. 2)
     stop_policy: str = "exhaustive"  # "exhaustive" | "first_violation"
-    select: str = "bisect"         # "bisect" (prefix search) | "backoff"
+    # "backoff" (adaptive alpha, no per-round prefix search — fastest and
+    # the default) | "scan" (fused prefix-deviation curve) | "bisect"
+    # (dense prefix search)
+    select: str = "backoff"
     bisect_probes: int = 6
     # -- sequential mode --
     hops: int = 16                 # blocking neighborhood h per side
@@ -121,13 +129,18 @@ def _ranking_impact(cfg, agg, y, xr, alive, p0, n):
     return _ops.ranking_impact(cfg, agg, y, xr, alive, p0, n)
 
 
-def _independent_set(sel: jax.Array, impact: jax.Array, alive: jax.Array):
+def _independent_set(sel: jax.Array, impact: jax.Array, alive: jax.Array,
+                     prev=None, nxt=None):
     """Drop alive-adjacent picks: keep a pick iff it beats both its nearest
     *selected* alive neighbors (vectorized local-minima rule on the alive
-    chain, so no two removed points ever share a segment endpoint)."""
+    chain, so no two removed points ever share a segment endpoint).
+
+    ``prev``/``nxt`` may be passed when the caller already has the alive
+    neighbor maps (saves recomputing the two associative scans)."""
     n = sel.shape[0]
     idx = jnp.arange(n, dtype=jnp.int32)
-    prev, nxt = alive_neighbors(alive)
+    if prev is None or nxt is None:
+        prev, nxt = alive_neighbors(alive)
     inf = jnp.asarray(jnp.inf, impact.dtype)
     # impact of my adjacent alive neighbors IF they are also selected
     pc, qc = jnp.clip(prev, 0, n - 1), jnp.clip(nxt, 0, n - 1)
@@ -158,136 +171,462 @@ def _x_to_y_delta(delta_x: jax.Array, kappa: int, dt):
 
 
 # ---------------------------------------------------------------------------
-# rounds mode (TPU-native batched greedy)
+# rounds mode (TPU-native batched greedy, padded-bucket fused rounds)
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.jit, static_argnames=("cfg",))
-def compress_rounds(x: jax.Array, cfg: CameoConfig) -> CompressResult:
-    dt = cfg.jdtype()
-    x = x.astype(dt)
-    n = x.shape[0]
-    L = cfg.lags
-    y0 = aggregate_series(x, cfg.kappa)
-    ny = y0.shape[0]
-    agg0 = extract_aggregates(y0, L, backend=cfg.backend)
-    transform = _stat_transform(cfg)
-    mfn = _measure_fn(cfg)
-    p0 = transform(acf_from_aggregates(agg0, ny))
+# Fixed-capacity eviction buffers for the tiered exact ranking: short
+# segments (span <= _TIER_SMALL_W) are abundant and cheap, long ones rare
+# and expensive.  Capacity overflow ranks +inf for *this* round only —
+# accepted rounds or blocking free the slots, so every candidate is
+# eventually ranked exactly.
+_TIER_SMALL_W = 8
 
+
+def _round_bucket(n: int, cfg: CameoConfig) -> int:
+    """Padded length bucket for ``n`` (<= ~6% overhead, few distinct
+    compiles across lengths, always a multiple of kappa)."""
+    step = max(64, (1 << max(1, int(n - 1).bit_length())) // 16)
+    nb = -(-n // step) * step
+    if cfg.kappa > 1:
+        nb = -(-nb // cfg.kappa) * cfg.kappa
+    return nb
+
+
+def _halting_params(n: int, cfg: CameoConfig):
+    """(min_alive, eps) for the Def. 1/3 halting rules at true length n."""
     if cfg.target_cr is not None:
         min_alive = max(2, int(np.ceil(n / cfg.target_cr)))
-        eps = jnp.asarray(jnp.inf, dt)
+        eps = np.inf
     else:
         min_alive = 2
-        eps = jnp.asarray(cfg.eps, dt)
+        eps = float(cfg.eps)
     if cfg.max_cr is not None:
         min_alive = max(min_alive, int(np.ceil(n / cfg.max_cr)))
+    return min_alive, eps
 
-    k_max = max(1, int(cfg.alpha * n))
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _rounds_padded(xp: jax.Array, n_valid: jax.Array, min_alive: jax.Array,
+                   eps: jax.Array, cfg: CameoConfig) -> CompressResult:
+    """Rounds mode over a zero-padded bucket ``xp [nb]`` with runtime valid
+    length ``n_valid`` — one compiled program per (bucket, cfg).
+
+    Each round runs as one fused pass: tiered exact Eq. 9 ranking into
+    fixed-capacity buffers, top-k + independent-set selection, the
+    prefix-deviation scan (kernels/fused_round) to pick the largest feasible
+    prefix, and a dense exact Eq. 10/11 aggregate update as the
+    authoritative accept check.
+    """
+    dt = cfg.jdtype()
+    nb = xp.shape[0]
+    L = cfg.lags
+    kap = cfg.kappa
+    W = cfg.window
+    nyb = nb // kap
+    idx = jnp.arange(nb, dtype=jnp.int32)
+    inf = jnp.asarray(jnp.inf, dt)
+
+    n_valid = n_valid.astype(jnp.int32)
+    validm = idx < n_valid
+    xp = jnp.where(validm, xp.astype(dt), jnp.asarray(0.0, dt))
+    ny_valid = n_valid // kap
+
+    y0 = aggregate_series(xp, kap)
+    agg0 = extract_aggregates_masked(y0, L, ny_valid, backend=cfg.backend)
+    transform = _stat_transform(cfg)
+    mfn = _measure_fn(cfg)
+    p0 = transform(acf_from_aggregates(agg0, ny_valid))
+
+    def rows_dev(rows):
+        p0r = p0.astype(rows.dtype)
+        if cfg.stat == "acf" and cfg.measure in _ref.KERNEL_MEASURES:
+            return _ref.measure_rows(rows, p0r, cfg.measure)
+        return jax.vmap(lambda r: mfn(transform(r), p0r))(rows)
+
+    k_max = max(1, min(int(cfg.alpha * nb), nb - 2))
+    k_small = max(8, min(k_max, 32))
+    WB = max(2, min(_TIER_SMALL_W, W))
+    # Large-round vs endgame-round eviction-buffer capacities (overflow is
+    # correctness-neutral: unranked candidates retry next round).
+    cap_b = min(nb, max(32, nb // 8))
+    cap_c = min(nb, max(32, nb // 16))
+    cap_b_s = min(nb, max(16, nb // 32))
+    cap_c_s = min(nb, max(16, nb // 64))
+
+    # Ranking runs in float32: it only orders the heuristic candidate
+    # selection (every accepted removal is re-validated by the exact dense
+    # update in the configured dtype), and single-precision halves the
+    # bandwidth of the per-round O(nL) ranking kernels.
+    rdt = jnp.float32
+
+    def tier_impacts(mask, xr, yr, tbl_r, prev, nxt, Wt, cap):
+        """Eq. 9 ranking impacts for the first ``cap`` mask positions; +inf
+        elsewhere.  Returns (impact [nb], ranked-mask [nb])."""
+        taken = jnp.cumsum(mask.astype(jnp.int32))
+        ranked = mask & (taken <= cap)
+
+        def some(_):
+            # first cap true indices, in index order, via rank scatter
+            # (cheaper than a top_k over nb); unfilled slots read nb and
+            # are dropped on the write-back below.
+            slots = jnp.full((cap,), nb, jnp.int32).at[
+                jnp.where(ranked, taken - 1, cap)].set(idx, mode="drop")
+            cand = jnp.clip(slots, 0, nb - 1)
+            dwin, start, _ = segment_deltas(xr, prev, nxt, cand, Wt)
+            dyw, ystart = _ops.x_window_to_y(cfg, dwin, start)
+            acf_rows = _fused.window_acf_rows(
+                yr, dyw.astype(rdt), ystart, tbl_r, ny_valid, L=L)
+            imp = rows_dev(acf_rows).astype(dt)
+            return jnp.full((nb,), jnp.inf, dt).at[slots].set(
+                imp, mode="drop")
+
+        # Tier classes are often empty (all spans start at 1 and only grow
+        # as removals accumulate) — skip the whole ranking pass then.
+        imp_full = jax.lax.cond(
+            jnp.any(mask), some,
+            lambda _: jnp.full((nb,), jnp.inf, dt), operand=None)
+        return imp_full, ranked
+
+    def single_impacts(xr, yr, tbl_r, prev, nxt):
+        """Eq. 8 single-delta impacts for every point (exact at span 1)."""
+        xhat = interpolate_at(xr, prev, nxt, idx)
+        dx = xhat - xr
+        dval = dx if kap == 1 else dx / jnp.asarray(kap, dt)
+        y_idx = idx // kap
+        rows = _ref.acf_after_single_delta(
+            tbl_r, yr, y_idx, dval.astype(rdt), ny=ny_valid)
+        return rows_dev(rows).astype(dt)
 
     def cond(c):
-        (xr, alive, y, agg, alpha, dev, rounds, done, blocked) = c
-        return (~done) & (rounds < cfg.max_rounds) & (jnp.sum(alive) > min_alive)
-
-    def eval_prefix(impact, sel_idx, finite, alive, xr, y, agg, kp):
-        """Trial-removal of the kp lowest-impact candidates (independent-set
-        filtered).  Returns (dev, sel, alive', xr', dy, agg')."""
-        rank_ok = (jnp.arange(k_max) < kp) & finite
-        sel = jnp.zeros((n,), bool).at[sel_idx].set(rank_ok, mode="drop")
-        sel = _independent_set(sel, impact, alive)
-        alive_new = alive & (~sel)
-        xr_new = _reconstruct(x, alive_new)
-        dy = _x_to_y_delta(xr_new - xr, cfg.kappa, dt)
-        agg_new = apply_delta_dense(agg, y, dy)
-        dev_new = mfn(transform(acf_from_aggregates(agg_new, ny)), p0)
-        return dev_new, sel, alive_new, xr_new, dy, agg_new
+        (xr, alive, prev, nxt, y, agg, alpha, dev, rounds, done, blocked,
+         retried) = c
+        return (~done) & (rounds < cfg.max_rounds) & \
+            (jnp.sum(alive) > min_alive)
 
     def body(c):
-        (xr, alive, y, agg, alpha, dev, rounds, done, blocked) = c
+        (xr, alive, prev, nxt, y, agg, alpha, dev, rounds, done, blocked,
+         retried) = c
         n_alive = jnp.sum(alive)
         # Per-lane re-check of `cond`: under vmap (compress_batch) the body
         # keeps executing for lanes whose own loop has finished as long as
         # any lane is live; gating acceptance on `live` makes those extra
         # executions exact no-ops, so batched results match per-series runs.
         live = (~done) & (rounds < cfg.max_rounds) & (n_alive > min_alive)
-        impact = _ranking_impact(cfg, agg, y, xr, alive, p0, n)
-        inf = jnp.asarray(jnp.inf, dt)
-        impact = jnp.where(blocked, inf, impact)
+
+        removable = alive & (idx > 0) & (idx < n_valid - 1)
+        cand = removable & (~blocked)
+        span = nxt - prev - 1
+
+        y_r = y.astype(rdt)
+        tbl_r = _ops.agg_to_table(agg).astype(rdt)
+        imp_sd = single_impacts(xr, y_r, tbl_r, prev, nxt)
         k_cap = jnp.maximum(
             1, jnp.minimum(
                 (alpha * n_alive.astype(dt)).astype(jnp.int32),
                 (n_alive - min_alive).astype(jnp.int32),
             ),
         )
-        neg_vals, sel_idx = jax.lax.top_k(-impact, k_max)
-        finite = jnp.isfinite(-neg_vals)
 
-        if cfg.select == "bisect":
-            # largest feasible prefix via bisection (dev(0)=dev <= eps holds)
-            def probe(_, lohi):
-                lo, hi = lohi
-                mid = (lo + hi + 1) // 2
-                dev_mid, *_ = eval_prefix(
-                    impact, sel_idx, finite, alive, xr, y, agg, mid)
-                ok = dev_mid <= eps
-                return (jnp.where(ok, mid, lo), jnp.where(ok, hi, mid - 1))
-            lo, hi = jax.lax.fori_loop(
-                0, cfg.bisect_probes, probe,
-                (jnp.asarray(0, jnp.int32), k_cap.astype(jnp.int32)))
-            k_final = lo
+        def dense_apply(sel_idx_a, take):
+            """Authoritative dense evaluation of removing the rank positions
+            marked in ``take``."""
+            sel = jnp.zeros((nb,), bool).at[sel_idx_a].set(take, mode="drop")
+            alive_new = alive & (~sel)
+            # The selection is an independent set, so the post-removal
+            # neighbors come from a one-step pointer jump — no O(nb)
+            # associative scans — and one vectorized interpolation pass
+            # over the jumped pointers reproduces _reconstruct bit-for-bit
+            # (unchanged dead points re-derive their stored value; moved
+            # ones re-line against the inherited endpoints).
+            prev_n, nxt_n = neighbors_after_removal(prev, nxt, sel)
+            interp = interpolate_at(xr, prev_n, nxt_n, idx)
+            xr_new = jnp.where(validm,
+                               jnp.where(alive_new, xr, interp),
+                               jnp.asarray(0.0, dt))
+            dy = _x_to_y_delta(xr_new - xr, kap, dt)
+            agg_new = apply_delta_dense(agg, y, dy, ny=ny_valid)
+            dev_new = mfn(transform(acf_from_aggregates(agg_new, ny_valid)),
+                          p0)
+            return dev_new, sel, alive_new, xr_new, dy, agg_new, prev_n, nxt_n
+
+        def round_at(k_rows: int, cb: int, cc: int):
+            """Ranking + selection at one static problem size.  Outputs are
+            padded to ``k_max`` so both size branches unify shapes."""
+            def go(_):
+                if cfg.rank == "single":
+                    impact = jnp.where(cand, imp_sd, inf)
+                    exact_ranked = cand & (span == 1)
+                    overflowed = jnp.zeros((nb,), bool)
+                else:
+                    a_mask = cand & (span == 1)
+                    b_mask = cand & (span >= 2) & (span <= WB)
+                    imp_b, ranked_b = tier_impacts(
+                        b_mask, xr, y_r, tbl_r, prev, nxt, WB, cb)
+                    impact = jnp.where(a_mask, imp_sd, inf)
+                    impact = jnp.where(b_mask, imp_b, impact)
+                    exact_ranked = a_mask | (b_mask & ranked_b)
+                    overflowed = b_mask & (~ranked_b)
+                    if WB < W:
+                        c_mask = cand & (span > WB) & (span <= W)
+                        imp_c, ranked_c = tier_impacts(
+                            c_mask, xr, y_r, tbl_r, prev, nxt, W, cc)
+                        impact = jnp.where(c_mask, imp_c, impact)
+                        exact_ranked = exact_ranked | (c_mask & ranked_c)
+                        overflowed = overflowed | (c_mask & (~ranked_c))
+                    # Overgrown segments (span > W): unrankable exactly.
+                    # Under a finite eps they stay unremovable; in the
+                    # Def. 3 regime (eps = inf) the deviation never gates
+                    # acceptance, so they are admitted with a large rank
+                    # penalty (ordered by the Eq. 8 estimate) and validated
+                    # by the dense authoritative update.
+                    over_mask = cand & (span > W)
+                    over_val = jnp.where(jnp.isfinite(eps), inf,
+                                         jnp.asarray(1e30, dt) + imp_sd)
+                    impact = jnp.where(over_mask, over_val, impact)
+
+                # Rank keys in float32: CPU/TPU top_k has a fast path there,
+                # and ranking order only steers the heuristic selection —
+                # every removal is still validated by the exact dense update
+                # in the configured dtype.
+                neg_vals, sel_idx = jax.lax.top_k(
+                    -impact.astype(jnp.float32), k_rows)
+                finite = jnp.isfinite(-neg_vals)
+                rank_ok = finite & (jnp.arange(k_rows) < k_cap)
+                sel_all = jnp.zeros((nb,), bool).at[sel_idx].set(
+                    rank_ok, mode="drop")
+                sel_surv = _independent_set(sel_all, impact, alive, prev, nxt)
+                # Independent-set survival is prefix-independent under the
+                # (impact, idx) total order, so one survival pass serves
+                # every prefix the selection below may choose.
+                ok = sel_surv[sel_idx] & rank_ok
+
+                ar0 = jnp.arange(k_rows)
+                if cfg.select == "scan":
+                    dwin_k, start_k, _ = segment_deltas(
+                        xr, prev, nxt, sel_idx, W)
+                    dyw_k, ystart_k = _ops.x_window_to_y(cfg, dwin_k, start_k)
+                    if _ops._kernel_eligible(
+                            cfg.backend, cfg.stat, cfg.measure) \
+                            and not _ops.interpret_mode():
+                        # Fused greedy kernel (real TPU): one VMEM pass walks
+                        # the rank order, committing every candidate whose
+                        # trial deviation on the exact running reconstruction
+                        # fits and *skipping* violators.  The dense check
+                        # below still gates the round, with the feasible
+                        # prefix (greedy decisions up to the first skip) as
+                        # the fallback proposal.
+                        take_g, _ = _fused.greedy_feasible(
+                            cfg, y, dyw_k, ystart_k, ok, agg, p0,
+                            ny_valid, eps)
+                        out_a = dense_apply(sel_idx, take_g)
+                        first_skip = jnp.min(jnp.where(
+                            ok & (~take_g), ar0, jnp.int32(k_rows)))
+                        take_pre = take_g & (ar0 < first_skip)
+                        more = jnp.sum(take_g) > jnp.sum(take_pre)
+                        out = jax.lax.cond(
+                            (out_a[0] <= eps) | (~more),
+                            lambda _: out_a,
+                            lambda _: dense_apply(sel_idx, take_pre),
+                            operand=None)
+                        no_fit = ~jnp.any(take_g)
+                    else:
+                        # Linearized slack packing (reference path): score
+                        # each survivor by the directional derivative of the
+                        # deviation along its solo aggregate delta, sort by
+                        # marginal ascending, and take the largest prefix
+                        # whose projected deviation fits.  This packs the
+                        # eps budget near-optimally — in particular it
+                        # harvests the deviation-*reducing* candidates the
+                        # rank-order grind would defer across many rounds —
+                        # at the cost of one gradient plus one einsum.  The
+                        # dense authoritative check gates the round; on a
+                        # miss (linearization error) the proposal halves up
+                        # to three times.
+                        def dev_of_table(tbl):
+                            aggt = Aggregates(tbl[0], tbl[1], tbl[2],
+                                              tbl[3], tbl[4])
+                            return mfn(transform(
+                                acf_from_aggregates(aggt, ny_valid)), p0)
+                        gtbl = jax.grad(dev_of_table)(_ops.agg_to_table(agg))
+                        dagg = _fused.solo_moment_rows(
+                            y, dyw_k, ystart_k, ny_valid, L=L)
+                        g = jnp.einsum("al,kal->k", gtbl, dagg)
+                        gi = jnp.where(ok, g, inf)
+                        order = jnp.argsort(gi)
+                        gs = gi[order]
+                        csum = jnp.cumsum(
+                            jnp.where(jnp.isfinite(gs), gs,
+                                      jnp.asarray(0.0, dt)))
+                        pred = dev + csum
+                        kidx = jnp.arange(1, k_rows + 1, dtype=jnp.int32)
+                        finite_g = jnp.isfinite(gs)
+                        rank_pos = jnp.zeros((k_rows,), jnp.int32).at[
+                            order].set(ar0.astype(jnp.int32))
+
+                        def at_k(k):
+                            return dense_apply(sel_idx, ok & (rank_pos < k))
+
+                        # Bracketed Newton search for the max dense-feasible
+                        # prefix of the g-order: each dense probe calibrates
+                        # the linearization bias `err`, the re-pack proposes
+                        # the largest prefix fitting the corrected budget,
+                        # clipped into the open feasible/infeasible bracket
+                        # (degenerating to bisection when the model stalls).
+                        n_ok = jnp.sum(finite_g).astype(jnp.int32)
+                        out_empty = (dev, jnp.zeros((nb,), bool), alive,
+                                     xr, jnp.zeros((nyb,), dt), agg,
+                                     prev, nxt)
+
+                        def probe(_, carry):
+                            k_lo, out_lo, k_hi, err = carry
+                            do = (k_hi - k_lo) > 1
+                            k_p = jnp.max(jnp.where(
+                                finite_g & (pred + err <= eps), kidx,
+                                jnp.int32(0)))
+                            k_p = jnp.clip(k_p, k_lo + 1, k_hi - 1)
+                            out_p = jax.lax.cond(
+                                do, lambda _: at_k(k_p),
+                                lambda _: out_lo, operand=None)
+                            fits = out_p[0] <= eps
+                            err = jnp.where(
+                                do,
+                                out_p[0] - pred[jnp.maximum(k_p - 1, 0)],
+                                err)
+                            adv = do & fits
+                            out_lo = jax.tree.map(
+                                lambda a, b: jnp.where(adv, a, b),
+                                out_p, out_lo)
+                            return (jnp.where(adv, k_p, k_lo), out_lo,
+                                    jnp.where(do & (~fits), k_p, k_hi),
+                                    err)
+
+                        k_lo, out, _, _ = jax.lax.fori_loop(
+                            0, 4, probe,
+                            (jnp.int32(0), out_empty, n_ok + 1,
+                             jnp.asarray(0.0, dt)))
+                        no_fit = k_lo == 0
+                elif cfg.select == "bisect":
+                    def probe(_, lohi):
+                        lo, hi = lohi
+                        mid = (lo + hi + 1) // 2
+                        dev_mid = dense_apply(sel_idx, ok & (ar0 < mid))[0]
+                        fits = dev_mid <= eps
+                        return (jnp.where(fits, mid, lo),
+                                jnp.where(fits, hi, mid - 1))
+                    lo, _ = jax.lax.fori_loop(
+                        0, cfg.bisect_probes, probe,
+                        (jnp.asarray(0, jnp.int32),
+                         jnp.minimum(k_cap, k_rows).astype(jnp.int32)))
+                    out = dense_apply(sel_idx, ok & (ar0 < lo))
+                    no_fit = lo == 0
+                else:                           # "backoff"
+                    kf = jnp.minimum(k_cap, k_rows).astype(jnp.int32)
+                    out = dense_apply(sel_idx, ok & (ar0 < kf))
+                    no_fit = ~jnp.any(ok)
+                return out + (impact, exact_ranked, overflowed,
+                              sel_idx[0], finite[0], no_fit)
+            return go
+
+        if k_small < k_max:
+            (dev_new, sel, alive_new, xr_new, dy, agg_new, prev_new,
+             nxt_new, impact, exact_ranked, overflowed, best_idx, finite0,
+             no_fit) = jax.lax.cond(
+                k_cap <= k_small,
+                round_at(k_small, cap_b_s, cap_c_s),
+                round_at(k_max, cap_b, cap_c),
+                operand=None)
         else:
-            k_final = k_cap.astype(jnp.int32)
-
-        dev_new, sel, alive_new, xr_new, dy, agg_new = eval_prefix(
-            impact, sel_idx, finite, alive, xr, y, agg, k_final)
+            (dev_new, sel, alive_new, xr_new, dy, agg_new, prev_new,
+             nxt_new, impact, exact_ranked, overflowed, best_idx, finite0,
+             no_fit) = round_at(k_max, cap_b, cap_c)(None)
         n_sel = jnp.sum(sel)
         any_sel = n_sel > 0
         accept = (dev_new <= eps) & any_sel & live
+        reject = (~accept) & live
 
         was_single = n_sel <= 1
         if cfg.stop_policy == "first_violation":
-            done_new = done | ((~accept) & was_single) | \
-                ((k_final == 0) if cfg.select == "bisect" else (~any_sel))
+            done_new = done | (live & (((~accept) & was_single) | no_fit))
             blocked_new = blocked
+            retried_new = retried
         else:
-            # exhaustive: when not even the single best candidate fits,
-            # block it and keep searching; blocks clear on any accept.
-            best_idx = sel_idx[0]
-            no_fit = (k_final == 0) if cfg.select == "bisect" else \
-                ((~accept) & was_single & any_sel)
-            blocked_new = jnp.where(
-                accept, jnp.zeros_like(blocked),
-                jnp.where(no_fit & finite[0],
-                          blocked.at[best_idx].set(True), blocked))
-            exhausted = ~jnp.any(alive & (~blocked_new) & jnp.isfinite(impact))
-            done_new = done | ((~accept) & exhausted) | (~finite[0])
+            # exhaustive: a rejected round proves every exactly-ranked
+            # candidate with impact > eps cannot fit alone at the current
+            # state — block them all at once, with the best candidate as a
+            # backstop so no-progress rounds cannot repeat.  Blocks persist
+            # across accepts (the deviation headroom only shrinks as
+            # removals accumulate, so a once-unfit candidate rarely becomes
+            # fit); when the candidate pool is exhausted, all blocks are
+            # dropped once and the search retried from scratch — only a
+            # second back-to-back exhaustion terminates.
+            mass = exact_ranked & (impact > eps)
+            bump = (blocked | mass).at[best_idx].set(True)
+            blocked_new = jnp.where(reject & finite0, bump, blocked)
+            avail = removable & (~blocked_new) & \
+                (jnp.isfinite(impact) | overflowed)
+            exhausted = reject & (~jnp.any(avail))
+            clear_now = exhausted & (~retried)
+            blocked_new = jnp.where(clear_now, jnp.zeros_like(blocked),
+                                    blocked_new)
+            retried_new = jnp.where(accept, jnp.asarray(False),
+                                    retried | clear_now)
+            done_new = done | (exhausted & retried)
         if cfg.select == "backoff":
             alpha_new = jnp.where(accept, jnp.minimum(alpha * 1.1, cfg.alpha),
                                   jnp.maximum(alpha * 0.5,
-                                              jnp.asarray(1.5 / n, dt)))
+                                              jnp.asarray(1.5 / nb, dt)))
         else:
             alpha_new = alpha
 
         xr_out = jnp.where(accept, xr_new, xr)
         alive_out = jnp.where(accept, alive_new, alive)
+        prev_out = jnp.where(accept, prev_new, prev)
+        nxt_out = jnp.where(accept, nxt_new, nxt)
         y_out = jnp.where(accept, y + dy, y)
         agg_out = jax.tree.map(
             lambda new, old: jnp.where(accept, new, old), agg_new, agg)
         dev_out = jnp.where(accept, dev_new, dev)
-        return (xr_out, alive_out, y_out, agg_out, alpha_new,
-                dev_out, rounds + live.astype(jnp.int32), done_new,
-                blocked_new)
+        return (xr_out, alive_out, prev_out, nxt_out, y_out, agg_out,
+                alpha_new, dev_out, rounds + live.astype(jnp.int32),
+                done_new, blocked_new, retried_new)
 
-    alive0 = jnp.ones((n,), bool)
-    init = (x, alive0, y0, agg0, jnp.asarray(cfg.alpha, dt),
+    alive0 = validm
+    prev0, nxt0 = alive_neighbors(alive0)
+    init = (xp, alive0, prev0, nxt0, y0, agg0, jnp.asarray(cfg.alpha, dt),
             jnp.asarray(0.0, dt), jnp.asarray(0, jnp.int32),
-            jnp.asarray(False), jnp.zeros((n,), bool))
-    (xr, alive, y, agg, _, dev, rounds, _, _) = jax.lax.while_loop(
+            jnp.asarray(False), jnp.zeros((nb,), bool), jnp.asarray(False))
+    (xr, alive, _, _, y, agg, _, dev, rounds, _, _, _) = jax.lax.while_loop(
         cond, body, init)
-    stat_new = transform(acf_from_aggregates(agg, ny))
+    stat_new = transform(acf_from_aggregates(agg, ny_valid))
     return CompressResult(
         kept=alive, xr=xr, deviation=dev, n_kept=jnp.sum(alive),
         iters=rounds, stat_orig=p0, stat_new=stat_new)
+
+
+def compress_rounds(x: jax.Array, cfg: CameoConfig, *,
+                    pad_to: Optional[int] = None) -> CompressResult:
+    """Rounds-mode compression of one series.
+
+    The series is zero-padded to a shape bucket (see ``_round_bucket``) and
+    compressed with its true length as a runtime scalar, so nearby lengths
+    share one compiled program.  ``pad_to`` forces at least that bucket —
+    streaming callers pass their full window length so a partial tail
+    window reuses the full-window program (no per-length recompiles).
+    """
+    dt = cfg.jdtype()
+    x = jnp.asarray(x, dt)
+    n = x.shape[0]
+    if cfg.kappa > 1 and n % cfg.kappa:
+        raise ValueError(f"length {n} not divisible by kappa={cfg.kappa}")
+    nb = _round_bucket(max(n, int(pad_to or 0)), cfg)
+    xp = jnp.pad(x, (0, nb - n)) if nb > n else x
+    min_alive, eps = _halting_params(n, cfg)
+    res = _rounds_padded(
+        xp, jnp.asarray(n, jnp.int32), jnp.asarray(min_alive, jnp.int32),
+        jnp.asarray(eps, dt), cfg)
+    if nb == n:
+        return res
+    return res._replace(kept=res.kept[:n], xr=res.xr[:n])
 
 
 # ---------------------------------------------------------------------------
@@ -467,7 +806,8 @@ def compress(x, cfg: CameoConfig) -> CompressResult:
 
 
 def compress_batch(xs, cfg: CameoConfig, mesh=None,
-                   axis: str = "data") -> CompressResult:
+                   axis: str = "data", *,
+                   pad_to: Optional[int] = None) -> CompressResult:
     """Batched multi-series compression — the fleet-of-sensors workload.
 
     ``xs`` is ``[B, n]`` (B independent series of equal length); returns a
@@ -487,7 +827,7 @@ def compress_batch(xs, cfg: CameoConfig, mesh=None,
     if cfg.kappa > 1:
         n = (xs.shape[1] // cfg.kappa) * cfg.kappa
         xs = xs[:, :n]
-    batched = jax.vmap(lambda x: compress_rounds(x, cfg))
+    batched = jax.vmap(lambda x: compress_rounds(x, cfg, pad_to=pad_to))
     if mesh is None:
         return batched(xs)
     from jax.sharding import PartitionSpec as P
@@ -515,29 +855,31 @@ class MVCompressResult(NamedTuple):
 
 
 def _column_masks(X: np.ndarray, cfg: CameoConfig, eps_c: np.ndarray,
-                  cols) -> tuple:
+                  cols, pad_to: Optional[int] = None) -> tuple:
     """(masks[C, n] for the requested ``cols``, iters) — rounds mode batches
     same-eps columns through ``compress_batch``; anything else runs
-    per-column ``compress``."""
+    per-column ``compress``.  ``pad_to`` rides through to the rounds bucket
+    (streaming tails reuse the full-window program)."""
     import jax as _jax
 
     masks = {}
     iters = 0
     cols = list(cols)
-    if cfg.mode == "rounds" and len(cols) > 1:
+    if cfg.mode == "rounds":
         by_eps = {}
         for c in cols:
             by_eps.setdefault(float(eps_c[c]), []).append(c)
         for eps, group in by_eps.items():
             gcfg = dataclasses.replace(cfg, eps=eps)
             if len(group) > 1:
-                res = compress_batch(X[:, group].T, gcfg)
+                res = compress_batch(X[:, group].T, gcfg, pad_to=pad_to)
                 _jax.block_until_ready(res.kept)
                 for i, c in enumerate(group):
                     masks[c] = np.asarray(res.kept[i])
                     iters += int(res.iters[i])
             else:
-                res = compress(jnp.asarray(X[:, group[0]]), gcfg)
+                res = compress_rounds(jnp.asarray(X[:, group[0]]), gcfg,
+                                      pad_to=pad_to)
                 masks[group[0]] = np.asarray(res.kept)
                 iters += int(res.iters)
     else:
@@ -578,7 +920,8 @@ def _column_deviation(x_col: np.ndarray, xr_col: np.ndarray,
 
 
 def compress_multivariate(X, cfg: CameoConfig, *,
-                          max_retries: int = 4) -> MVCompressResult:
+                          eps_c=None, max_retries: int = 4,
+                          pad_to: Optional[int] = None) -> MVCompressResult:
     """Compress a multivariate series ``X [n, C]`` onto one shared index.
 
     The Sprintz-style shared-timestamp layout: every column is compressed
@@ -591,12 +934,18 @@ def compress_multivariate(X, cfg: CameoConfig, *,
 
     The per-column ε guarantee is *enforced by measurement*, not assumed:
     each column's exact deviation is recomputed on the shared index, and a
-    column that exceeds ``cfg.eps`` (possible in principle — the ACF is not
-    monotone in pointwise error) is recompressed at half its budget and the
-    union rebuilt, up to ``max_retries`` times; a still-violating column
-    finally keeps all of its points (deviation exactly 0).  With
+    column that exceeds its budget (possible in principle — the ACF is not
+    monotone in pointwise error) is recompressed at half its working budget
+    and the union rebuilt, up to ``max_retries`` times; a still-violating
+    column finally keeps all of its points (deviation exactly 0).  With
     ``target_cr`` set there is no ε to enforce and the measured deviations
     are reported as-is.
+
+    ``eps_c`` (length-C) gives each column its own ε budget — channels with
+    different fidelity needs share one index stream while each column's
+    deviation is enforced against *its* budget (``None``: every column uses
+    ``cfg.eps``).  ``pad_to`` rides through to the rounds shape bucket so
+    streaming tail windows reuse the full-window compiled program.
 
     Returns an :class:`MVCompressResult` whose ``kept``/``xr`` feed
     ``CameoStore.append_series`` (v4 shared-index block layout) directly.
@@ -607,9 +956,18 @@ def compress_multivariate(X, cfg: CameoConfig, *,
     if cfg.kappa > 1:
         X = X[:(X.shape[0] // cfg.kappa) * cfg.kappa]
     n, C = X.shape
-    eps_c = np.full(C, float(cfg.eps))
-    masks, iters = _column_masks(X, cfg, eps_c, range(C))
-    enforce = cfg.target_cr is None and np.isfinite(cfg.eps)
+    if eps_c is None:
+        budget = np.full(C, float(cfg.eps))
+    else:
+        budget = np.asarray(eps_c, np.float64).reshape(-1)
+        if budget.shape[0] != C:
+            raise ValueError(
+                f"eps_c has {budget.shape[0]} budgets for {C} columns")
+        if np.any(budget <= 0):
+            raise ValueError("eps_c budgets must be positive")
+    eps_work = budget.copy()    # halves on repair; budget stays the bar
+    masks, iters = _column_masks(X, cfg, eps_work, range(C), pad_to)
+    enforce = cfg.target_cr is None
     retries = 0
     while True:
         union = np.zeros(n, bool)
@@ -619,7 +977,8 @@ def compress_multivariate(X, cfg: CameoConfig, *,
                        for c in range(C)], axis=1)
         devs = np.array([_column_deviation(X[:, c], xr[:, c], cfg)
                          for c in range(C)])
-        bad = [c for c in range(C) if enforce and devs[c] > cfg.eps
+        bad = [c for c in range(C)
+               if enforce and np.isfinite(budget[c]) and devs[c] > budget[c]
                and not masks[c].all()]
         if not bad:
             break
@@ -628,8 +987,8 @@ def compress_multivariate(X, cfg: CameoConfig, *,
                 masks[c] = np.ones(n, bool)
             continue          # keep-all columns measure deviation 0 next pass
         retries += 1
-        eps_c[bad] = eps_c[bad] / 2.0
-        new_masks, it = _column_masks(X, cfg, eps_c, bad)
+        eps_work[bad] = eps_work[bad] / 2.0
+        new_masks, it = _column_masks(X, cfg, eps_work, bad, pad_to)
         masks.update(new_masks)
         iters += it
     # per-column counts of the masks that actually went into the union

@@ -62,9 +62,23 @@ from repro.core.cameo import (
     _measure_fn,
     _stat_transform,
     compress,
+    compress_batch,
     compress_multivariate,
+    compress_rounds,
 )
 from repro.kernels import ops as _ops
+
+
+def compile_cache_size() -> int:
+    """Distinct compiled specializations of the rounds-mode program.
+
+    The streaming discipline promises *no per-length recompiles*: full
+    windows share one program and a partial tail rides the same bucket via
+    ``compress_rounds(..., pad_to=window_len)``.  The perf gate snapshots
+    this counter around a timed ingest run and asserts it stays flat.
+    """
+    from repro.core.cameo import _rounds_padded
+    return _rounds_padded._cache_size()
 
 
 class WindowResult(NamedTuple):
@@ -220,10 +234,22 @@ class StreamingCompressor:
     or more :class:`WindowResult`, in stream order); ``finish()`` flushes
     the final partial window.  See the module docstring for the exact
     semantics and the differential guarantees.
+
+    ``queue_depth`` (default 1: every window compresses synchronously the
+    moment it fills) lets the ingest pipeline accumulate up to K filled
+    windows and close them as **one** ``compress_batch`` ``[K, window]``
+    device program — a single dispatch for the whole batch, materialized
+    back into per-window results in stream order.  Per-window results are
+    bit-identical to the ``queue_depth=1`` path (``compress_batch``'s
+    per-series no-op-round guarantee), so store bytes are invariant to the
+    queue depth; windows are simply *emitted* in bursts of K.  A partial
+    tail window rides the full-window compiled program via
+    ``compress_rounds(..., pad_to=window_len)`` — no per-length recompiles
+    (see :func:`compile_cache_size`).
     """
 
     def __init__(self, cfg: CameoConfig, window_len: int = 4096, *,
-                 start: int = 0):
+                 start: int = 0, queue_depth: int = 1):
         if window_len % cfg.kappa:
             raise ValueError(f"window_len={window_len} not divisible by "
                              f"kappa={cfg.kappa}")
@@ -232,9 +258,13 @@ class StreamingCompressor:
                 f"window_len={window_len} shorter than the minimum "
                 f"{min_window_len(cfg)} for lags={cfg.lags}, "
                 f"kappa={cfg.kappa}")
+        if queue_depth < 1:
+            raise ValueError(f"queue_depth={queue_depth} must be >= 1")
         self.cfg = cfg
         self.window_len = int(window_len)
+        self.queue_depth = int(queue_depth)
         self._buf = np.empty(0, np.dtype(cfg.dtype))
+        self._queue: List[tuple] = []   # (start, window) awaiting batch close
         self._next_start = int(start)   # absolute index of _buf[0]
         self.n_seen = int(start)        # absolute index past the last point
         self.windows = 0
@@ -259,16 +289,18 @@ class StreamingCompressor:
         out = []
         W = self.window_len
         while self._buf.shape[0] >= W:
-            out.append(self._close(self._buf[:W], final=False))
+            self._queue.append((self._next_start, self._buf[:W].copy()))
             self._buf = self._buf[W:]
             self._next_start += W
+            if len(self._queue) >= self.queue_depth:
+                out += self._drain()
         return out
 
     def finish(self) -> List[WindowResult]:
-        """Flush the final partial window (if any) and finalize aggregates."""
+        """Flush queued windows and the final partial one; finalize."""
         if self._finished:
             return []
-        out = []
+        out = self._drain()
         if self._buf.shape[0]:
             out.append(self._close(self._buf, final=True))
             self._next_start += self._buf.shape[0]
@@ -280,12 +312,40 @@ class StreamingCompressor:
 
     # -- window close --------------------------------------------------------
 
-    def _close(self, w_x: np.ndarray, final: bool) -> WindowResult:
+    def _drain(self) -> List[WindowResult]:
+        """Close every queued full window — one ``[K, window]`` device
+        program when several are waiting (rounds mode), the plain per-window
+        path otherwise.  Results materialize in stream order."""
+        q, self._queue = self._queue, []
+        if not q:
+            return []
+        if len(q) == 1 or self.cfg.mode != "rounds":
+            return [self._close(w, final=False, start=s) for s, w in q]
+        xs = np.stack([w for _, w in q])
+        res = compress_batch(xs, self.cfg)   # one dispatch for all K windows
+        return [self._close(w, final=False, start=s,
+                            precomputed=(np.asarray(res.kept[i]),
+                                         np.asarray(res.xr[i]),
+                                         int(res.iters[i])))
+                for i, (s, w) in enumerate(q)]
+
+    def _close(self, w_x: np.ndarray, final: bool, start: int = None,
+               precomputed: tuple = None) -> WindowResult:
         cfg = self.cfg
+        if start is None:
+            start = self._next_start
         m = w_x.shape[0]
         ndiv = (m // cfg.kappa) * cfg.kappa
-        if ndiv // cfg.kappa >= cfg.lags + 2:
-            res = compress(jnp.asarray(w_x[:ndiv]), cfg)
+        if precomputed is not None:     # full window closed by a batch drain
+            kept, xr, iters = precomputed
+        elif ndiv // cfg.kappa >= cfg.lags + 2:
+            if cfg.mode == "rounds":
+                # pad to the full-window bucket: a partial tail reuses the
+                # full-window program instead of compiling its own shape
+                res = compress_rounds(jnp.asarray(w_x[:ndiv], cfg.jdtype()),
+                                      cfg, pad_to=self.window_len)
+            else:
+                res = compress(jnp.asarray(w_x[:ndiv]), cfg)
             kept = np.asarray(res.kept)
             xr = np.asarray(res.xr)
             iters = int(res.iters)
@@ -302,7 +362,7 @@ class StreamingCompressor:
                 np.asarray(w_x[:ndiv], np.float64), cfg.kappa))
             self._recon.append(aggregate_series(
                 np.asarray(xr[:ndiv], np.float64), cfg.kappa))
-        w = WindowResult(start=self._next_start, x=np.asarray(w_x),
+        w = WindowResult(start=start, x=np.asarray(w_x),
                          kept=kept, xr=xr, n_kept=int(kept.sum()),
                          iters=iters)
         self.windows += 1
@@ -332,19 +392,29 @@ class StreamingCompressor:
 
     def state_dict(self) -> dict:
         """Complete state, JSON-safe and bit-exact (floats round-trip via
-        repr); ``from_state`` continues as if the stream never paused."""
+        repr); ``from_state`` continues as if the stream never paused.
+        Queued-but-unclosed windows serialize back into the raw buffer
+        (they re-queue and recompress on resume — deterministic, so the
+        resumed stream stays bit-identical)."""
+        buf = self._buf
+        next_start = self._next_start
+        if self._queue:
+            buf = np.concatenate([w for _, w in self._queue] + [buf])
+            next_start = self._queue[0][0]
         return dict(
             version=1, window_len=self.window_len,
+            queue_depth=self.queue_depth,
             dtype=str(self._buf.dtype),
-            next_start=self._next_start, n_seen=self.n_seen,
+            next_start=next_start, n_seen=self.n_seen,
             windows=self.windows, n_kept=self.n_kept, iters=self.iters,
             finished=self._finished,
-            buf=self._buf.astype(np.float64).tolist(),
+            buf=buf.astype(np.float64).tolist(),
             orig=self._orig.state_dict(), recon=self._recon.state_dict())
 
     @classmethod
     def from_state(cls, cfg: CameoConfig, state: dict):
-        out = cls(cfg, int(state["window_len"]))
+        out = cls(cfg, int(state["window_len"]),
+                  queue_depth=int(state.get("queue_depth", 1)))
         out._buf = np.asarray(state["buf"], np.float64).astype(
             np.dtype(state["dtype"]))
         out._next_start = int(state["next_start"])
@@ -355,6 +425,14 @@ class StreamingCompressor:
         out._finished = bool(state["finished"])
         out._orig = RunningAggregates.from_state(state["orig"], cfg.backend)
         out._recon = RunningAggregates.from_state(state["recon"], cfg.backend)
+        # windows that were queued at pause time re-queue (the serialized
+        # buffer holds them verbatim); pre-pause the queue was < queue_depth
+        # deep, so re-queueing alone never triggers a drain
+        W = out.window_len
+        while out._buf.shape[0] >= W:
+            out._queue.append((out._next_start, out._buf[:W].copy()))
+            out._buf = out._buf[W:]
+            out._next_start += W
         return out
 
 
@@ -388,7 +466,8 @@ class MVStreamingCompressor:
     """
 
     def __init__(self, cfg: CameoConfig, window_len: int = 4096,
-                 channels: int = None, *, start: int = 0):
+                 channels: int = None, *, start: int = 0,
+                 queue_depth: int = 1):
         if channels is None or int(channels) < 1:
             raise ValueError("MVStreamingCompressor needs channels >= 1")
         if window_len % cfg.kappa:
@@ -399,10 +478,14 @@ class MVStreamingCompressor:
                 f"window_len={window_len} shorter than the minimum "
                 f"{min_window_len(cfg)} for lags={cfg.lags}, "
                 f"kappa={cfg.kappa}")
+        if queue_depth < 1:
+            raise ValueError(f"queue_depth={queue_depth} must be >= 1")
         self.cfg = cfg
         self.window_len = int(window_len)
+        self.queue_depth = int(queue_depth)
         self.channels = int(channels)
         self._buf = np.empty((0, self.channels), np.dtype(cfg.dtype))
+        self._queue: List[tuple] = []   # (start, window) awaiting close
         self._next_start = int(start)
         self.n_seen = int(start)
         self.windows = 0
@@ -431,15 +514,17 @@ class MVStreamingCompressor:
         out = []
         W = self.window_len
         while self._buf.shape[0] >= W:
-            out.append(self._close(self._buf[:W], final=False))
+            self._queue.append((self._next_start, self._buf[:W].copy()))
             self._buf = self._buf[W:]
             self._next_start += W
+            if len(self._queue) >= self.queue_depth:
+                out += self._drain()
         return out
 
     def finish(self) -> List[MVWindowResult]:
         if self._finished:
             return []
-        out = []
+        out = self._drain()
         if self._buf.shape[0]:
             out.append(self._close(self._buf, final=True))
             self._next_start += self._buf.shape[0]
@@ -451,12 +536,25 @@ class MVStreamingCompressor:
 
     # -- window close --------------------------------------------------------
 
-    def _close(self, w_x: np.ndarray, final: bool) -> MVWindowResult:
+    def _drain(self) -> List[MVWindowResult]:
+        """Close queued windows in stream order.  Each window runs its own
+        ``compress_multivariate`` (the per-column ε repair loop is inherently
+        per-window); the queue still defers work so callers control when the
+        device burst happens."""
+        q, self._queue = self._queue, []
+        return [self._close(w, final=False, start=s) for s, w in q]
+
+    def _close(self, w_x: np.ndarray, final: bool,
+               start: int = None) -> MVWindowResult:
         cfg = self.cfg
+        if start is None:
+            start = self._next_start
         m = w_x.shape[0]
         ndiv = (m // cfg.kappa) * cfg.kappa
         if ndiv // cfg.kappa >= cfg.lags + 2:
-            res = compress_multivariate(w_x[:ndiv], cfg)
+            res = compress_multivariate(
+                w_x[:ndiv], cfg,
+                pad_to=self.window_len if cfg.mode == "rounds" else None)
             kept = np.asarray(res.kept)
             xr = np.asarray(res.xr)
             iters = int(res.iters)
@@ -473,7 +571,7 @@ class MVStreamingCompressor:
                     np.asarray(w_x[:ndiv, c], np.float64), cfg.kappa))
                 self._recon[c].append(aggregate_series(
                     np.asarray(xr[:ndiv, c], np.float64), cfg.kappa))
-        w = MVWindowResult(start=self._next_start, x=np.asarray(w_x),
+        w = MVWindowResult(start=start, x=np.asarray(w_x),
                            kept=kept, xr=xr, n_kept=int(kept.sum()),
                            iters=iters)
         self.windows += 1
@@ -506,19 +604,26 @@ class MVStreamingCompressor:
     # -- resume support ------------------------------------------------------
 
     def state_dict(self) -> dict:
+        buf = self._buf
+        next_start = self._next_start
+        if self._queue:
+            buf = np.concatenate([w for _, w in self._queue] + [buf])
+            next_start = self._queue[0][0]
         return dict(
             version=1, kind="mvar", window_len=self.window_len,
+            queue_depth=self.queue_depth,
             channels=self.channels, dtype=str(self._buf.dtype),
-            next_start=self._next_start, n_seen=self.n_seen,
+            next_start=next_start, n_seen=self.n_seen,
             windows=self.windows, n_kept=self.n_kept, iters=self.iters,
             finished=self._finished,
-            buf=self._buf.astype(np.float64).tolist(),
+            buf=buf.astype(np.float64).tolist(),
             orig=[ra.state_dict() for ra in self._orig],
             recon=[ra.state_dict() for ra in self._recon])
 
     @classmethod
     def from_state(cls, cfg: CameoConfig, state: dict):
-        out = cls(cfg, int(state["window_len"]), int(state["channels"]))
+        out = cls(cfg, int(state["window_len"]), int(state["channels"]),
+                  queue_depth=int(state.get("queue_depth", 1)))
         out._buf = np.asarray(state["buf"], np.float64).reshape(
             -1, out.channels).astype(np.dtype(state["dtype"]))
         out._next_start = int(state["next_start"])
@@ -531,6 +636,11 @@ class MVStreamingCompressor:
                      for s in state["orig"]]
         out._recon = [RunningAggregates.from_state(s, cfg.backend)
                       for s in state["recon"]]
+        W = out.window_len
+        while out._buf.shape[0] >= W:
+            out._queue.append((out._next_start, out._buf[:W].copy()))
+            out._buf = out._buf[W:]
+            out._next_start += W
         return out
 
 

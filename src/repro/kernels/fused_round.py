@@ -1,0 +1,361 @@
+"""Fused prefix-feasibility scan — the rounds-mode selection step.
+
+One round of the batched-greedy mode picks the ``k_max`` lowest-impact
+candidates (rank order), filters them to an independent set, and must then
+find the largest rank prefix whose combined removal still satisfies the
+deviation constraint.  The historical implementation bisected over prefix
+length, re-running a dense O(nL) reconstruction + aggregate update per
+probe.  This module computes the *whole deviation curve* — ``dev[j]`` =
+exact deviation after applying candidates ``0..j`` — in one fused pass:
+
+* reference backend — a closed-form vectorized evaluation.  Candidate
+  segments are pairwise disjoint (independent-set invariant), so the linear
+  aggregate deltas are a plain per-candidate einsum + cumulative sum; the
+  quadratic terms (``sx2``/``sxl2``/``sxx``) see earlier candidates only
+  through the running delta field ``D``, which is gathered per candidate
+  from the exclusive cumulative delta rows.  O(K·(W + L)·L) total, no
+  sequential dependence beyond two cumsums.
+
+* pallas backend — a single kernel pass (`grid=(1,)`) holding the running
+  reconstruction ``z = y + D`` in VMEM scratch; each rank step reads its
+  ``W + 2L`` context via dynamic slices, updates the five aggregates and the
+  scratch in place, and emits that prefix's deviation.  This is the fused
+  form of Eq. 9 ranking + Eq. 10/11 maintenance the TPU path runs natively
+  (interpret mode elsewhere, as with the other kernels in this package).
+
+Both forms are exact for every ``kappa`` (the ``z``-context accounts for
+boundary-bin sharing between segments mapped onto the aggregate series) and
+take the valid length ``ny`` as a runtime scalar so padded-bucket callers
+never recompile across lengths.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels import ref as _ref
+
+
+# ---------------------------------------------------------------------------
+# reference form: vectorized deviation curve
+# ---------------------------------------------------------------------------
+
+def _moment_deltas(d, ctx, ystarts, ny, *, L: int):
+    """Five per-lag aggregate deltas ``[K, 5, L]`` for independent windowed
+    deltas ``d [K, Wy]`` given their series context ``ctx [K, Wy + 2L]``.
+
+    Relies on the padded-bucket discipline — the series (and hence ``ctx``)
+    is zero beyond ``ny`` and before 0, and deltas only touch valid
+    positions — which makes every head/tail validity mask either implicit
+    (the bilinear ``sxx`` term: invalid partners are zero) or a contiguous
+    cut in the window axis (the four moment sums: prefix-sum gathers
+    instead of ``[K, Wy, L]`` mask einsums).
+    """
+    K, Wy = d.shape
+    l = jnp.arange(1, L + 1)
+
+    z_at = ctx[:, L:L + Wy]
+    e = d * (2.0 * z_at + d)
+    # head keeps abs_t <= ny-1-l  <=>  j < ny - l - s   (contiguous prefix);
+    # tail keeps abs_t >= l       <=>  j >= l - s       (contiguous suffix).
+    cdz = jnp.pad(jnp.cumsum(d, axis=1), ((0, 0), (1, 0)))
+    cez = jnp.pad(jnp.cumsum(e, axis=1), ((0, 0), (1, 0)))
+    c_head = jnp.clip(ny - l[None, :] - ystarts[:, None], 0, Wy)
+    c_tail = jnp.clip(l[None, :] - ystarts[:, None], 0, Wy)
+    dsx = jnp.take_along_axis(cdz, c_head, axis=1)
+    dsx2 = jnp.take_along_axis(cez, c_head, axis=1)
+    dsxl = cdz[:, -1:] - jnp.take_along_axis(cdz, c_tail, axis=1)
+    dsxl2 = cez[:, -1:] - jnp.take_along_axis(cez, c_tail, axis=1)
+
+    # Bilinear term, one contiguous static slice per lag: materializing the
+    # three [K, Wy, L] gathered context tensors costs more than the
+    # multiply-reduce itself (XLA CPU/TPU gathers are far slower than
+    # static slices), so unroll the (static, small) lag axis into fused
+    # slice-multiply-sum steps instead.
+    d_pad = jnp.pad(d, ((0, 0), (0, L)))
+    dsxx = jnp.stack(
+        [jnp.sum(d * (ctx[:, L + lag:L + lag + Wy]
+                      + ctx[:, L - lag:L - lag + Wy]
+                      + d_pad[:, lag:lag + Wy]), axis=1)
+         for lag in range(1, L + 1)], axis=1)
+    return jnp.stack([dsx, dsxl, dsx2, dsxl2, dsxx], axis=1)  # [K, 5, L]
+
+
+def solo_moment_rows(y, dyws, ystarts, ny, *, L: int):
+    """Aggregate-delta rows ``[K, 5, L]`` for each candidate applied *alone*
+    on the current reconstruction (context gathered from ``y`` only)."""
+    K, Wy = dyws.shape
+    nyb = y.shape[0]
+    dt = y.dtype
+    starts = jnp.clip(ystarts, 0, nyb - 1)
+    kk = jnp.arange(Wy + 2 * L)
+    ctx = jnp.pad(y, (L, L + Wy))[starts[:, None] + kk[None, :]]
+    return _moment_deltas(dyws.astype(dt), ctx, ystarts, ny, L=L)
+
+
+def window_acf_rows(y, dyws, ystarts, agg_table, ny, *, L: int):
+    """Independent per-candidate Eq. 9 ACF rows ``[K, L]`` under the
+    padded-bucket discipline (mask-free form of
+    ``ref.acf_after_window_delta_rows`` — the rounds-mode ranking hot path).
+    """
+    dt = y.dtype
+    dagg = solo_moment_rows(y, dyws, ystarts, ny, L=L)
+    cum = dagg + agg_table[None]
+    l = jnp.arange(1, L + 1)
+    m = (ny - l).astype(dt)[None, :]
+    return _ref.acf_from_moments(cum[:, 0], cum[:, 1], cum[:, 2],
+                                 cum[:, 3], cum[:, 4], m)
+
+
+def prefix_moment_rows(y, dyws, ystarts, ok, ny, *, L: int):
+    """Per-candidate aggregate-delta rows ``[K, 5, L]`` under the running
+    reconstruction that applies every earlier ``ok`` candidate.
+
+    ``dyws [K, Wy]`` are the candidates' aggregate-space delta windows in
+    rank order, starting at ``ystarts [K]``; ``ok [K]`` gates which rank
+    positions actually apply (independent-set survivors).  ``ny`` is the
+    (possibly traced) valid length of ``y``; ``y`` must be zero-padded
+    beyond it.
+    """
+    K, Wy = dyws.shape
+    nyb = y.shape[0]
+    dt = y.dtype
+    d = dyws * ok.astype(dt)[:, None]
+    starts = jnp.clip(ystarts, 0, nyb - 1)
+
+    # Exclusive running delta field D_{<j}, as dense per-candidate rows.
+    place = jax.vmap(
+        lambda dr, s: jax.lax.dynamic_update_slice(
+            jnp.zeros((nyb + Wy,), dt), dr, (s,))[:nyb])(d, starts)
+    d_ex = jnp.cumsum(place, axis=0) - place
+
+    # Per-candidate context of the running reconstruction z = y + D_{<j}.
+    kk = jnp.arange(Wy + 2 * L)
+    gidx = starts[:, None] + kk[None, :]
+    y_pad = jnp.pad(y, (L, L + Wy))
+    dex_pad = jnp.pad(d_ex, ((0, 0), (L, L + Wy)))
+    ctx = y_pad[gidx] + jnp.take_along_axis(dex_pad, gidx, axis=1)
+
+    return _moment_deltas(d, ctx, ystarts, ny, L=L)           # [K, 5, L]
+
+
+def prefix_acf_rows_ref(y, dyws, ystarts, ok, agg_table, ny, *, L: int):
+    """ACF rows ``[K, L]`` after each rank-prefix of windowed removals
+    (see :func:`prefix_moment_rows` for the argument contract)."""
+    dt = y.dtype
+    dagg = prefix_moment_rows(y, dyws, ystarts, ok, ny, L=L)
+    cum = jnp.cumsum(dagg, axis=0) + agg_table[None]
+    l = jnp.arange(1, L + 1)
+    m = (ny - l).astype(dt)[None, :]
+    return _ref.acf_from_moments(cum[:, 0], cum[:, 1], cum[:, 2],
+                                 cum[:, 3], cum[:, 4], m)
+
+
+# ---------------------------------------------------------------------------
+# pallas form: one fused pass with the running reconstruction in VMEM
+# ---------------------------------------------------------------------------
+
+def _prefix_scan_kernel(dy_ref, s_ref, ok_ref, y_pad_ref, agg_ref, p0_ref,
+                        ny_ref, eps_ref, out_ref, z_ref,
+                        *, K: int, Wy: int, L: int, measure: str,
+                        greedy: bool):
+    dtype = y_pad_ref.dtype
+    z_ref[...] = y_pad_ref[...]
+    ny = ny_ref[0]
+    eps = eps_ref[0]
+    tiny = jnp.asarray(1e-30, dtype)
+
+    def step(k, agg5):
+        s = s_ref[k]
+        d = dy_ref[k, :].reshape(1, Wy) * ok_ref[k]
+        idx = s + jax.lax.broadcasted_iota(jnp.int32, (1, Wy), 1)
+        jj = jax.lax.broadcasted_iota(jnp.int32, (1, Wy), 1)
+        z_at = z_ref[pl.dslice(s + L, Wy)].reshape(1, Wy)
+        e = d * (2.0 * z_at + d)
+
+        def lag_body(lag, carry):
+            trial5, acc = carry
+            lm1 = lag - 1
+            z_f = z_ref[pl.dslice(s + L + lag, Wy)].reshape(1, Wy)
+            z_b = z_ref[pl.dslice(s + L - lag, Wy)].reshape(1, Wy)
+            head = (idx <= ny - 1 - lag).astype(dtype)
+            tail = (idx >= lag).astype(dtype)
+            d_f = jnp.where(jj + lag < Wy, jnp.roll(d, -lag, axis=1), 0.0)
+            sx = trial5[0, lm1] + jnp.sum(d * head)
+            sxl = trial5[1, lm1] + jnp.sum(d * tail)
+            sx2 = trial5[2, lm1] + jnp.sum(e * head)
+            sxl2 = trial5[3, lm1] + jnp.sum(e * tail)
+            sxx = trial5[4, lm1] + jnp.sum(
+                d * (z_f * head + z_b * tail + d_f * head))
+            col = jnp.stack([sx, sxl, sx2, sxl2, sxx])
+            trial5 = jax.lax.dynamic_update_slice(
+                trial5, col[:, None], (0, lm1))
+            m = (ny - lag).astype(dtype)
+            num = m * sxx - sx * sxl
+            den2 = (m * sx2 - sx * sx) * (m * sxl2 - sxl * sxl)
+            den = jnp.sqrt(jnp.maximum(den2, tiny))
+            rho = jnp.where(den2 > tiny, num / den, jnp.zeros_like(num))
+            diff = rho - p0_ref[lm1]
+            if measure == "mae":
+                acc = acc + jnp.abs(diff)
+            elif measure == "rmse":
+                acc = acc + diff * diff
+            else:                                            # cheb
+                acc = jnp.maximum(acc, jnp.abs(diff))
+            return trial5, acc
+
+        trial5, acc = jax.lax.fori_loop(
+            1, L + 1, lag_body, (agg5, jnp.asarray(0.0, dtype)))
+        if measure == "mae":
+            dev = acc / L
+        elif measure == "rmse":
+            dev = jnp.sqrt(acc / L)
+        else:
+            dev = acc
+        out_ref[pl.dslice(k, 1)] = dev.reshape(1)
+        if greedy:
+            # Conditional commit: the candidate joins the running
+            # reconstruction only when its trial deviation fits.
+            take = (ok_ref[k] > 0) & (dev <= eps)
+            gate = take.astype(dtype)
+            z_ref[pl.dslice(s + L, Wy)] = (z_at + gate * d).reshape(Wy)
+            return jnp.where(take, trial5, agg5)
+        z_ref[pl.dslice(s + L, Wy)] = (z_at + d).reshape(Wy)
+        return trial5
+
+    jax.lax.fori_loop(0, K, step, agg_ref[...])
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("L", "measure", "greedy", "interpret"))
+def prefix_devs_pallas(y, dyws, ystarts, ok, agg_table, p0, ny, eps=None, *,
+                       L: int, measure: str = "mae", greedy: bool = False,
+                       interpret: bool = False):
+    """Per-rank deviations [K] via the fused Pallas round kernel.
+
+    With ``greedy=False`` every ``ok`` candidate commits and the output is
+    the prefix deviation curve.  With ``greedy=True`` a candidate commits
+    only when its trial deviation fits within ``eps`` — the output is each
+    candidate's *trial* deviation on top of the committed set, so the taken
+    mask is recovered as ``ok & (out <= eps)``.
+    """
+    from jax.experimental.pallas import tpu as pltpu
+    K, Wy = dyws.shape
+    nyb = y.shape[0]
+    dtype = y.dtype
+    y_pad = jnp.pad(y.astype(dtype), (L, L + Wy))
+    okf = ok.astype(dtype)
+    starts = jnp.clip(ystarts, 0, nyb - 1).astype(jnp.int32)
+    ny_arr = jnp.asarray(ny, jnp.int32).reshape(1)
+    eps_arr = jnp.asarray(
+        jnp.inf if eps is None else eps, dtype).reshape(1)
+
+    kernel = functools.partial(
+        _prefix_scan_kernel, K=K, Wy=Wy, L=L, measure=measure, greedy=greedy)
+    return pl.pallas_call(
+        kernel,
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec(dyws.shape, lambda i: (0, 0)),
+            pl.BlockSpec(starts.shape, lambda i: (0,)),
+            pl.BlockSpec(okf.shape, lambda i: (0,)),
+            pl.BlockSpec(y_pad.shape, lambda i: (0,)),
+            pl.BlockSpec(agg_table.shape, lambda i: (0, 0)),
+            pl.BlockSpec(p0.shape, lambda i: (0,)),
+            pl.BlockSpec(ny_arr.shape, lambda i: (0,)),
+            pl.BlockSpec(eps_arr.shape, lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((K,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((K,), dtype),
+        scratch_shapes=[pltpu.VMEM((nyb + 2 * L + Wy,), dtype)],
+        interpret=interpret,
+    )(dyws.astype(dtype), starts, okf, y_pad, agg_table, p0, ny_arr,
+      eps_arr)
+
+
+# ---------------------------------------------------------------------------
+# dispatch
+# ---------------------------------------------------------------------------
+
+def prefix_devs(cfg, y, dyws, ystarts, ok, agg, p0, ny):
+    """Backend-dispatched deviation curve for one round's rank prefix.
+
+    The Pallas kernel runs only on a real TPU: its sequential per-lag
+    accumulation differs from the reference's vectorized reduction order,
+    so interpret-mode execution is reserved for the direct parity test
+    (tolerance-based) instead of the decision path — off-TPU, every
+    backend choice selects prefixes from the identical reference curve.
+    """
+    from repro.core import measures as _measures
+    from repro.kernels import ops as _ops
+    table = _ops.agg_to_table(agg)
+    L = cfg.lags
+    if _ops._kernel_eligible(cfg.backend, cfg.stat, cfg.measure) \
+            and not _ops.interpret_mode():
+        return prefix_devs_pallas(
+            y, dyws, ystarts, ok, table, p0, ny, L=L, measure=cfg.measure,
+            interpret=False)
+    rows = prefix_acf_rows_ref(y, dyws, ystarts, ok, table, ny, L=L)
+    if cfg.stat == "acf" and cfg.measure in _ref.KERNEL_MEASURES:
+        return _ref.measure_rows(rows, p0, cfg.measure)
+    mfn = _measures.get_measure(cfg.measure)
+    transform = _ops._transform_fn(cfg.stat)
+    return jax.vmap(lambda r: mfn(transform(r), p0))(rows)
+
+
+def greedy_feasible(cfg, y, dyws, ystarts, ok, agg, p0, ny, eps):
+    """Backend-dispatched greedy feasible-subset selection for one round.
+
+    Walks the rank-ordered candidates once, committing each candidate whose
+    trial deviation on top of the already-committed set stays within
+    ``eps`` — violators are *skipped*, not terminal, so the round harvests
+    every boundary-compatible candidate instead of stopping at the first
+    infeasible prefix.  Returns ``(take [K] bool, devs [K])`` where ``devs``
+    are the per-candidate trial deviations.
+
+    The Pallas form maintains the exact committed reconstruction in VMEM.
+    The reference form scans precomputed aggregate-delta rows whose contexts
+    assume every earlier ``ok`` candidate applied — a skip leaves a small
+    cross-lag bilinear error in later rows, which is why callers must
+    re-validate the final subset with the authoritative dense update (the
+    rounds loop does, with the feasible prefix as fallback).
+    """
+    from repro.core import measures as _measures
+    from repro.kernels import ops as _ops
+    table = _ops.agg_to_table(agg)
+    L = cfg.lags
+    dt = y.dtype
+    if _ops._kernel_eligible(cfg.backend, cfg.stat, cfg.measure) \
+            and not _ops.interpret_mode():
+        devs = prefix_devs_pallas(
+            y, dyws, ystarts, ok, table, p0, ny, eps, L=L,
+            measure=cfg.measure, greedy=True, interpret=False)
+        return ok & (devs <= eps), devs
+
+    dagg = prefix_moment_rows(y, dyws, ystarts, ok, ny, L=L)
+    l = jnp.arange(1, L + 1)
+    m = (ny - l).astype(dt)
+    if cfg.stat == "acf" and cfg.measure in _ref.KERNEL_MEASURES:
+        def dev_fn(rho):
+            return _ref.measure_rows(rho[None], p0, cfg.measure)[0]
+    else:
+        mfn = _measures.get_measure(cfg.measure)
+        transform = _ops._transform_fn(cfg.stat)
+
+        def dev_fn(rho):
+            return mfn(transform(rho), p0)
+
+    def step(cum, inp):
+        dk, okk = inp
+        trial = cum + dk
+        rho = _ref.acf_from_moments(trial[0], trial[1], trial[2],
+                                    trial[3], trial[4], m)
+        dev = dev_fn(rho)
+        take = okk & (dev <= eps)
+        return jnp.where(take, trial, cum), (take, dev)
+
+    _, (take, devs) = jax.lax.scan(step, table, (dagg, ok))
+    return take, devs

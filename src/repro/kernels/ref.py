@@ -62,11 +62,15 @@ KERNEL_MEASURES = ("mae", "rmse", "cheb")
 # ---------------------------------------------------------------------------
 
 def acf_after_single_delta(agg, y: jax.Array, idx: jax.Array,
-                           dval: jax.Array) -> jax.Array:
+                           dval: jax.Array, *, ny=None) -> jax.Array:
     """Hypothetical ACF (per Eq. 8) after adding ``dval[p]`` at ``idx[p]``,
     independently for each p.  Returns ``[P, L]``.
+
+    ``ny`` (optionally traced) overrides the valid length when ``y`` lives in
+    a zero-padded bucket.
     """
-    ny = y.shape[0]
+    if ny is None:
+        ny = y.shape[0]
     L = agg[0].shape[-1]
     dtype = y.dtype
     head, tail = head_tail_masks(idx, ny, L, dtype)        # [P, L]

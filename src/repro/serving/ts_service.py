@@ -52,11 +52,10 @@ import dataclasses
 import warnings
 from typing import Dict, List, Optional, Tuple
 
-import jax
 import numpy as np
 
-from repro.api.dataset import StreamWriter
-from repro.core.cameo import CameoConfig, compress, compress_batch
+from repro.api.dataset import Dataset, StreamWriter
+from repro.core.cameo import CameoConfig
 from repro.store.query import query as _pushdown_query
 from repro.store.store import CameoStore
 
@@ -70,6 +69,7 @@ class TsServiceConfig:
     store_residuals: bool = True  # keep Plato-style bound metadata
     cache_bytes: int = 64 << 20   # decoded-block LRU budget (0 disables)
     stream_window: int = 4096     # default ingest_stream window length
+    queue_depth: int = 1          # ingest_stream windows per batched drain
 
 
 class StreamIngest(StreamWriter):
@@ -82,12 +82,15 @@ class StreamIngest(StreamWriter):
     """
 
     def __init__(self, service: "TimeSeriesService", sid: str,
-                 window_len: int, resume: bool):
+                 window_len: int, resume: bool, queue_depth: int = None):
         self._svc = service
         super().__init__(service.store, service.ccfg, sid,
                          window_len=window_len,
                          with_resid=service.scfg.store_residuals,
-                         resume=resume)
+                         resume=resume,
+                         queue_depth=(service.scfg.queue_depth
+                                      if queue_depth is None
+                                      else queue_depth))
 
     def close(self) -> dict:
         entry = super().close()
@@ -108,6 +111,12 @@ class TimeSeriesService:
             path, "a" if resume else "w", block_len=self.scfg.block_len,
             value_codec=self.scfg.value_codec, entropy=self.scfg.entropy,
             cache_bytes=self.scfg.cache_bytes)
+        # the façade Dataset over the same store: batched ingest routes
+        # through Dataset.write_batch, so the deprecated service surface
+        # stays a shim over the one documented path (identical bytes)
+        self._ds = Dataset(self.store, ccfg,
+                           store_residuals=self.scfg.store_residuals,
+                           stream_window=self.scfg.stream_window)
         # pending ingest, grouped by length (compress_batch wants [B, n])
         self._pending: Dict[int, List[Tuple[str, np.ndarray]]] = {}
         self._streams: Dict[str, StreamIngest] = {}   # open feed streams
@@ -155,20 +164,11 @@ class TimeSeriesService:
         group = self._pending.pop(length, [])
         if not group:
             return
-        cfg = self.ccfg
-        xs = np.stack([x for _, x in group])
-        if cfg.mode == "rounds" and len(group) > 1:
-            res = compress_batch(xs, cfg)
-            jax.block_until_ready(res.kept)
-            per_series = [
-                jax.tree.map(lambda leaf: leaf[i], res)
-                for i in range(len(group))]
-        else:
-            per_series = [compress(xs[i], cfg) for i in range(len(group))]
-        for (sid, x), r in zip(group, per_series):
-            self.store.append_series(
-                sid, r, cfg, x=x if self.scfg.store_residuals else None)
-            self._ingested += 1
+        # one façade call: Dataset.write_batch drives the same
+        # compress_batch-per-length-group burst and append order this
+        # method used to hand-roll, so stored bytes are unchanged
+        self._ds.write_batch(dict(group))
+        self._ingested += len(group)
         self._rounds += 1
 
     def flush(self) -> None:
@@ -177,7 +177,8 @@ class TimeSeriesService:
             self._flush_group(length)
 
     def ingest_stream(self, sid: str, *, window_len: int = None,
-                      resume: bool = False) -> StreamIngest:
+                      resume: bool = False,
+                      queue_depth: int = None) -> StreamIngest:
         """Open a continuous-feed ingest stream for ``sid``.
 
         Returns a :class:`StreamIngest`: ``push`` arbitrary chunks,
@@ -200,7 +201,8 @@ class TimeSeriesService:
         if sid in self._streams:
             raise ValueError(f"series {sid!r} already has an open stream")
         h = StreamIngest(self, sid,
-                         window_len or self.scfg.stream_window, resume)
+                         window_len or self.scfg.stream_window, resume,
+                         queue_depth)
         self._streams[sid] = h
         return h
 

@@ -921,9 +921,23 @@ class StreamSession:
         or anything with ``.start``, ``.x``, ``.kept``)."""
         self.append(w.start, w.x, w.kept)
 
+    def append_windows(self, wins) -> None:
+        """Absorb a burst of closed stream windows (a batched-ingest drain)
+        with one border scan for the whole burst: every window buffers
+        first, then every provable block commits.  Bytes are identical to
+        appending the windows one at a time — the committed borders depend
+        only on the accumulated kept set, not on the call pattern."""
+        for w in wins:
+            self._absorb(w.start, w.x, w.kept)
+        self._commit_ready()
+
     def append(self, start: int, x, kept) -> None:
         """Absorb the contiguous window ``x`` at absolute index ``start``
         with its kept mask; writes every block whose border is provable."""
+        self._absorb(start, x, kept)
+        self._commit_ready()
+
+    def _absorb(self, start: int, x, kept) -> None:
         if self._closed:
             raise ValueError(f"stream session for {self.sid!r} is closed")
         x = np.asarray(x)
@@ -953,7 +967,6 @@ class StreamSession:
             self._total_kept += int(idx.shape[0])
         if self.with_resid:
             self._x_parts.append(np.asarray(x, np.float64))
-        self._commit_ready()
 
     def _consolidate(self) -> None:
         if self._idx_parts:

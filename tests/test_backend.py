@@ -121,6 +121,76 @@ def test_resolve_backend():
         ops.resolve_backend("nope")
 
 
+def _prefix_setup(seed=9, nyb=160, ny=150, K=12, Wy=16, L=8):
+    """Synthetic fused-round inputs honouring the kernel contract: y is
+    zero-padded beyond ny, candidate delta windows stay inside [0, ny)."""
+    from repro.core.cameo import _stat_transform
+    rng = np.random.default_rng(seed)
+    y = np.zeros(nyb)
+    y[:ny] = np.asarray(_series(ny, seed=seed))
+    starts = rng.integers(0, ny - Wy, size=K).astype(np.int32)
+    dyws = 0.1 * rng.standard_normal((K, Wy))
+    ok = rng.random(K) > 0.25
+    agg = extract_aggregates(jnp.asarray(y[:ny]), L)
+    p0 = acf_from_aggregates(agg, ny)
+    table = ops.agg_to_table(agg)
+    return (jnp.asarray(y), jnp.asarray(dyws), jnp.asarray(starts),
+            jnp.asarray(ok), table, p0)
+
+
+@pytest.mark.parametrize("measure", ["mae", "rmse", "cheb"])
+def test_prefix_devs_pallas_interpret_parity(measure):
+    """Fused-round parity: the Pallas prefix-deviation kernel (interpret
+    mode on CPU) matches the reference prefix rows to fp tolerance — the
+    accumulation orders differ, so this is allclose, not bit-equality."""
+    from repro.kernels import fused_round as fr
+    from repro.kernels import ref as kref
+    y, dyws, starts, ok, table, p0 = _prefix_setup()
+    L = int(table.shape[-1])
+    ny = 150
+    rows = fr.prefix_acf_rows_ref(y, dyws, starts, ok, table, ny, L=L)
+    want = kref.measure_rows(rows, p0, measure)
+    got = fr.prefix_devs_pallas(y, dyws, starts, ok, table, p0, ny,
+                                L=L, measure=measure, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-9, atol=1e-9)
+
+
+def test_greedy_feasible_pallas_interpret_matches_oracle():
+    """The greedy fused pass (conditional commit in VMEM) against a pure
+    numpy oracle that rebuilds the reconstruction and recomputes the ACF
+    from scratch at every trial."""
+    from repro.core import measures
+    from repro.core.acf import acf
+    from repro.kernels import fused_round as fr
+    y, dyws, starts, ok, table, p0 = _prefix_setup(seed=11)
+    L = int(table.shape[-1])
+    ny, Wy, K = 150, dyws.shape[1], dyws.shape[0]
+    eps = 0.02
+    devs = fr.prefix_devs_pallas(y, dyws, starts, ok, table, p0, ny, eps,
+                                 L=L, measure="mae", greedy=True,
+                                 interpret=True)
+    take = np.asarray(ok) & (np.asarray(devs) <= eps)
+
+    z = np.asarray(y).copy()
+    oracle_devs, oracle_take = [], []
+    for k in range(K):
+        s = int(starts[k])
+        trial = z.copy()
+        trial[s:s + Wy] += np.asarray(dyws[k]) * float(ok[k])
+        dev = float(measures.mae(acf(jnp.asarray(trial[:ny]), L), p0))
+        commit = bool(ok[k]) and dev <= eps
+        if commit:
+            z = trial
+        oracle_devs.append(dev)
+        oracle_take.append(commit)
+    np.testing.assert_allclose(np.asarray(devs), oracle_devs,
+                               rtol=1e-8, atol=1e-9)
+    # decisions are tolerance-robust here: no trial lands within 1e-6 of eps
+    assert min(abs(d - eps) for d in oracle_devs) > 1e-6
+    np.testing.assert_array_equal(take, np.asarray(oracle_take))
+
+
 def test_compress_batch_matches_per_series():
     """The batched front-end is bit-identical to per-series rounds runs."""
     n, B = 512, 3

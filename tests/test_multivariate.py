@@ -76,6 +76,55 @@ def test_per_column_eps_guarantee(stored_mv):
             rtol=1e-9, atol=1e-12)
 
 
+def test_per_column_eps_budgets():
+    """eps_c: every column's measured deviation respects ITS budget, and a
+    tight budget on one column doesn't loosen the others; the repair loop
+    enforces each budget independently on the shared index."""
+    X = _mv_series(2048, C=3, seed=7)
+    eps_c = [2e-2, 1e-3, 2e-2]
+    res = compress_multivariate(X, CFG, eps_c=eps_c)
+    for c, e in enumerate(eps_c):
+        s0 = acf(jnp.asarray(X[:, c]), CFG.lags)
+        s1 = acf(jnp.asarray(res.xr[:, c]), CFG.lags)
+        assert float(mae(s1, s0)) <= e + 1e-12, c
+        assert res.deviations[c] <= e + 1e-12, c
+    # a uniform-loose run keeps fewer points than the tight-middle run
+    loose = compress_multivariate(X, CFG)
+    assert res.n_kept >= loose.n_kept
+    assert res.deviation == res.deviations.max()
+
+
+def test_eps_c_validation():
+    X = _mv_series(512, C=2, seed=9)
+    with pytest.raises(ValueError, match="eps_c"):
+        compress_multivariate(X, CFG, eps_c=[1e-2])        # wrong length
+    with pytest.raises(ValueError, match="eps_c"):
+        compress_multivariate(X, CFG, eps_c=[1e-2, -1.0])  # non-positive
+
+
+def test_dataset_write_per_column_eps(tmp_path):
+    """Facade plumbing: Dataset.write(sid, X, eps=[...]) stores the same
+    bytes as compress_multivariate(eps_c) + append_series, every measured
+    deviation respects its budget, and a vector eps on univariate data is
+    rejected."""
+    from repro import api
+    X = _mv_series(1536, C=2, seed=11)
+    eps_c = [2e-2, 5e-3]
+    p1 = str(tmp_path / "facade.cameo")
+    with api.open(p1, CFG, mode="w", block_len=512) as d:
+        entry = d.write("m", X, eps=eps_c)
+        assert np.all(np.asarray(entry["deviations"])
+                      <= np.asarray(eps_c) + 1e-12)
+        with pytest.raises(ValueError, match="2-D"):
+            d.write("u", X[:, 0], eps=eps_c)
+    p2 = str(tmp_path / "direct.cameo")
+    res = compress_multivariate(X, CFG, eps_c=eps_c)
+    with CameoStore.create(p2, block_len=512) as w:
+        w.append_series("m", res, CFG, x=X)
+    with open(p1, "rb") as f1, open(p2, "rb") as f2:
+        assert f1.read() == f2.read()
+
+
 def test_roundtrip_bit_exact(stored_mv):
     store, X, res = stored_mv
     got = store.read_series("m")

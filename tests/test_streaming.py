@@ -43,10 +43,10 @@ def _series(n, seed=0, offset=0.0):
             + 0.2 * rng.standard_normal(n) + offset)
 
 
-def _stream(x, cfg, wlen, cuts):
+def _stream(x, cfg, wlen, cuts, queue_depth=1):
     """Feed ``x`` split at ``cuts`` through a StreamingCompressor; returns
     (kept, xr, deviation, windows)."""
-    sc = StreamingCompressor(cfg, wlen)
+    sc = StreamingCompressor(cfg, wlen, queue_depth=queue_depth)
     wins = []
     for chunk in np.split(x, sorted(cuts)):
         wins += sc.push(chunk)
@@ -206,10 +206,11 @@ def _write_oneshot(path, x, cfg, wlen, block_len):
     return ref
 
 
-def _write_streamed(path, x, cfg, wlen, block_len, cuts, reopen_at=()):
+def _write_streamed(path, x, cfg, wlen, block_len, cuts, reopen_at=(),
+                    queue_depth=1):
     """Stream ``x`` into ``path``; optionally close+reopen the store (with
     state stashed in the footer) after the chunks listed in ``reopen_at``."""
-    sc = StreamingCompressor(cfg, wlen)
+    sc = StreamingCompressor(cfg, wlen, queue_depth=queue_depth)
     store = CameoStore.create(path, block_len=block_len)
     sess = store.open_stream("s", cfg)
     sess.state_provider = sc.state_dict
@@ -262,6 +263,102 @@ def test_resume_after_close_bit_exact(tmp_path):
         _write_streamed(p, x, CFG, W, 200, cuts, reopen_at=reopen_at)
         with open(p, "rb") as f:
             assert f.read() == want, f"reopen_at={reopen_at}"
+
+
+@given(st.integers(0, 2**32 - 1),
+       st.lists(st.integers(0, 2048), max_size=5),
+       st.sampled_from([1, 2, 8]))
+@settings(max_examples=12, deadline=None)
+def test_queue_depth_masks_bit_exact(seed, cuts, K):
+    """The batched drain (``queue_depth=K`` windows per ``compress_batch``
+    program) is bit-identical to the synchronous per-window path for any
+    chunking — masks, reconstructions and the global deviation."""
+    x = _series(2048, seed=seed % 1000)
+    ref = compress_windowed(x, CFG, W)
+    kept, xr, dev, _ = _stream(x, CFG, W, [min(c, len(x)) for c in cuts],
+                               queue_depth=K)
+    assert np.array_equal(kept, np.asarray(ref.kept))
+    assert np.array_equal(xr.view(np.uint64),
+                          np.asarray(ref.xr).view(np.uint64))
+    assert dev == float(ref.deviation)
+
+
+@given(st.integers(0, 2**32 - 1),
+       st.lists(st.integers(0, 2048), max_size=4),
+       st.sampled_from([2, 8]),
+       st.sampled_from([(), (0,), (1, 2)]))
+@settings(max_examples=8, deadline=None)
+def test_queue_depth_store_bytes_and_resume(seed, cuts, K, reopen_at):
+    """Store bytes under a batched queue — including stop/resume with
+    up-to-K pending windows serialized in the stash — equal the one-shot
+    write for any chunking and any interruption point."""
+    import tempfile
+    x = _series(2048, seed=seed % 1000, offset=1.0)
+    cuts = [min(c, len(x)) for c in cuts]
+    reopen_at = tuple(r for r in reopen_at if r <= len(cuts))
+    with tempfile.TemporaryDirectory() as tmp:
+        p1, p2 = os.path.join(tmp, "a.cameo"), os.path.join(tmp, "b.cameo")
+        _write_oneshot(p1, x, CFG, W, 256)
+        _write_streamed(p2, x, CFG, W, 256, cuts, reopen_at=reopen_at,
+                        queue_depth=K)
+        with open(p1, "rb") as f1, open(p2, "rb") as f2:
+            assert f1.read() == f2.read()
+
+
+def test_queue_depth_store_bytes_deterministic(tmp_path):
+    """Non-hypothesis anchor for the batched-queue byte contract: K ∈
+    {2, 8} × a fixed adversarial chunking × resume points, bytes equal to
+    the one-shot write (runs even without hypothesis installed)."""
+    x = _series(2048, seed=89, offset=1.0)
+    p_ref = str(tmp_path / "ref.cameo")
+    _write_oneshot(p_ref, x, CFG, W, 256)
+    with open(p_ref, "rb") as f:
+        want = f.read()
+    cuts = [1, 97, 513, 1025, 2000]
+    for K in (2, 8):
+        for reopen_at in ((), (0,), (2, 3)):
+            p = str(tmp_path / f"k{K}_{len(reopen_at)}.cameo")
+            _write_streamed(p, x, CFG, W, 256, cuts, reopen_at=reopen_at,
+                            queue_depth=K)
+            with open(p, "rb") as f:
+                assert f.read() == want, (K, reopen_at)
+
+
+def test_queue_depth_state_roundtrip_preserves_queue():
+    """state_dict/from_state with a part-filled queue: the restored
+    compressor finishes the feed bit-identically to an uninterrupted one."""
+    x = _series(2400, seed=97)
+    ref = compress_windowed(x, CFG, W)
+    for stop in (300, 700, 1100):       # queue holds 1..K-1 closed windows
+        sc = StreamingCompressor(CFG, W, queue_depth=8)
+        wins = sc.push(x[:stop])
+        sc2 = StreamingCompressor.from_state(CFG, sc.state_dict())
+        assert sc2.queue_depth == 8
+        wins += sc2.push(x[stop:]) + sc2.finish()
+        kept = np.concatenate([w.kept for w in wins])
+        xr = np.concatenate([w.xr for w in wins])
+        assert np.array_equal(kept, np.asarray(ref.kept))
+        assert np.array_equal(xr.view(np.uint64),
+                              np.asarray(ref.xr).view(np.uint64))
+        assert sc2.deviation() == float(ref.deviation)
+
+
+def test_service_queue_depth_bytes_equal(tmp_path):
+    """ingest_stream(queue_depth=K) through the full service stack writes
+    the same file as the synchronous service path."""
+    x = _series(2048, seed=101)
+    scfg = TsServiceConfig(block_len=256, stream_window=W)
+    paths = []
+    for K in (1, 4):
+        p = str(tmp_path / f"k{K}.cameo")
+        with TimeSeriesService(p, CFG, scfg) as svc:
+            h = svc.ingest_stream("s", queue_depth=K)
+            for lo in range(0, len(x), 333):
+                h.push(x[lo:lo + 333])
+            h.close()
+        paths.append(p)
+    with open(paths[0], "rb") as f1, open(paths[1], "rb") as f2:
+        assert f1.read() == f2.read()
 
 
 def test_midstream_flush_serves_readable_prefix(tmp_path):
