@@ -601,15 +601,18 @@ def bench_stream(full=False):
     throughput and per-push latency vs the one-shot windowed path, the
     byte-identity verification, and the O(window) peak-memory row (python
     heap traced over the streamed ingest — the raw-series-to-peak ratio is
-    what the acceptance criterion gates).  Feeds the repo-root
+    what the acceptance criterion gates).  A final telemetry pass repeats
+    the ingest with the ``repro.obs`` registry enabled and emits a
+    ``stream_obs`` row straight from the registry snapshot (production
+    metric names, not bench-local stopwatches).  Feeds the repo-root
     ``BENCH_store.json`` ledger (``stream_*`` keys) that
     ``benchmarks/perf_smoke.py`` gates CI against."""
     import os
     import tempfile
     import tracemalloc
 
-    from repro.core.streaming import (_compress_windowed, compile_cache_size,
-                                      min_window_len)
+    from repro import obs
+    from repro.core.streaming import _compress_windowed, min_window_len
     from repro.serving.ts_service import TimeSeriesService, TsServiceConfig
     from repro.store.store import CameoStore
 
@@ -694,7 +697,7 @@ def bench_stream(full=False):
                 return wall, push_t, peak
 
             p_str = os.path.join(tmp, "str.cameo")
-            cache_before = compile_cache_size()
+            cache_before = obs.recompile_watermark()
             stream_s, push_times, _ = run_stream(p_str)
             for rep in (2, 3):
                 wall_r, push_r, _ = run_stream(
@@ -706,7 +709,21 @@ def bench_stream(full=False):
             # the padded tail must reuse the full-window program (pad-to-
             # bucket), so a properly warmed stream never traces anything —
             # across all three passes
-            recompiles = compile_cache_size() - cache_before
+            recompiles = obs.recompile_watermark() - cache_before
+
+            # telemetry pass: the same ingest once more with the obs
+            # registry enabled, so the ledger row carries the production
+            # metric names the registry exports (push-latency quantiles,
+            # window/queue counters, recompile watermark) instead of
+            # bench-local stopwatch numbers
+            was_obs = obs.enabled()
+            obs.enable()
+            obs.reset()
+            try:
+                run_stream(os.path.join(tmp, "str_obs.cameo"))
+                osnap = obs.snapshot()
+            finally:
+                obs.enable() if was_obs else obs.disable()
 
             with open(p_ref, "rb") as f1, open(p_str, "rb") as f2:
                 bytes_equal = f1.read() == f2.read()
@@ -728,12 +745,30 @@ def bench_stream(full=False):
         emit(f"stream.memory.{ds}", 0.0,
              f"steady_peak={peak_delta},streamed_nbytes={8 * streamed_pts},"
              f"mem_ratio={mem_ratio:.1f}x,O(window)_ok={ok_mem}")
+        oh = osnap["histograms"].get("stream.push_seconds", {})
+        oc = osnap["counters"]
+        emit(f"stream.obs.{ds}", 0.0,
+             f"push_p50={oh.get('p50', 0.0) * 1e3:.2f}ms,"
+             f"push_p95={oh.get('p95', 0.0) * 1e3:.2f}ms,"
+             f"windows={oc.get('stream.windows', 0)},"
+             f"pad_hits={oc.get('stream.pad_to_bucket_hits', 0)},"
+             f"drains={oc.get('stream.queue_drains', 0)},"
+             f"watermark={osnap['recompiles']['total']}")
         # compile cost rides in its own row so the ledger keeps it visible
         # without polluting the throughput summary statistics
         rows.append(dict(
             section="stream_compile", dataset=ds, window=wlen,
             warmup_secs=warmup_s, compile_secs=compile_s,
             recompiles=recompiles))
+        rows.append(dict(
+            section="stream_obs", dataset=ds,
+            push_p50_s=oh.get("p50"), push_p95_s=oh.get("p95"),
+            push_calls=oc.get("stream.push_calls", 0),
+            windows=oc.get("stream.windows", 0),
+            windows_verbatim=oc.get("stream.windows_verbatim", 0),
+            pad_to_bucket_hits=oc.get("stream.pad_to_bucket_hits", 0),
+            queue_drains=oc.get("stream.queue_drains", 0),
+            recompile_watermark=osnap["recompiles"]["total"]))
         rows.append(dict(
             section="stream", dataset=ds, n=n, window=wlen, chunk=chunk,
             eps=eps, bytes_equal=bytes_equal, oneshot_secs=oneshot_s,

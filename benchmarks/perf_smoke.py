@@ -15,7 +15,11 @@ Runs a small synthetic fixture (seconds, not minutes) and compares
   buffering the whole series), and
 * the multivariate rows: the shared-index byte gain of one v4 store vs C
   standalone per-column stores, and the warm all-columns pushdown vs a
-  decode-and-scan.
+  decode-and-scan, and
+* ``obs_overhead``: streamed compressor ingest with the ``repro.obs``
+  telemetry registry enabled vs disabled — gated as an **absolute** floor
+  (``CAMEO_OBS_OVERHEAD_FLOOR``, default 0.97: enabled must stay within
+  3% of disabled), since the telemetry contract is machine-independent.
 
 Metrics present in only one of {baseline, current} are *skipped with a
 note*, not failed — new rows land in the same PR as their code and are
@@ -86,6 +90,11 @@ PER_METRIC_TOLERANCE = {"pushdown_warm_speedup": 0.30,
                         # events (a cold-dispatch or recompile-per-window
                         # regression costs 3-20x, well below 0.30)
                         "stream_pts_per_s": 0.30}
+# obs_overhead is the telemetry-enabled/disabled ingest time ratio; it is
+# gated as an *absolute* floor (enabled ingest must stay within ~3% of
+# disabled), not relative to the committed baseline — the contract is
+# "telemetry is nearly free", not "as cheap as last time".
+OBS_OVERHEAD_FLOOR = float(os.environ.get("CAMEO_OBS_OVERHEAD_FLOOR", "0.97"))
 _N = 16384
 _STREAM_N = 262144
 
@@ -198,8 +207,9 @@ def _measure_stream_compress() -> dict:
     jit cache."""
     import tempfile
 
+    from repro import obs
     from repro.core.cameo import CameoConfig
-    from repro.core.streaming import StreamingCompressor, compile_cache_size
+    from repro.core.streaming import StreamingCompressor
     from repro.data.synthetic import make_dataset
     from repro.store.store import CameoStore
 
@@ -220,19 +230,33 @@ def _measure_stream_compress() -> dict:
                 sess.append_window(w)
             sess.close(deviation=sc.deviation())
 
-    with tempfile.TemporaryDirectory() as tmp:
-        ingest(os.path.join(tmp, "warm.cameo"))        # compile both buckets
-        cache_n = compile_cache_size()
-        best = min(_best_of(ingest, os.path.join(tmp, f"t{i}.cameo"),
-                            reps=1) for i in range(3))
-        recompiles = compile_cache_size() - cache_n
+    was_enabled = obs.enabled()
+    obs.disable()
+    try:
+        with tempfile.TemporaryDirectory() as tmp:
+            ingest(os.path.join(tmp, "warm.cameo"))    # compile both buckets
+            cache_n = obs.recompile_watermark()
+            best = min(_best_of(ingest, os.path.join(tmp, f"t{i}.cameo"),
+                                reps=1) for i in range(3))
+            recompiles = obs.recompile_watermark() - cache_n
+            # telemetry-enabled pass over the identical workload: the
+            # one-attribute-lookup guards plus per-push/per-window
+            # observations must cost a few percent at most
+            obs.enable()
+            obs.reset()
+            best_on = min(_best_of(ingest, os.path.join(tmp, f"o{i}.cameo"),
+                                   reps=1) for i in range(3))
+    finally:
+        obs.enable() if was_enabled else obs.disable()
     assert not recompiles, \
         f"streamed ingest retraced {recompiles} program(s) after warmup — " \
         "the padded tail must reuse the full-window bucket"
     pts = n / max(best, 1e-12)
+    overhead = best / max(best_on, 1e-12)
     print(f"stream compress: {best * 1e3:.0f}ms for {n} pts -> "
-          f"{pts:.0f} pts/s (recompiles=0)")
-    return {"stream_pts_per_s": pts}
+          f"{pts:.0f} pts/s (recompiles=0); obs-enabled "
+          f"{best_on * 1e3:.0f}ms -> overhead ratio {overhead:.3f}")
+    return {"stream_pts_per_s": pts, "obs_overhead": overhead}
 
 
 def _measure_mvar(cfg) -> dict:
@@ -388,6 +412,7 @@ def _gate(metrics: dict) -> int:
               "--write-baseline and commit it", file=sys.stderr)
         return 1
     base_native = baseline.pop("native_scan", None)
+    baseline.pop("obs_overhead", None)   # gated absolutely below
     if base_native and not _scan.NATIVE:
         print("perf-smoke FAILED: the committed baseline was pinned with "
               "the native C scanner, but this environment has none (no "
@@ -412,7 +437,7 @@ def _gate(metrics: dict) -> int:
               f"(floor {floor:.1f}x) {status}")
         if cur < floor:
             failures.append(key)
-    for key in sorted(set(metrics) - set(baseline)):
+    for key in sorted(set(metrics) - set(baseline) - {"obs_overhead"}):
         # a freshly added row whose baseline section hasn't been pinned
         # yet: new rows must be able to land in the same PR as their code,
         # so this is a skip, not a failure
@@ -435,6 +460,15 @@ def _gate(metrics: dict) -> int:
         print("stream_pts_per_s: no warm stream_baseline in the ledger — "
               "SKIPPED (run `python -m benchmarks.run --only stream` and "
               "commit BENCH_store.json)")
+    # telemetry overhead is an absolute contract, not a baseline ratio:
+    # ingest with CAMEO_OBS on must stay within (1 - floor) of disabled
+    cur = metrics.get("obs_overhead")
+    if cur is not None:
+        status = "ok" if cur >= OBS_OVERHEAD_FLOOR else "REGRESSED"
+        print(f"obs_overhead: disabled/enabled ingest ratio {cur:.3f} "
+              f"(floor {OBS_OVERHEAD_FLOOR:.2f}) {status}")
+        if cur < OBS_OVERHEAD_FLOOR:
+            failures.append("obs_overhead")
     if failures:
         print(f"perf-smoke FAILED: {failures} regressed more than "
               f"{(1 - TOLERANCE) * 100:.0f}% vs the committed "

@@ -176,6 +176,15 @@ def main():
     # recompiles — `python -m benchmarks.run --only stream` reports the
     # steady-state pts/s and the compile cost as separate rows.
     from repro.core.streaming import min_window_len
+
+    # turn the telemetry registry on for the demo: every layer below
+    # (streaming windows, store cache, pushdown queries) reports into
+    # repro.obs, and the snapshot at the end is the observability story —
+    # in production set CAMEO_OBS=1 instead (disabled it costs one
+    # attribute lookup per call site)
+    from repro import obs
+    obs.enable()
+    obs.reset()
     spath = os.path.join(tempfile.gettempdir(), f"{args.dataset}_stream.cameo")
     wlen = max(min(2048, n // 4) // cfg.kappa * cfg.kappa,
                min_window_len(cfg))
@@ -210,8 +219,30 @@ def main():
     print(f"  streamed store serves [{a}, {b}) "
           f"{'bit-exactly' if np.array_equal(got, full_s[a:b]) else 'WRONG'}"
           f"; blocks={len(s.meta['blocks'])}")
+    print("  unified stats snapshot:", ds.stats())
     ds.close()
     os.remove(spath)
+
+    # ---- the telemetry registry: what the whole session looked like ------
+    # obs.snapshot() is the machine-readable export; obs.exposition() is
+    # the Prometheus-style text form of the same registry.
+    snap = obs.snapshot()
+    c, h = snap["counters"], snap["histograms"]
+    push = h.get("stream.push_seconds", {})
+    print("observability (repro.obs):")
+    print(f"  ingest: {c.get('stream.push_calls', 0)} pushes "
+          f"(p50 {push.get('p50', 0.0) * 1e3:.2f}ms / "
+          f"p95 {push.get('p95', 0.0) * 1e3:.2f}ms), "
+          f"{c.get('stream.windows', 0)} windows closed, "
+          f"{c.get('stream.queue_drains', 0)} drains, "
+          f"pad-to-bucket hits {c.get('stream.pad_to_bucket_hits', 0)}")
+    print(f"  queries: {c.get('query.count', 0)} pushdowns, "
+          f"cache {c.get('store.cache.hits', 0)} hits / "
+          f"{c.get('store.cache.misses', 0)} misses")
+    print(f"  recompile watermark across every jitted entry point: "
+          f"{snap['recompiles']['total']} "
+          f"({snap['recompiles']['entries']})")
+    obs.disable()
 
 
 if __name__ == "__main__":

@@ -36,7 +36,9 @@ deprecated shims over the same internals.
 from __future__ import annotations
 
 import dataclasses
+import math
 import os
+from time import perf_counter as _perf_counter
 from typing import Dict, List, Optional
 
 import numpy as np
@@ -52,6 +54,7 @@ from repro.core.streaming import (
     StreamingCompressor,
     compressor_from_state,
 )
+from repro.obs import OBS
 from repro.store import query as _query
 from repro.store.store import DEFAULT_CACHE_BYTES, CameoStore
 
@@ -297,8 +300,15 @@ class StreamWriter:
         """Feed a chunk (``[m]``, or ``[m, C]`` for multivariate streams);
         compresses and stores every window it closes (one burst append per
         batched drain).  Returns the number of windows closed."""
+        if not OBS.enabled:
+            wins = self._comp.push(chunk)
+            self._sess.append_windows(wins)
+            return len(wins)
+        t0 = _perf_counter()
         wins = self._comp.push(chunk)
         self._sess.append_windows(wins)
+        OBS.observe("ingest.push_seconds", _perf_counter() - t0)
+        OBS.inc("ingest.points", int(np.shape(np.asarray(chunk))[0]))
         return len(wins)
 
     def flush(self) -> None:
@@ -401,15 +411,25 @@ class Dataset:
             else:
                 raise ValueError(
                     "per-column eps budgets need a 2-D [n, C] series")
+        if x.ndim not in (1, 2):
+            raise ValueError(f"series must be [n] or [n, C], got {x.shape}")
+        t0 = _perf_counter() if OBS.enabled else 0.0
         if x.ndim == 1:
             res = compress(x, cfg)
-            return self._store.append_series(
-                sid, res, cfg, x=x if self.store_residuals else None)
-        if x.ndim == 2:
+        else:
             res = compress_multivariate(x, cfg, eps_c=eps_c)
-            return self._store.append_series(
-                sid, res, cfg, x=x if self.store_residuals else None)
-        raise ValueError(f"series must be [n] or [n, C], got {x.shape}")
+        entry = self._store.append_series(
+            sid, res, cfg, x=x if self.store_residuals else None)
+        if OBS.enabled:
+            OBS.observe("write.seconds", _perf_counter() - t0)
+            OBS.inc("write.series")
+            devs = np.atleast_1d(entry.get("deviations", entry["deviation"]))
+            budget = (eps_c if eps_c is not None
+                      else np.full(devs.shape, cfg.eps, np.float64))
+            for d, e in zip(devs, budget):
+                if e and math.isfinite(e):
+                    OBS.observe("write.eps_headroom", float(d) / float(e))
+        return entry
 
     def write_batch(self, items: Dict[str, np.ndarray]) -> Dict[str, dict]:
         """Compress and persist a fleet of 1-D series, batching
@@ -481,16 +501,24 @@ class Dataset:
     def cache_stats(self) -> dict:
         return self._store.cache_stats()
 
-    def stats(self) -> dict:
-        """Whole-dataset accounting: point/byte CRs and cache counters."""
-        per = [self._store.compression_stats(s)
-               for s in self._store.series_ids()]
-        stored = sum(p["stored_nbytes"] for p in per)
-        raw = sum(p["raw_nbytes"] for p in per)
-        kept = sum(p["n_kept"] * p["channels"] for p in per)
-        pts = sum(p["n"] * p["channels"] for p in per)
-        return dict(
-            series=len(per), points=pts, stored_nbytes=stored,
-            raw_nbytes=raw, point_cr=pts / max(kept, 1),
-            bytes_cr=raw / max(stored, 1),
+    def stats(self, *, deep: bool = False) -> dict:
+        """Whole-dataset accounting in the unified stats schema (see
+        :mod:`repro.obs`): ``series``, ``points``, ``n_kept``,
+        ``stored_nbytes``, ``raw_nbytes``, ``point_cr``, ``bytes_cr``,
+        ``cache`` — the same keys ``TimeSeriesService.stats()`` returns
+        for these concepts.  Answered from the store's O(1) running
+        ingest totals, so polling cost is independent of how many series
+        or blocks are stored.  ``deep=True`` walks ``compression_stats``
+        for every series (O(total series)) and adds the per-series dicts
+        under ``per_series``."""
+        t = self._store.ingest_totals()
+        out = dict(
+            series=t["series"], points=t["points"], n_kept=t["n_kept"],
+            stored_nbytes=t["stored_nbytes"], raw_nbytes=t["raw_nbytes"],
+            point_cr=t["points"] / max(t["n_kept"], 1),
+            bytes_cr=t["raw_nbytes"] / max(t["stored_nbytes"], 1),
             cache=self._store.cache_stats())
+        if deep:
+            out["per_series"] = {s: self._store.compression_stats(s)
+                                 for s in self._store.series_ids()}
+        return out

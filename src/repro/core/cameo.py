@@ -61,6 +61,7 @@ from repro.core.aggregates import (
 from repro.kernels import fused_round as _fused
 from repro.kernels import ops as _ops
 from repro.kernels import ref as _ref
+from repro.obs import OBS
 
 
 @dataclasses.dataclass(frozen=True)
@@ -629,6 +630,11 @@ def compress_rounds(x: jax.Array, cfg: CameoConfig, *,
     return res._replace(kept=res.kept[:n], xr=res.xr[:n])
 
 
+# the rounds program is the streaming hot path: its compiled-variant count
+# is the original no-recompile watermark (see repro.obs.recompile_watermark)
+OBS.register_jit("cameo.rounds", _rounds_padded)
+
+
 # ---------------------------------------------------------------------------
 # sequential mode (paper-faithful Algorithm 1)
 # ---------------------------------------------------------------------------
@@ -786,6 +792,9 @@ def compress_sequential(x: jax.Array, cfg: CameoConfig) -> CompressResult:
         iters=it, stat_orig=p0, stat_new=stat_new)
 
 
+OBS.register_jit("cameo.sequential", compress_sequential)
+
+
 # ---------------------------------------------------------------------------
 # public API
 # ---------------------------------------------------------------------------
@@ -901,6 +910,7 @@ def _union_reconstruct(x_col: np.ndarray, union: np.ndarray) -> np.ndarray:
     global _mv_recon_jit
     if _mv_recon_jit is None:
         _mv_recon_jit = jax.jit(_reconstruct)
+        OBS.register_jit("cameo.mvar_reconstruct", _mv_recon_jit)
     return np.asarray(_mv_recon_jit(jnp.asarray(x_col), jnp.asarray(union)))
 
 
@@ -983,14 +993,22 @@ def compress_multivariate(X, cfg: CameoConfig, *,
         if not bad:
             break
         if retries >= max_retries:
+            if OBS.enabled:
+                OBS.inc("mvar.keep_all_columns", len(bad))
             for c in bad:     # last resort: the column keeps everything
                 masks[c] = np.ones(n, bool)
             continue          # keep-all columns measure deviation 0 next pass
         retries += 1
+        if OBS.enabled:
+            OBS.inc("mvar.repair_halvings", len(bad))
         eps_work[bad] = eps_work[bad] / 2.0
         new_masks, it = _column_masks(X, cfg, eps_work, bad, pad_to)
         masks.update(new_masks)
         iters += it
+    if OBS.enabled:
+        for c in range(C):
+            if np.isfinite(budget[c]) and budget[c] > 0:
+                OBS.observe("mvar.eps_headroom", float(devs[c]) / budget[c])
     # per-column counts of the masks that actually went into the union
     # (recompressed/keep-all columns included, not their discarded firsts)
     col_n_kept = np.array([int(masks[c].sum()) for c in range(C)])

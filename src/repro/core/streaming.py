@@ -48,7 +48,9 @@ it had never stopped.
 """
 from __future__ import annotations
 
+import math
 import warnings
+from time import perf_counter as _perf_counter
 from typing import List, NamedTuple, Optional
 
 import jax.numpy as jnp
@@ -67,18 +69,42 @@ from repro.core.cameo import (
     compress_rounds,
 )
 from repro.kernels import ops as _ops
+from repro.obs import OBS
 
 
 def compile_cache_size() -> int:
-    """Distinct compiled specializations of the rounds-mode program.
+    """Deprecated shim over :func:`repro.obs.recompile_watermark`.
 
     The streaming discipline promises *no per-length recompiles*: full
     windows share one program and a partial tail rides the same bucket via
-    ``compress_rounds(..., pad_to=window_len)``.  The perf gate snapshots
-    this counter around a timed ingest run and asserts it stays flat.
+    ``compress_rounds(..., pad_to=window_len)``.  The watermark now covers
+    **every** registered jitted entry point (rounds/batch, sequential,
+    multivariate reconstruct, block reconstruct), not just the rounds
+    kernel; the perf gates snapshot it around a timed ingest run and
+    assert it stays flat.
     """
-    from repro.core.cameo import _rounds_padded
-    return _rounds_padded._cache_size()
+    warnings.warn(
+        "compile_cache_size() is deprecated; use "
+        "repro.obs.recompile_watermark() (covers all jitted entry points)",
+        DeprecationWarning, stacklevel=2)
+    return OBS.recompile_watermark()
+
+
+def _observe_window(window_len, m, ndiv, cfg, n_kept, iters, verbatim, dev):
+    """Record one closed window into the registry.  Callers hold the
+    ``OBS.enabled`` guard; ``dev`` is the measured deviation (scalar,
+    per-column array, or None when the window closed without one)."""
+    OBS.inc("stream.windows")
+    OBS.observe("stream.window_rounds", iters)
+    OBS.observe("stream.window_kept_frac", n_kept / m if m else 0.0)
+    if verbatim:
+        OBS.inc("stream.windows_verbatim")
+    elif cfg.mode == "rounds" and ndiv < window_len:
+        OBS.inc("stream.pad_to_bucket_hits")
+    eps = cfg.eps
+    if dev is not None and eps and math.isfinite(eps):
+        for d in np.atleast_1d(dev):
+            OBS.observe("stream.window_eps_headroom", float(d) / eps)
 
 
 class WindowResult(NamedTuple):
@@ -278,6 +304,16 @@ class StreamingCompressor:
 
     def push(self, chunk) -> List[WindowResult]:
         """Absorb an arbitrary-size chunk; returns the windows it closed."""
+        if not OBS.enabled:
+            return self._push(chunk)
+        t0 = _perf_counter()
+        out = self._push(chunk)
+        OBS.observe("stream.push_seconds", _perf_counter() - t0)
+        OBS.inc("stream.push_calls")
+        OBS.gauge("stream.queue_depth", len(self._queue))
+        return out
+
+    def _push(self, chunk) -> List[WindowResult]:
         if self._finished:
             raise ValueError("stream already finished")
         chunk = np.asarray(chunk, self._buf.dtype)
@@ -319,14 +355,20 @@ class StreamingCompressor:
         q, self._queue = self._queue, []
         if not q:
             return []
+        if OBS.enabled:
+            OBS.inc("stream.queue_drains")
+            OBS.observe("stream.drain_windows", len(q))
         if len(q) == 1 or self.cfg.mode != "rounds":
             return [self._close(w, final=False, start=s) for s, w in q]
         xs = np.stack([w for _, w in q])
         res = compress_batch(xs, self.cfg)   # one dispatch for all K windows
+        devs = np.asarray(res.deviation) if OBS.enabled else None
         return [self._close(w, final=False, start=s,
                             precomputed=(np.asarray(res.kept[i]),
                                          np.asarray(res.xr[i]),
-                                         int(res.iters[i])))
+                                         int(res.iters[i]),
+                                         None if devs is None
+                                         else float(devs[i])))
                 for i, (s, w) in enumerate(q)]
 
     def _close(self, w_x: np.ndarray, final: bool, start: int = None,
@@ -336,8 +378,10 @@ class StreamingCompressor:
             start = self._next_start
         m = w_x.shape[0]
         ndiv = (m // cfg.kappa) * cfg.kappa
+        dev = None
+        verbatim = False
         if precomputed is not None:     # full window closed by a batch drain
-            kept, xr, iters = precomputed
+            kept, xr, iters, dev = precomputed
         elif ndiv // cfg.kappa >= cfg.lags + 2:
             if cfg.mode == "rounds":
                 # pad to the full-window bucket: a partial tail reuses the
@@ -349,6 +393,8 @@ class StreamingCompressor:
             kept = np.asarray(res.kept)
             xr = np.asarray(res.xr)
             iters = int(res.iters)
+            if OBS.enabled:
+                dev = float(res.deviation)
             if ndiv < m:    # kappa-remainder of the final window: verbatim
                 kept = np.concatenate([kept, np.ones(m - ndiv, bool)])
                 xr = np.concatenate([xr, w_x[ndiv:]])
@@ -356,6 +402,7 @@ class StreamingCompressor:
             kept = np.ones(m, bool)
             xr = np.asarray(w_x).copy()
             iters = 0
+            verbatim = True
         # global accounting over the kappa-divisible prefix of the stream
         if ndiv:
             self._orig.append(aggregate_series(
@@ -368,6 +415,9 @@ class StreamingCompressor:
         self.windows += 1
         self.n_kept += w.n_kept
         self.iters += iters
+        if OBS.enabled:
+            _observe_window(self.window_len, m, ndiv, cfg, w.n_kept,
+                            iters, verbatim, dev)
         return w
 
     # -- exact global accounting --------------------------------------------
@@ -502,6 +552,16 @@ class MVStreamingCompressor:
     def push(self, chunk) -> List[MVWindowResult]:
         """Absorb an arbitrary-size ``[m, C]`` chunk; returns the windows
         it closed."""
+        if not OBS.enabled:
+            return self._push(chunk)
+        t0 = _perf_counter()
+        out = self._push(chunk)
+        OBS.observe("stream.push_seconds", _perf_counter() - t0)
+        OBS.inc("stream.push_calls")
+        OBS.gauge("stream.queue_depth", len(self._queue))
+        return out
+
+    def _push(self, chunk) -> List[MVWindowResult]:
         if self._finished:
             raise ValueError("stream already finished")
         chunk = np.asarray(chunk, self._buf.dtype)
@@ -542,6 +602,9 @@ class MVStreamingCompressor:
         per-window); the queue still defers work so callers control when the
         device burst happens."""
         q, self._queue = self._queue, []
+        if q and OBS.enabled:
+            OBS.inc("stream.queue_drains")
+            OBS.observe("stream.drain_windows", len(q))
         return [self._close(w, final=False, start=s) for s, w in q]
 
     def _close(self, w_x: np.ndarray, final: bool,
@@ -551,6 +614,8 @@ class MVStreamingCompressor:
             start = self._next_start
         m = w_x.shape[0]
         ndiv = (m // cfg.kappa) * cfg.kappa
+        dev = None
+        verbatim = False
         if ndiv // cfg.kappa >= cfg.lags + 2:
             res = compress_multivariate(
                 w_x[:ndiv], cfg,
@@ -558,6 +623,8 @@ class MVStreamingCompressor:
             kept = np.asarray(res.kept)
             xr = np.asarray(res.xr)
             iters = int(res.iters)
+            if OBS.enabled:
+                dev = np.asarray(res.deviations)
             if ndiv < m:    # kappa-remainder of the final window: verbatim
                 kept = np.concatenate([kept, np.ones(m - ndiv, bool)])
                 xr = np.concatenate([xr, w_x[ndiv:]])
@@ -565,6 +632,7 @@ class MVStreamingCompressor:
             kept = np.ones(m, bool)
             xr = np.asarray(w_x).copy()
             iters = 0
+            verbatim = True
         if ndiv:
             for c in range(self.channels):
                 self._orig[c].append(aggregate_series(
@@ -577,6 +645,9 @@ class MVStreamingCompressor:
         self.windows += 1
         self.n_kept += w.n_kept
         self.iters += iters
+        if OBS.enabled:
+            _observe_window(self.window_len, m, ndiv, cfg, w.n_kept,
+                            iters, verbatim, dev)
         return w
 
     # -- exact global accounting --------------------------------------------

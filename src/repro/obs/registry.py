@@ -1,0 +1,291 @@
+"""Process-wide metrics registry: counters, gauges, streaming histograms.
+
+Zero-dependency by design (stdlib only — no numpy/jax import at module
+level) so that ``repro.obs`` can be threaded through every layer of the
+stack without changing import graphs or adding overhead to processes
+that never enable it.
+
+Hot-path contract
+-----------------
+Instrumented call sites guard every observation with::
+
+    if OBS.enabled:
+        OBS.inc("stream.windows")
+
+so the disabled path costs exactly one attribute lookup (verified by a
+microbench in ``tests/test_obs.py``).  The registry itself never
+allocates per-observation when disabled because the guard lives at the
+call site, not inside the registry.
+
+Histograms
+----------
+``StreamingHistogram`` is a bounded-memory log-bucketed sketch: buckets
+are spaced ``2**(1/16)`` apart (16 sub-buckets per octave), giving a
+worst-case relative quantile error of ~4.4% over the clamped range
+``[2**-40, 2**40]`` (~9e-13 .. ~1.1e12) with at most 1280 occupied
+buckets.  ``count``/``sum``/``min``/``max`` are exact.
+
+Recompile watermark
+-------------------
+``register_jit(name, fn)`` records a jitted entry point; the registry's
+``recompile_watermark()`` sums ``fn._cache_size()`` over every
+registered entry.  A before/after delta of the watermark around a
+region counts XLA compilations triggered inside it — the generalization
+of the old ``core.streaming.compile_cache_size`` (which watched only
+the rounds kernel).  Registration and watermarking work regardless of
+the enabled flag: they are introspection, not instrumentation.
+"""
+from __future__ import annotations
+
+import math
+import os
+import threading
+
+# Sub-buckets per octave (power of two).  16 -> ~4.4% relative error.
+_SUB = 16
+_LOG2_SUB = _SUB / math.log(2.0)  # multiply ln(v) by this to get bucket idx
+_IDX_MIN = -40 * _SUB
+_IDX_MAX = 40 * _SUB
+_QUANTILES = (0.5, 0.95, 0.99)
+
+
+def _fmt(v):
+    """Deterministic number formatting for the exposition surface."""
+    if isinstance(v, bool):
+        return "1" if v else "0"
+    if isinstance(v, int):
+        return str(v)
+    if v != v:  # NaN
+        return "NaN"
+    return format(v, ".10g")
+
+
+def sanitize_metric_name(name):
+    """Dotted metric name -> Prometheus-legal name (``a.b-c`` -> ``a_b_c``)."""
+    out = []
+    for ch in name:
+        out.append(ch if (ch.isalnum() and ch.isascii()) or ch == "_" else "_")
+    s = "".join(out)
+    if s and s[0].isdigit():
+        s = "_" + s
+    return s
+
+
+class StreamingHistogram:
+    """Bounded-memory streaming histogram with interpolated quantiles.
+
+    Designed for non-negative measurements (latencies, byte counts,
+    rounds).  Non-positive observations are counted and contribute to
+    ``count``/``sum``/``min``/``max`` exactly; quantiles that land in the
+    non-positive mass resolve to the tracked minimum.
+    """
+
+    __slots__ = ("count", "sum", "min", "max", "_nonpos", "_buckets")
+
+    def __init__(self):
+        self.count = 0
+        self.sum = 0.0
+        self.min = math.inf
+        self.max = -math.inf
+        self._nonpos = 0
+        self._buckets = {}
+
+    def observe(self, value):
+        v = float(value)
+        if v != v:  # drop NaN: it would poison sum/min/max
+            return
+        self.count += 1
+        self.sum += v
+        if v < self.min:
+            self.min = v
+        if v > self.max:
+            self.max = v
+        if v <= 0.0:
+            self._nonpos += 1
+            return
+        i = int(math.floor(math.log(v) * _LOG2_SUB))
+        if i < _IDX_MIN:
+            i = _IDX_MIN
+        elif i > _IDX_MAX:
+            i = _IDX_MAX
+        b = self._buckets
+        b[i] = b.get(i, 0) + 1
+
+    def quantile(self, q):
+        """Interpolated quantile; exact to within one bucket (~4.4% rel)."""
+        if self.count == 0:
+            return math.nan
+        target = q * self.count
+        if target < 1.0:
+            target = 1.0
+        cum = self._nonpos
+        if target <= cum:
+            return self.min
+        for i in sorted(self._buckets):
+            c = self._buckets[i]
+            if cum + c >= target:
+                lo = 2.0 ** (i / _SUB)
+                hi = 2.0 ** ((i + 1) / _SUB)
+                frac = (target - cum) / c
+                v = lo * (hi / lo) ** frac
+                return min(max(v, self.min), self.max)
+            cum += c
+        return self.max
+
+    def snapshot(self):
+        if self.count == 0:
+            return {"count": 0, "sum": 0.0, "min": math.nan, "max": math.nan,
+                    "p50": math.nan, "p95": math.nan, "p99": math.nan}
+        return {
+            "count": self.count,
+            "sum": self.sum,
+            "min": self.min,
+            "max": self.max,
+            "p50": self.quantile(0.5),
+            "p95": self.quantile(0.95),
+            "p99": self.quantile(0.99),
+        }
+
+
+def _env_enabled():
+    return os.environ.get("CAMEO_OBS", "0").strip().lower() not in (
+        "", "0", "false", "off", "no")
+
+
+class MetricsRegistry:
+    """Counters, gauges, histograms, span stats, and the jit watermark.
+
+    One process-wide instance (``repro.obs.OBS``) is created at import;
+    independent instances can be built for tests.  Mutating calls are
+    cheap dict operations (no locking on the hot path — CPython's GIL
+    makes the worst race a lost increment, acceptable for telemetry);
+    a lock guards structural operations (histogram creation, sinks).
+    """
+
+    def __init__(self, enabled=None):
+        self.enabled = _env_enabled() if enabled is None else bool(enabled)
+        self._counters = {}
+        self._gauges = {}
+        self._hists = {}
+        self._jits = {}
+        self._sinks = []
+        self._lock = threading.Lock()
+
+    # -- recording ---------------------------------------------------------
+    def inc(self, name, delta=1):
+        c = self._counters
+        c[name] = c.get(name, 0) + delta
+
+    def gauge(self, name, value):
+        self._gauges[name] = value
+
+    def observe(self, name, value):
+        h = self._hists.get(name)
+        if h is None:
+            with self._lock:
+                h = self._hists.setdefault(name, StreamingHistogram())
+        h.observe(value)
+
+    def counter_value(self, name, default=0):
+        return self._counters.get(name, default)
+
+    def histogram(self, name):
+        return self._hists.get(name)
+
+    # -- enable / disable --------------------------------------------------
+    def enable(self):
+        self.enabled = True
+
+    def disable(self):
+        self.enabled = False
+
+    def reset(self):
+        """Clear recorded metrics.  Jit registrations and sinks survive:
+        they describe process structure, not accumulated measurements."""
+        self._counters.clear()
+        self._gauges.clear()
+        with self._lock:
+            self._hists.clear()
+
+    # -- jit watermark -----------------------------------------------------
+    def register_jit(self, name, fn):
+        """Register a jitted entry point for the recompile watermark.
+
+        ``fn`` must expose jax's ``_cache_size()``.  Re-registering a
+        name replaces the previous function (lazily re-created jits).
+        """
+        if not hasattr(fn, "_cache_size"):
+            raise TypeError(
+                f"register_jit({name!r}): object has no _cache_size(); "
+                "pass the jax.jit wrapper itself")
+        self._jits[name] = fn
+
+    def recompile_counts(self):
+        """Per-entry compiled-variant counts, ``{name: cache_size}``."""
+        return {name: int(fn._cache_size()) for name, fn in
+                sorted(self._jits.items())}
+
+    def recompile_watermark(self):
+        """Total compiled variants across every registered jitted entry.
+
+        Take a delta of this around any region to count recompiles
+        triggered inside it (0 delta == the no-recompile property the
+        perf gates assert).
+        """
+        return sum(int(fn._cache_size()) for fn in self._jits.values())
+
+    # -- export surfaces ---------------------------------------------------
+    def snapshot(self):
+        """The documented snapshot schema (stable keys, plain types)::
+
+            {
+              "enabled":    bool,
+              "counters":   {name: int},
+              "gauges":     {name: number},
+              "histograms": {name: {count,sum,min,max,p50,p95,p99}},
+              "recompiles": {"total": int, "entries": {name: int}},
+            }
+        """
+        return {
+            "enabled": self.enabled,
+            "counters": dict(sorted(self._counters.items())),
+            "gauges": dict(sorted(self._gauges.items())),
+            "histograms": {k: self._hists[k].snapshot()
+                           for k in sorted(self._hists)},
+            "recompiles": {
+                "total": self.recompile_watermark(),
+                "entries": self.recompile_counts(),
+            },
+        }
+
+    def exposition(self, prefix="cameo"):
+        """Prometheus-style text exposition of the current registry.
+
+        Counters become ``<prefix>_<name>_total``, gauges bare samples,
+        histograms summaries with ``quantile`` labels plus ``_sum`` /
+        ``_count``.  Dots in metric names map to underscores.  Output is
+        deterministic (sorted) so it can be golden-tested.
+        """
+        lines = []
+        for name in sorted(self._counters):
+            m = f"{prefix}_{sanitize_metric_name(name)}"
+            lines.append(f"# TYPE {m} counter")
+            lines.append(f"{m}_total {_fmt(self._counters[name])}")
+        for name in sorted(self._gauges):
+            m = f"{prefix}_{sanitize_metric_name(name)}"
+            lines.append(f"# TYPE {m} gauge")
+            lines.append(f"{m} {_fmt(self._gauges[name])}")
+        for name in sorted(self._hists):
+            h = self._hists[name]
+            m = f"{prefix}_{sanitize_metric_name(name)}"
+            lines.append(f"# TYPE {m} summary")
+            for q in _QUANTILES:
+                lines.append(f'{m}{{quantile="{_fmt(q)}"}} '
+                             f"{_fmt(h.quantile(q))}")
+            lines.append(f"{m}_sum {_fmt(h.sum)}")
+            lines.append(f"{m}_count {_fmt(h.count)}")
+        if self._jits:
+            m = f"{prefix}_recompile_watermark"
+            lines.append(f"# TYPE {m} gauge")
+            lines.append(f"{m} {_fmt(self.recompile_watermark())}")
+        return "\n".join(lines) + "\n"

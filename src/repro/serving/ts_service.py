@@ -221,19 +221,21 @@ class TimeSeriesService:
 
     # -- accounting ---------------------------------------------------------
 
-    def stats(self) -> dict:
-        per = [self.store.compression_stats(s)
-               for s in self.store.series_ids()]
-        stored = sum(p["stored_nbytes"] for p in per)
-        raw = sum(p["raw_nbytes"] for p in per)
-        kept = sum(p["n_kept"] for p in per)
-        pts = sum(p["n"] for p in per)
-        return dict(
+    def stats(self, *, deep: bool = False) -> dict:
+        """Service snapshot in the unified stats schema (see
+        :mod:`repro.obs`): the shared keys — ``series``, ``points``,
+        ``n_kept``, ``stored_nbytes``, ``raw_nbytes``, ``point_cr``,
+        ``bytes_cr``, ``cache`` — match ``Dataset.stats()`` exactly, plus
+        service bookkeeping (``ingested``/``pending``/``batches``/
+        ``streams``).  Served from the store's O(1) running ingest totals
+        — polling is constant-time regardless of how many series or
+        blocks are stored.  ``deep=True`` additionally walks
+        ``compression_stats`` per series into ``per_series`` (O(total
+        series), the pre-telemetry behavior)."""
+        out = dict(
             ingested=self._ingested,
             pending=sum(len(g) for g in self._pending.values()),
             batches=self._rounds,
-            streams=len(self._streams),
-            points=pts, stored_nbytes=stored,
-            point_cr=pts / max(kept, 1),
-            bytes_cr=raw / max(stored, 1),
-            cache=self.store.cache_stats())
+            streams=len(self._streams))
+        out.update(self._ds.stats(deep=deep))
+        return out

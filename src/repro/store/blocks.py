@@ -602,7 +602,9 @@ def reconstruct_block(local_idx: np.ndarray, vals: np.ndarray, span: int,
     global _recon_jit
     if _recon_jit is None:
         import jax
+        from repro.obs import OBS
         _recon_jit = jax.jit(_reconstruct)
+        OBS.register_jit("store.reconstruct", _recon_jit)
     m = 1 << max(1, int(span - 1).bit_length())
     jdt = jnp.dtype(dtype)
     buf = np.zeros(m, jdt)

@@ -34,7 +34,11 @@ reconstructions without touching the bitstreams, which is the steady-state
 """
 from __future__ import annotations
 
+from time import perf_counter as _perf_counter
+
 import numpy as np
+
+from repro.obs import OBS
 
 _U = 2.0 ** -52          # one ulp at 1.0
 _SLOP = 64.0             # growth allowance on accumulated rounding
@@ -46,15 +50,24 @@ def _segments(store, sid: str, a: int, b: int):
     (metadata only) and ``"edge"`` means a partial decode of ``[lo, hi)``.
     Only the overlapping blocks' headers are touched (cached in the store)."""
     segs = []
+    n_meta = n_edge = 0
     for bi in store._overlapping(sid, a, b):
         m = store.block_meta(sid, bi)
         lo, hi = max(a, m.o0), min(b, m.o1)
         if lo == m.o0 and hi == m.o1:
             segs.append(("meta", m, lo, hi, None))
+            n_meta += 1
         else:
             segs.append(
                 ("edge", m, lo, hi,
                  np.asarray(store.read_window(sid, lo, hi), np.float64)))
+            n_edge += 1
+    if OBS.enabled:
+        # pushdown-vs-decode decision counters, per block and per call
+        OBS.inc("query.segments_meta", n_meta)
+        OBS.inc("query.segments_edge", n_edge)
+        OBS.inc("query.meta_only" if n_edge == 0 else
+                "query.with_edge_decode")
     return segs
 
 
@@ -275,6 +288,19 @@ def query(store, sid: str, kind: str, a=None, b=None, col=None):
     column projects from the same ``MBlockMeta``), returning stacked
     ``(values [C, ...], bounds [C, ...])`` arrays.
     """
+    if not OBS.enabled:
+        return _query(store, sid, kind, a, b, col)
+    t0 = _perf_counter()
+    out = _query(store, sid, kind, a, b, col)
+    OBS.observe("query.seconds", _perf_counter() - t0)
+    OBS.inc("query.count")
+    OBS.inc(f"query.kind.{kind}")
+    # realized bound width: the widest bound the answer shipped with
+    OBS.observe("query.bound_width", float(np.max(out[1])))
+    return out
+
+
+def _query(store, sid, kind, a, b, col):
     if kind not in AGGREGATES:
         raise ValueError(f"unknown aggregate {kind!r}; have "
                          f"{sorted(AGGREGATES)}")

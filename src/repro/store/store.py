@@ -84,6 +84,7 @@ from typing import Dict, List
 
 import numpy as np
 
+from repro.obs import OBS
 from repro.store import codec as _codec
 from repro.store.blocks import (
     BlockMeta,
@@ -128,9 +129,13 @@ class BlockCache:
         e = self._d.get(key)
         if e is None:
             self.misses += 1
+            if OBS.enabled:
+                OBS.inc("store.cache.misses")
             return None
         self._d.move_to_end(key)
         self.hits += 1
+        if OBS.enabled:
+            OBS.inc("store.cache.hits")
         return e
 
     def put(self, key, entry):
@@ -140,6 +145,8 @@ class BlockCache:
         self._d[key] = entry
         self.nbytes += entry[_E_NBYTES]
         self._evict()
+        if OBS.enabled:
+            OBS.gauge("store.cache.nbytes", self.nbytes)
 
     def grow(self, key, extra: int):
         if key in self._d:
@@ -162,10 +169,14 @@ class BlockCache:
         self.nbytes = 0
 
     def _evict(self):
+        ev = 0
         while self.nbytes > self.budget and self._d:
             _, e = self._d.popitem(last=False)
             self.nbytes -= e[_E_NBYTES]
             self.evictions += 1
+            ev += 1
+        if ev and OBS.enabled:
+            OBS.inc("store.cache.evictions", ev)
 
     def stats(self) -> dict:
         return dict(hits=self.hits, misses=self.misses,
@@ -197,6 +208,10 @@ class CameoStore:
         self.entropy = entropy
         self.version = int(version)
         self._series: Dict[str, dict] = {}   # sid -> catalog entry
+        # O(1) running ingest totals (see ingest_totals) — bumped on every
+        # append/stream emit, recomputed from the catalog on open
+        self._totals = dict(series=0, points=0, n_kept=0,
+                            stored_nbytes=0, raw_nbytes=0)
         self._cache = BlockCache(cache_bytes)  # (sid, bi) -> decoded entry
         self._metas: Dict[tuple, "BlockMeta"] = {}  # header-only cache
         self._streams: Dict[str, "StreamSession"] = {}  # open ingest streams
@@ -289,7 +304,20 @@ class CameoStore:
         off = self._f.seek(0, os.SEEK_END)
         self._f.write(struct.pack("<I", len(body)))
         self._f.write(body)
+        if OBS.enabled:
+            OBS.inc("store.write.blocks")
+            OBS.inc("store.write.bytes", 4 + len(body))
         return off
+
+    def _bump_totals(self, *, series=0, points=0, n_kept=0, stored=0):
+        """Advance the O(1) running ingest totals (channel-expanded
+        points; ``raw_nbytes`` is always 8 bytes/point)."""
+        t = self._totals
+        t["series"] += series
+        t["points"] += points
+        t["n_kept"] += n_kept
+        t["stored_nbytes"] += stored
+        t["raw_nbytes"] += 8 * points
 
     def _write_footer(self):
         self._ensure_appendable()
@@ -337,6 +365,15 @@ class CameoStore:
         self.entropy = meta.get("entropy", self.entropy)
         self._series = meta["series"]
         self._footer_offset = off
+        t = self._totals = dict(series=0, points=0, n_kept=0,
+                                stored_nbytes=0, raw_nbytes=0)
+        for e in self._series.values():   # one O(series) pass at open
+            C = int(e.get("channels", 1))
+            t["series"] += 1
+            t["points"] += e["n"] * C
+            t["n_kept"] += e["n_kept"] * C
+            t["stored_nbytes"] += e["stored_nbytes"]
+            t["raw_nbytes"] += 8 * e["n"] * C
 
     # -- ingest -------------------------------------------------------------
 
@@ -435,6 +472,8 @@ class CameoStore:
             has_resid=x64 is not None, channels=C,
             deviations=[float(d) for d in devs], blocks=blocks)
         self._series[sid] = entry
+        self._bump_totals(series=1, points=n * C,
+                          n_kept=entry["n_kept"] * C, stored=nbytes)
         self._cache.invalidate(sid)
         for key in [k for k in self._metas if k[0] == sid]:
             del self._metas[key]
@@ -506,6 +545,8 @@ class CameoStore:
             meta_nbytes=meta_nbytes, meta_raw_nbytes=meta_raw_nbytes,
             has_resid=x64 is not None, blocks=blocks)
         self._series[sid] = entry
+        self._bump_totals(series=1, points=n, n_kept=entry["n_kept"],
+                          stored=nbytes)
         self._cache.invalidate(sid)
         for key in [k for k in self._metas if k[0] == sid]:
             del self._metas[key]
@@ -575,6 +616,7 @@ class CameoStore:
                 entry["channels"] = int(channels)
                 entry["deviations"] = [0.0] * int(channels)
             self._series[sid] = entry
+            self._bump_totals(series=1)
             sess = StreamSession(self, sid, cfg, dtype=entry["dtype"],
                                  with_resid=with_resid, entry=entry)
         self._streams[sid] = sess
@@ -597,9 +639,15 @@ class CameoStore:
         if self._mm is not None:
             off = blk["offset"]
             blen, = struct.unpack_from("<I", self._mm, off)
+            if OBS.enabled:
+                OBS.inc("store.read.mmap_bytes", 4 + blen)
+                OBS.inc("store.read.blocks_fetched")
             return self._mm[off + 4:off + 4 + blen]
         self._f.seek(blk["offset"])
         blen, = struct.unpack("<I", self._f.read(4))
+        if OBS.enabled:
+            OBS.inc("store.read.pread_bytes", 4 + blen)
+            OBS.inc("store.read.blocks_fetched")
         return self._f.read(blen)
 
     def _read_bodies(self, blks: List[dict]) -> List[bytes]:
@@ -620,6 +668,10 @@ class CameoStore:
                 end = blks[j]["offset"] + 4 + blks[j]["nbytes"]
             self._f.seek(blks[i]["offset"])
             buf = self._f.read(end - blks[i]["offset"])
+            if OBS.enabled:
+                OBS.inc("store.read.coalesced_runs")
+                OBS.inc("store.read.pread_bytes", len(buf))
+                OBS.inc("store.read.blocks_fetched", j - i + 1)
             pos = 0
             for _ in range(i, j + 1):
                 blen, = struct.unpack_from("<I", buf, pos)
@@ -797,6 +849,20 @@ class CameoStore:
     def cache_stats(self) -> dict:
         """Decoded-block LRU counters (hits/misses/evictions/bytes)."""
         return self._cache.stats()
+
+    def ingest_totals(self) -> dict:
+        """O(1) running ingest totals across every stored series.
+
+        ``points``/``n_kept`` are channel-expanded (``n * C``) and
+        ``raw_nbytes`` is 8 bytes/point, matching the per-series
+        ``compression_stats`` conventions; still-streaming series count
+        their committed (readable) prefix.  Maintained incrementally on
+        every append/stream emit and rebuilt in one O(series) pass at
+        open — this is what ``Dataset.stats()`` and
+        ``TimeSeriesService.stats()`` serve instead of walking
+        ``compression_stats`` per poll (pass ``deep=True`` there for
+        the exhaustive walk)."""
+        return dict(self._totals)
 
     def compression_stats(self, sid: str) -> dict:
         """Point-count CR vs byte-true CRs for one stored series.
@@ -1028,6 +1094,7 @@ class StreamSession:
                 meta_version=store._block_meta_version)
         off = store._append_body(body)
         e = self._entry
+        old_n, old_kept = e["n"], e["n_kept"]
         bi = len(e["blocks"])
         e["blocks"].append(dict(offset=off, nbytes=len(body), t0=t0, t1=t1))
         e["stored_nbytes"] += 4 + len(body)
@@ -1054,6 +1121,10 @@ class StreamSession:
             self._bound = t1
             e["n"] = t1
         e["n_kept"] = self._committed
+        C = self.channels
+        store._bump_totals(points=(e["n"] - old_n) * C,
+                           n_kept=(e["n_kept"] - old_kept) * C,
+                           stored=4 + len(body))
 
     # -- finalize ------------------------------------------------------------
 

@@ -1,0 +1,456 @@
+"""The unified telemetry layer (``repro.obs``) — contract tests.
+
+What is pinned here:
+
+* ``StreamingHistogram`` quantiles against ``np.quantile`` oracles on
+  random streams (the log-bucketed sketch promises ~4.4% relative error);
+* the disabled path costs one attribute lookup — a microbench bounds it,
+  and ``obs.span`` returns the shared ``NULL_SPAN`` identity;
+* the Prometheus-style exposition is byte-deterministic (golden test);
+* span nesting depth / parent attribution / attrs via the JSONL sink;
+* the observer property: ingesting and querying with ``CAMEO_OBS`` on
+  produces **byte-identical stores and bit-identical query answers** to
+  running with it off;
+* ``recompile_watermark`` covers every registered jitted entry point and
+  the old ``core.streaming.compile_cache_size`` survives as a deprecated
+  shim over it;
+* the unified ``stats()`` schema: ``Dataset.stats()`` fast (O(1) running
+  totals) vs ``deep=True`` (per-series walk) agree, and
+  ``TimeSeriesService.stats()`` is a key-superset with equal shared keys;
+* the acceptance snapshot: a streamed multivariate ingest plus a pushdown
+  query session reports push-latency quantiles, window/queue counters,
+  the recompile watermark, cache hit rates, and realized bound widths.
+"""
+import json
+import math
+import os
+import time
+
+import numpy as np
+import pytest
+
+import repro.obs as obs
+from repro.obs import OBS, MetricsRegistry, NULL_SPAN, StreamingHistogram
+from repro.obs import sanitize_metric_name
+from repro.core.cameo import CameoConfig, compress
+
+CFG = CameoConfig(eps=2e-2, lags=8, mode="rounds", max_rounds=60,
+                  dtype="float64")
+
+
+def _series(n, seed=0):
+    rng = np.random.default_rng(seed)
+    t = np.arange(n)
+    return (3 * np.sin(2 * np.pi * t / 24) + np.sin(2 * np.pi * t / 168)
+            + 0.2 * rng.standard_normal(n))
+
+
+@pytest.fixture
+def obs_state():
+    """Reset the process-wide registry on entry (a CAMEO_OBS=1 suite run
+    accumulates metrics from every preceding test) and restore the
+    enabled flag + sinks on exit, so suite runs with CAMEO_OBS=1 and =0
+    both stay hermetic."""
+    was = obs.enabled()
+    sinks = list(OBS._sinks)
+    obs.reset()
+    yield OBS
+    OBS._sinks[:] = sinks
+    obs.reset()
+    OBS.enabled = was
+
+
+# ---------------------------------------------------------------------------
+# StreamingHistogram
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed,dist", [
+    (0, "lognormal"), (1, "exponential"), (2, "uniform")])
+def test_histogram_quantiles_vs_numpy(seed, dist):
+    rng = np.random.default_rng(seed)
+    n = 5000
+    if dist == "lognormal":
+        v = rng.lognormal(mean=-7.0, sigma=2.0, size=n)   # latency-like
+    elif dist == "exponential":
+        v = rng.exponential(scale=3e-3, size=n)
+    else:
+        v = rng.uniform(1.0, 1e4, size=n)
+    h = StreamingHistogram()
+    for x in v:
+        h.observe(x)
+    assert h.count == n
+    assert h.sum == pytest.approx(float(v.sum()))
+    assert h.min == float(v.min()) and h.max == float(v.max())
+    for q in (0.5, 0.95, 0.99):
+        got = h.quantile(q)
+        want = float(np.quantile(v, q, method="inverted_cdf"))
+        # one bucket of sketch error (~4.4%) plus discretization slack
+        assert got == pytest.approx(want, rel=0.06), (q, got, want)
+
+
+def test_histogram_edges():
+    h = StreamingHistogram()
+    snap = h.snapshot()
+    assert snap["count"] == 0 and math.isnan(snap["p50"])
+    h.observe(float("nan"))                     # dropped, not poisoned
+    assert h.count == 0
+    h.observe(-2.0)
+    h.observe(0.0)
+    h.observe(4.0)
+    assert h.count == 3 and h.min == -2.0 and h.max == 4.0
+    # 2/3 of the mass is non-positive: the median resolves to the min
+    assert h.quantile(0.5) == -2.0
+    assert h.quantile(0.99) == pytest.approx(4.0, rel=0.05)
+
+
+def test_sanitize_metric_name():
+    assert sanitize_metric_name("a.b-c") == "a_b_c"
+    assert sanitize_metric_name("1abc") == "_1abc"
+    assert sanitize_metric_name("query.kind.sum") == "query_kind_sum"
+
+
+# ---------------------------------------------------------------------------
+# Disabled-path cost
+# ---------------------------------------------------------------------------
+
+def test_disabled_span_is_shared_noop(obs_state):
+    obs.disable()
+    s = obs.span("anything", k=1)
+    assert s is NULL_SPAN
+    with s as inner:
+        inner.set("x", 2)            # no-op, chainable
+    assert obs.snapshot()["counters"] == {}
+
+
+def test_disabled_path_microbench(obs_state):
+    """The guarded call site must cost about one attribute lookup: bound
+    it both relative to an unguarded pass loop and absolutely."""
+    obs.disable()
+    n = 100_000
+
+    def guarded():
+        t0 = time.perf_counter()
+        for _ in range(n):
+            if OBS.enabled:
+                OBS.inc("never")
+        return time.perf_counter() - t0
+
+    def bare():
+        t0 = time.perf_counter()
+        for _ in range(n):
+            pass
+        return time.perf_counter() - t0
+
+    g = min(guarded() for _ in range(5))
+    b = min(bare() for _ in range(5))
+    per_iter = g / n
+    # generous bounds so a loaded CI runner can't flake: an attribute
+    # lookup is ~30ns; a regression to real work (dict writes, timers)
+    # costs 10-100x more than either floor
+    assert per_iter < 2e-6, f"disabled guard costs {per_iter * 1e9:.0f}ns"
+    assert g < 20 * max(b, 1e-9) + 1e-3
+    assert obs.snapshot()["counters"] == {}
+
+
+# ---------------------------------------------------------------------------
+# Exposition
+# ---------------------------------------------------------------------------
+
+def test_exposition_golden():
+    reg = MetricsRegistry(enabled=True)
+    reg.inc("a.b", 3)
+    reg.gauge("g", 2.5)
+    reg.observe("h", 1.0)
+    assert reg.exposition() == (
+        "# TYPE cameo_a_b counter\n"
+        "cameo_a_b_total 3\n"
+        "# TYPE cameo_g gauge\n"
+        "cameo_g 2.5\n"
+        "# TYPE cameo_h summary\n"
+        'cameo_h{quantile="0.5"} 1\n'
+        'cameo_h{quantile="0.95"} 1\n'
+        'cameo_h{quantile="0.99"} 1\n'
+        "cameo_h_sum 1\n"
+        "cameo_h_count 1\n")
+
+
+def test_exposition_watermark_line_only_with_jits():
+    reg = MetricsRegistry(enabled=True)
+    assert "recompile_watermark" not in reg.exposition()
+    compress(np.asarray(_series(256)), CFG)     # ensure OBS has real jits
+    assert "cameo_recompile_watermark" in OBS.exposition()
+
+
+def test_registry_reset_keeps_structure():
+    reg = MetricsRegistry(enabled=True)
+    with pytest.raises(TypeError):
+        reg.register_jit("plain", lambda: None)
+    seen = []
+    reg._sinks.append(seen.append)
+    reg.inc("c")
+    reg.observe("h", 1.0)
+    reg.reset()
+    snap = reg.snapshot()
+    assert snap["counters"] == {} and snap["histograms"] == {}
+    assert reg._sinks == [seen.append]          # sinks survive reset
+
+
+# ---------------------------------------------------------------------------
+# Spans + events
+# ---------------------------------------------------------------------------
+
+def test_span_nesting_attrs_jsonl(obs_state, tmp_path):
+    path = str(tmp_path / "events.jsonl")
+    obs.enable()
+    obs.reset()
+    OBS._sinks[:] = [obs.jsonl_sink(path)]
+    with obs.span("outer", sid="s1"):
+        assert obs.current_span().name == "outer"
+        with obs.span("inner") as sp:
+            sp.set("rows", 7)
+            assert sp.depth == 1 and sp.parent == "outer"
+    with pytest.raises(ValueError):
+        with obs.span("boom"):
+            raise ValueError("x")
+    evs = [json.loads(line) for line in open(path)]
+    by_name = {e["name"]: e for e in evs}
+    assert by_name["inner"]["depth"] == 1
+    assert by_name["inner"]["parent"] == "outer"
+    assert by_name["inner"]["attrs"] == {"rows": 7}
+    assert by_name["outer"]["depth"] == 0 and by_name["outer"]["parent"] is None
+    assert by_name["boom"]["error"] == "ValueError"
+    snap = obs.snapshot()
+    assert snap["counters"]["span.outer.calls"] == 1
+    assert snap["histograms"]["span.inner.seconds"]["count"] == 1
+    assert all(e["ts"] > 0 for e in evs)
+
+
+def test_event_api_and_sink_errors_are_swallowed(obs_state):
+    obs.enable()
+    got = []
+
+    def bad_sink(ev):
+        raise RuntimeError("sink down")
+
+    OBS._sinks[:] = [bad_sink, got.append]
+    obs.event("checkpoint", step=3)             # must not raise
+    assert got and got[0]["ev"] == "checkpoint" and got[0]["step"] == 3
+    obs.disable()
+    obs.event("dropped")
+    assert len(got) == 1
+
+
+# ---------------------------------------------------------------------------
+# Recompile watermark + shim
+# ---------------------------------------------------------------------------
+
+def test_recompile_watermark_covers_entry_points(obs_state):
+    compress(np.asarray(_series(256)), CFG)
+    counts = obs.recompile_counts()
+    assert "cameo.rounds" in counts
+    assert obs.recompile_watermark() == sum(counts.values())
+    assert counts["cameo.rounds"] >= 1
+    # warm repeat: no new programs
+    before = obs.recompile_watermark()
+    compress(np.asarray(_series(256, seed=3)), CFG)
+    assert obs.recompile_watermark() == before
+
+
+def test_compile_cache_size_shim_warns(obs_state):
+    from repro.core.streaming import compile_cache_size
+    with pytest.warns(DeprecationWarning):
+        n = compile_cache_size()
+    assert n == obs.recompile_watermark()
+
+
+# ---------------------------------------------------------------------------
+# The observer property: identical bytes and answers with obs on vs off
+# ---------------------------------------------------------------------------
+
+def _ingest_and_query(path):
+    """One full session: streamed univariate + one-shot multivariate
+    ingest, then a pushdown + decode query mix.  Returns the answers."""
+    import repro.api as api
+
+    x = _series(1536, seed=11)
+    X = np.stack([x, 0.5 * np.roll(x, 7) + 0.1 * _series(1536, seed=12)],
+                 axis=1)
+    with api.open(path, CFG, mode="w", block_len=256,
+                  stream_window=256) as ds:
+        with ds.stream("uni", queue_depth=2) as w:
+            for lo in range(0, len(x), 613):
+                w.push(x[lo:lo + 613])
+        ds.write("mv", X)
+    ds = api.open(path, cache_bytes=1 << 20)
+    s, m = ds.series("uni"), ds.series("mv")
+    out = dict(
+        uni_sum=s.sum(100, 1400), uni_mean=s.mean(), uni_var=s.var(),
+        uni_acf=s.acf(0, 1024), uni_win=s.window(200, 700),
+        uni_win_hot=s.window(200, 700),
+        mv_mean=m.mean(50, 1500), mv_win=m.window(0, 300, col=1))
+    stats = ds.stats()
+    ds.close()
+    return out, stats
+
+
+def test_obs_on_off_differential(obs_state, tmp_path):
+    p_off, p_on = str(tmp_path / "off.cameo"), str(tmp_path / "on.cameo")
+    obs.disable()
+    out_off, stats_off = _ingest_and_query(p_off)
+    obs.enable()
+    obs.reset()
+    out_on, stats_on = _ingest_and_query(p_on)
+    with open(p_off, "rb") as f1, open(p_on, "rb") as f2:
+        assert f1.read() == f2.read(), \
+            "enabling telemetry changed the stored bytes"
+    for k in out_off:
+        a, b = out_off[k], out_on[k]
+        if isinstance(a, tuple):
+            for ai, bi in zip(a, b):
+                np.testing.assert_array_equal(np.asarray(ai), np.asarray(bi))
+        else:
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # unified stats totals are telemetry-independent too (cache counters
+    # differ only if instrumentation changed access patterns — they must
+    # not, so compare them as well)
+    assert stats_off == stats_on
+    # and the enabled session actually recorded the instrumentation
+    snap = obs.snapshot()
+    assert snap["counters"]["stream.windows"] >= 6
+    assert snap["histograms"]["stream.push_seconds"]["count"] >= 1
+
+
+# ---------------------------------------------------------------------------
+# Unified stats schema
+# ---------------------------------------------------------------------------
+
+UNIFIED_KEYS = {"series", "points", "n_kept", "stored_nbytes", "raw_nbytes",
+                "point_cr", "bytes_cr", "cache"}
+
+
+def test_dataset_stats_fast_matches_deep(tmp_path):
+    import repro.api as api
+
+    path = str(tmp_path / "d.cameo")
+    x = _series(1024, seed=5)
+    X = np.stack([x, np.roll(x, 3)], axis=1)
+    with api.open(path, CFG, mode="w", block_len=256,
+                  stream_window=256) as ds:
+        ds.write("a", x)
+        ds.write("m", X)
+        with ds.stream("s") as w:          # streamed series counted too
+            w.push(_series(700, seed=6))
+        fast = ds.stats()
+        deep = ds.stats(deep=True)
+    assert UNIFIED_KEYS <= set(fast)
+    assert set(fast) | {"per_series"} == set(deep)
+    for k in fast:
+        assert fast[k] == deep[k], k
+    per = deep["per_series"]
+    assert set(per) == {"a", "m", "s"}
+    # the O(1) running totals agree with the exhaustive walk
+    assert fast["series"] == len(per)
+    assert fast["points"] == sum(p["n"] * p["channels"] for p in per.values())
+    assert fast["n_kept"] == sum(
+        p["n_kept"] * p["channels"] for p in per.values())
+    assert fast["stored_nbytes"] == sum(
+        p["stored_nbytes"] for p in per.values())
+    assert fast["raw_nbytes"] == sum(p["raw_nbytes"] for p in per.values())
+
+
+def test_ingest_totals_survive_reopen_and_resume(tmp_path):
+    import repro.api as api
+
+    path = str(tmp_path / "r.cameo")
+    x = _series(1100, seed=9)
+    ds = api.open(path, CFG, mode="w", block_len=256, stream_window=256)
+    w = ds.stream("s")
+    w.push(x[:600])
+    ds.close()                               # mid-stream: state stashed
+    ds = api.open(path, CFG, mode="a", block_len=256, stream_window=256)
+    w = ds.stream("s", resume=True)
+    w.push(x[w.resume_from:])
+    w.close()
+    fast = ds.stats()
+    deep = ds.stats(deep=True)["per_series"]["s"]
+    ds.close()
+    assert fast["points"] == deep["n"] == 1100
+    assert fast["n_kept"] == deep["n_kept"]
+    assert fast["stored_nbytes"] == deep["stored_nbytes"]
+
+
+def test_service_stats_superset(tmp_path):
+    from repro.serving.ts_service import TimeSeriesService, TsServiceConfig
+
+    path = str(tmp_path / "svc.cameo")
+    with TimeSeriesService(path, CFG, TsServiceConfig(
+            block_len=256, stream_window=256)) as svc:
+        with pytest.warns(DeprecationWarning):
+            svc.submit("a", _series(512, seed=1))
+        svc.flush()
+        st = svc.stats()
+        assert UNIFIED_KEYS | {"ingested", "pending", "batches",
+                               "streams"} <= set(st)
+        assert st["series"] == 1 and st["ingested"] == 1
+        deep = svc.stats(deep=True)
+        assert set(deep["per_series"]) == {"a"}
+        for k in UNIFIED_KEYS - {"cache"}:
+            assert st[k] == deep[k], k
+
+
+# ---------------------------------------------------------------------------
+# Acceptance: the end-to-end snapshot
+# ---------------------------------------------------------------------------
+
+def test_acceptance_snapshot(obs_state, tmp_path):
+    """Streamed multivariate ingest + a pushdown query session must light
+    up every pillar of the snapshot: push-latency quantiles, window and
+    queue counters, the recompile watermark, cache hit rates, and the
+    realized pushdown bound widths."""
+    import repro.api as api
+
+    obs.enable()
+    obs.reset()
+    path = str(tmp_path / "acc.cameo")
+    rng = np.random.default_rng(21)
+    n, C = 1500, 3                           # 5 full windows + a padded tail
+    base = _series(n, seed=21)
+    X = np.stack([base] + [
+        (0.7 + 0.1 * c) * np.roll(base, 5 * c)
+        + 0.05 * rng.standard_normal(n) for c in range(1, C)], axis=1)
+    with api.open(path, CFG, mode="w", block_len=256,
+                  stream_window=256) as ds:
+        with ds.stream("rack", channels=C, queue_depth=2) as w:
+            for lo in range(0, n, 521):
+                w.push(X[lo:lo + 521])
+    ds = api.open(path, cache_bytes=1 << 20)
+    s = ds.series("rack")
+    s.mean(100, 1400)
+    s.acf(0, 1024)
+    s.window(200, 600)
+    s.window(200, 600)                       # hot decode: cache hit
+    stats = ds.stats()
+    ds.close()
+
+    snap = obs.snapshot()
+    c, h = snap["counters"], snap["histograms"]
+    push = h["stream.push_seconds"]
+    assert push["count"] == 3 and push["p50"] > 0 and push["p95"] > 0
+    assert c["stream.windows"] == 6          # 5 full + 1 padded tail
+    assert c["stream.pad_to_bucket_hits"] >= 1
+    assert c["stream.queue_drains"] >= 1
+    assert h["stream.window_eps_headroom"]["max"] <= 1.0 + 1e-9
+    assert snap["recompiles"]["total"] >= 1
+    assert {"cameo.rounds", "cameo.sequential", "cameo.mvar_reconstruct",
+            "store.reconstruct"} <= set(snap["recompiles"]["entries"])
+    assert c["store.cache.hits"] >= 1
+    assert c["query.count"] == 2             # mean + acf pushdowns
+    assert h["query.bound_width"]["count"] == 2
+    assert np.isfinite(h["query.bound_width"]["max"])
+    assert c["query.segments_meta"] >= 1
+    # the unified stats view agrees with the ingest
+    assert stats["series"] == 1 and stats["points"] == n * C
+    # and the whole registry round-trips through the text exposition
+    text = obs.exposition()
+    assert "cameo_stream_windows_total 6" in text
+    assert 'cameo_stream_push_seconds{quantile="0.5"}' in text
