@@ -961,10 +961,24 @@ def _update_bench_stream_json(rows):
     into both timings, so its absolute pts/s and its stream-vs-oneshot
     ratio measured XLA tracing, not ingest — comparing against it would
     gate nothing.  ``stream_vs_oneshot`` is streamed seconds over warm
-    one-shot seconds (≈1.0 means streaming costs nothing over one-shot)."""
+    one-shot seconds (≈1.0 means streaming costs nothing over one-shot).
+
+    Every invocation appends a ``stream_runs`` row: the run rows are the
+    only durable record of how ingest throughput moved across machines and
+    runtime configurations, so each is stamped with the wall-clock time,
+    the jax backend it ran on, and the XLA runtime flags in effect —
+    without those, a pts/s swing from flipping
+    ``--xla_cpu_use_thunk_runtime`` is indistinguishable from a code
+    regression when reading the ledger."""
+    import os
+    from datetime import datetime, timezone
+
     comp = [r for r in rows if r.get("section") == "stream_compile"]
     rows = [r for r in rows if r.get("section") == "stream"]
     summary = dict(
+        ts=datetime.now(timezone.utc).isoformat(timespec="seconds"),
+        backend=jax.default_backend(),
+        xla_flags=os.environ.get("XLA_FLAGS", ""),
         timing="warm",
         mem_ratio_geomean=geomean([r["mem_ratio"] for r in rows]),
         pts_per_s_geomean=geomean([r["pts_per_s"] for r in rows]),
@@ -985,7 +999,14 @@ def _update_bench_stream_json(rows):
     if ledger is None:
         ledger = dict(schema=1, baseline=None, runs=[])
     base = ledger.get("stream_baseline")
-    if not base or base.get("timing") != "warm":
+    # Re-pin when the pinned summary predates warm timing, or when this
+    # run's geomean beats it: the baseline ratchets up to the best-known
+    # warm throughput, so a code change that speeds ingest raises the
+    # regression floor in the same PR.  The perf_smoke floor sits at 30%
+    # of the pin, which absorbs ordinary runner-speed variance.
+    if not base or base.get("timing") != "warm" \
+            or summary["pts_per_s_geomean"] \
+            > base.get("pts_per_s_geomean", 0.0):
         ledger["stream_baseline"] = summary
     ledger.setdefault("stream_runs", []).append(summary)
     ledger["stream_runs"] = ledger["stream_runs"][-20:]

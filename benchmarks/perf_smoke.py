@@ -95,6 +95,16 @@ PER_METRIC_TOLERANCE = {"pushdown_warm_speedup": 0.30,
 # disabled), not relative to the committed baseline — the contract is
 # "telemetry is nearly free", not "as cheap as last time".
 OBS_OVERHEAD_FLOOR = float(os.environ.get("CAMEO_OBS_OVERHEAD_FLOOR", "0.97"))
+# round_body_eqns counts equations in the *lowered* rounds-mode round body
+# (the while-loop the compressor spends its life in) and is gated as an
+# absolute ceiling: op count is machine-independent, and on CPU the round
+# body is dispatch-bound, so an accidental return to unrolled per-lag
+# chains shows up here as hundreds of extra equations long before any
+# timing gate would notice.  The matmul-shaped body traces at ~590 eqns;
+# the ceiling leaves headroom for routine maintenance but sits far below
+# the ~2700 of the historical per-lag swarm.
+ROUND_BODY_EQN_CEILING = int(
+    os.environ.get("CAMEO_ROUND_BODY_EQN_CEILING", "750"))
 _N = 16384
 _STREAM_N = 262144
 
@@ -194,7 +204,63 @@ def _measure() -> dict:
     metrics.update(_measure_stream(cfg))
     metrics.update(_measure_stream_compress())
     metrics.update(_measure_mvar(cfg))
+    metrics.update(_measure_opcount())
     return metrics
+
+
+def _count_eqns(jaxpr) -> int:
+    """Total equations in a jaxpr including every sub-jaxpr (cond branches,
+    nested loops, pjit bodies)."""
+    total = 0
+    for eq in jaxpr.eqns:
+        total += 1
+        for v in eq.params.values():
+            inner = getattr(v, "jaxpr", None)
+            if inner is not None and hasattr(inner, "eqns"):
+                total += _count_eqns(inner)
+            elif inner is not None and hasattr(getattr(inner, "jaxpr", None),
+                                               "eqns"):
+                total += _count_eqns(inner.jaxpr)
+    return total
+
+
+def _find_whiles(jaxpr, out):
+    """Collect every `while` equation, recursing into sub-jaxprs (the
+    rounds loop nests inside a pjit equation when traced under jit)."""
+    for eq in jaxpr.eqns:
+        if eq.primitive.name == "while":
+            out.append(eq)
+        for v in eq.params.values():
+            inner = getattr(v, "jaxpr", None)
+            if inner is not None and hasattr(inner, "eqns"):
+                _find_whiles(inner, out)
+            elif inner is not None and hasattr(getattr(inner, "jaxpr", None),
+                                               "eqns"):
+                _find_whiles(inner.jaxpr, out)
+    return out
+
+
+def _measure_opcount() -> dict:
+    """Equation count of the lowered rounds-mode round body (the body
+    jaxpr of the outermost while loop in ``_rounds_padded``) at the stream
+    bench's shape (n=1024, L=24).  Deterministic — no timing involved."""
+    import jax.numpy as jnp
+
+    from repro.core.cameo import CameoConfig, _rounds_padded
+
+    cfg = CameoConfig(eps=1e-2, lags=24, mode="rounds", max_rounds=120,
+                      dtype="float64")
+    n = 1024
+    x = jnp.zeros((n,), jnp.float64)
+    closed = jax.make_jaxpr(lambda xp: _rounds_padded(
+        xp, jnp.asarray(n), jnp.asarray(2), jnp.asarray(cfg.eps), cfg))(x)
+    whiles = _find_whiles(closed.jaxpr, [])
+    assert whiles, "no while loop found in the lowered rounds program"
+    body = whiles[0].params["body_jaxpr"].jaxpr
+    eqns = _count_eqns(body)
+    print(f"round body: {eqns} lowered eqns "
+          f"(ceiling {ROUND_BODY_EQN_CEILING})")
+    return {"round_body_eqns": float(eqns)}
 
 
 def _measure_stream_compress() -> dict:
@@ -412,7 +478,8 @@ def _gate(metrics: dict) -> int:
               "--write-baseline and commit it", file=sys.stderr)
         return 1
     base_native = baseline.pop("native_scan", None)
-    baseline.pop("obs_overhead", None)   # gated absolutely below
+    baseline.pop("obs_overhead", None)       # gated absolutely below
+    baseline.pop("round_body_eqns", None)    # gated absolutely below
     if base_native and not _scan.NATIVE:
         print("perf-smoke FAILED: the committed baseline was pinned with "
               "the native C scanner, but this environment has none (no "
@@ -437,7 +504,8 @@ def _gate(metrics: dict) -> int:
               f"(floor {floor:.1f}x) {status}")
         if cur < floor:
             failures.append(key)
-    for key in sorted(set(metrics) - set(baseline) - {"obs_overhead"}):
+    for key in sorted(set(metrics) - set(baseline)
+                      - {"obs_overhead", "round_body_eqns"}):
         # a freshly added row whose baseline section hasn't been pinned
         # yet: new rows must be able to land in the same PR as their code,
         # so this is a skip, not a failure
@@ -469,6 +537,15 @@ def _gate(metrics: dict) -> int:
               f"(floor {OBS_OVERHEAD_FLOOR:.2f}) {status}")
         if cur < OBS_OVERHEAD_FLOOR:
             failures.append("obs_overhead")
+    # the round-body op count is a deterministic absolute ceiling: a
+    # failure means the round body regrew per-lag unrolled chains
+    cur = metrics.get("round_body_eqns")
+    if cur is not None:
+        status = "ok" if cur <= ROUND_BODY_EQN_CEILING else "REGRESSED"
+        print(f"round_body_eqns: {cur:.0f} "
+              f"(ceiling {ROUND_BODY_EQN_CEILING}) {status}")
+        if cur > ROUND_BODY_EQN_CEILING:
+            failures.append("round_body_eqns")
     if failures:
         print(f"perf-smoke FAILED: {failures} regressed more than "
               f"{(1 - TOLERANCE) * 100:.0f}% vs the committed "

@@ -86,15 +86,21 @@ def extract_aggregates_masked(x: jax.Array, L: int, n_valid,
     return Aggregates(sx=sx, sxl=sxl, sx2=sx2, sxl2=sxl2, sxx=sxx)
 
 
-def acf_from_aggregates(agg: Aggregates, n: int) -> jax.Array:
-    """Eq. (2).  Returns the ACF for lags ``1..L`` (shape ``[L]``)."""
-    L = agg.sx.shape[0]
-    m = n - jnp.arange(1, L + 1, dtype=agg.sx.dtype)  # n - l per lag
-    num = m * agg.sxx - agg.sx * agg.sxl
-    var_head = m * agg.sx2 - agg.sx * agg.sx
-    var_tail = m * agg.sxl2 - agg.sxl * agg.sxl
+def acf_from_aggregates(agg, n: int) -> jax.Array:
+    """Eq. (2).  Returns the ACF for lags ``1..L`` (shape ``[L]``).
+
+    ``agg`` is any structure indexable as the five per-lag rows — the
+    :class:`Aggregates` NamedTuple or the packed ``[5, L]`` moment table the
+    rounds mode carries.
+    """
+    sx, sxl, sx2, sxl2, sxx = agg[0], agg[1], agg[2], agg[3], agg[4]
+    L = sx.shape[-1]
+    m = n - jnp.arange(1, L + 1, dtype=sx.dtype)  # n - l per lag
+    num = m * sxx - sx * sxl
+    var_head = m * sx2 - sx * sx
+    var_tail = m * sxl2 - sxl * sxl
     denom2 = var_head * var_tail
-    tiny = jnp.asarray(1e-30, agg.sx.dtype)
+    tiny = jnp.asarray(1e-30, sx.dtype)
     denom = jnp.sqrt(jnp.maximum(denom2, tiny))
     return jnp.where(denom2 > tiny, num / denom, jnp.zeros_like(num))
 

@@ -41,20 +41,95 @@ _lag_masks = _ref.head_tail_masks
 # Dense exact update (rounds mode)
 # ---------------------------------------------------------------------------
 
-def apply_delta_dense(agg: Aggregates, y_old: jax.Array, delta: jax.Array,
-                      ny=None) -> Aggregates:
+def apply_delta_dense(agg, y_old: jax.Array, delta: jax.Array, ny=None,
+                      form: str = "auto"):
     """Exact aggregate update for an arbitrary dense delta vector.
 
     ``y_old`` is the reconstruction *before* the update.  Cost: O(ny + L) for
-    the four moment sums (via cumulative sums) + O(ny * L) for ``sxx``.
+    the four moment sums (via cumulative sums) + one ``[ny] x [ny, L]``
+    contraction for ``sxx`` (lag shifts gathered against a constant shift
+    basis — no per-lag op chains).
+
+    ``agg`` may be the ``Aggregates`` NamedTuple or the packed ``[5, L]``
+    moment table (the rounds-mode loop carry); the update comes back in the
+    same form — for the table that is a single fused add.
 
     ``ny`` (optionally traced) gives the valid length when ``y_old``/``delta``
     live in a zero-padded bucket; both must be zero beyond it.
+
+    ``form`` picks the bilinear-term lowering: ``"gather"`` (two matvecs
+    against the [nyb, L] shift basis), ``"roll"`` (one batched
+    roll-and-reduce over the lag axis), or ``"auto"`` (roll on CPU, gather
+    elsewhere — see the comment at the term).
     """
     nyb = y_old.shape[0]
     if ny is None:
         ny = nyb
-    L = agg.sx.shape[0]
+    L = agg[0].shape[-1]
+    l = jnp.arange(1, L + 1)
+
+    cd = jnp.cumsum(delta)
+    e = delta * (2.0 * y_old + delta)
+    ce = jnp.cumsum(e)
+    dtot, etot = cd[-1], ce[-1]
+
+    dsx = cd[ny - 1 - l]
+    dsx2 = ce[ny - 1 - l]
+    dsxl = dtot - cd[l - 1]
+    dsxl2 = etot - ce[l - 1]
+
+    # new*new - old*old expanded over lag shifts:
+    #   d_t*y_{t+l} + y_t*d_{t+l} + d_t*d_{t+l}
+    #     = d_t*(y+d)_{t+l} + y_t*d_{t+l}
+    # Backend-conditional trace-time form (parity-tested in
+    # tests/test_contractions.py): XLA's CPU emitter runs both the [nyb, L]
+    # shift-basis gather and a per-lag chain of 2L small dots an order of
+    # magnitude slower than one batched roll+mask+reduce (the gather takes
+    # the slow general-gather path; the dot chain is dispatch-bound on the
+    # legacy runtime).  Elsewhere the gathered basis keeps the whole term at
+    # two matvecs against a [nyb, L] operand — matmul-shaped for the MXU.
+    if form == "auto":
+        form = "roll" if jax.default_backend() == "cpu" else "gather"
+    if form == "roll":
+        z = y_old + delta
+        t = jnp.arange(nyb)
+
+        def lag_term(ll):
+            keep = (t <= (ny - 1 - ll)).astype(y_old.dtype)
+            # roll wraps the head into the tail, so the validity mask is
+            # load-bearing even with zero-padded operands
+            return jnp.sum(keep * (delta * jnp.roll(z, -ll)
+                                   + y_old * jnp.roll(delta, -ll)))
+
+        dsxx = jax.vmap(lag_term)(l)
+    else:
+        z_pad = jnp.pad(y_old + delta, (0, L))
+        d_pad = jnp.pad(delta, (0, L))
+        t = jnp.arange(nyb)
+        shift = t[:, None] + l[None, :]                   # [nyb, L]
+        dsxx = delta @ z_pad[shift] + y_old @ d_pad[shift]
+
+    dtable = jnp.stack([dsx, dsxl, dsx2, dsxl2, dsxx])
+    if isinstance(agg, jax.Array):
+        return agg + dtable
+    return Aggregates(
+        sx=agg.sx + dtable[0],
+        sxl=agg.sxl + dtable[1],
+        sx2=agg.sx2 + dtable[2],
+        sxl2=agg.sxl2 + dtable[3],
+        sxx=agg.sxx + dtable[4],
+    )
+
+
+def apply_delta_dense_ref(agg: Aggregates, y_old: jax.Array,
+                          delta: jax.Array, ny=None) -> Aggregates:
+    """Per-lag loop oracle for :func:`apply_delta_dense` (the historical
+    vmapped roll-multiply-sum form), kept for parity tests of the shift-basis
+    contraction."""
+    nyb = y_old.shape[0]
+    if ny is None:
+        ny = nyb
+    L = agg[0].shape[-1]
     l = jnp.arange(1, L + 1)
 
     cd = jnp.cumsum(delta)
@@ -71,16 +146,15 @@ def apply_delta_dense(agg: Aggregates, y_old: jax.Array, delta: jax.Array,
         mask = (jnp.arange(nyb) <= (ny - 1 - ll)).astype(y_old.dtype)
         y_sh = jnp.roll(y_old, -ll)
         d_sh = jnp.roll(delta, -ll)
-        # new*new - old*old expanded: d_t*y_{t+l} + y_t*d_{t+l} + d_t*d_{t+l}
         return jnp.sum(mask * (delta * y_sh + y_old * d_sh + delta * d_sh))
 
     dsxx = jax.vmap(lag_term)(l)
     return Aggregates(
-        sx=agg.sx + dsx,
-        sxl=agg.sxl + dsxl,
-        sx2=agg.sx2 + dsx2,
-        sxl2=agg.sxl2 + dsxl2,
-        sxx=agg.sxx + dsxx,
+        sx=agg[0] + dsx,
+        sxl=agg[1] + dsxl,
+        sx2=agg[2] + dsx2,
+        sxl2=agg[3] + dsxl2,
+        sxx=agg[4] + dsxx,
     )
 
 

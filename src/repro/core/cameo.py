@@ -44,7 +44,6 @@ import numpy as np
 
 from repro.core import measures as _measures
 from repro.core.acf import (
-    Aggregates,
     acf_from_aggregates,
     aggregate_series,
     extract_aggregates,
@@ -206,20 +205,53 @@ def _halting_params(n: int, cfg: CameoConfig):
     return min_alive, eps
 
 
-@functools.partial(jax.jit, static_argnames=("cfg",))
-def _rounds_padded(xp: jax.Array, n_valid: jax.Array, min_alive: jax.Array,
-                   eps: jax.Array, cfg: CameoConfig) -> CompressResult:
-    """Rounds mode over a zero-padded bucket ``xp [nb]`` with runtime valid
-    length ``n_valid`` — one compiled program per (bucket, cfg).
+def _round_fns(cfg: CameoConfig, nb: int, n_valid: jax.Array,
+               min_alive: jax.Array, eps: jax.Array, p0: jax.Array,
+               tier_c: bool = True, tier_cond: bool = True,
+               small_rounds="cond"):
+    """``(cond, body)`` closures for the rounds loop at bucket size ``nb``.
+
+    Shared by the run-to-completion program (:func:`_rounds_padded`) and the
+    budgeted chunk program (:func:`_rounds_chunk`) that drives lane-compacted
+    batching.  ``n_valid``/``min_alive``/``eps`` are (possibly per-lane
+    traced) scalars and ``p0`` the [L] target stat; the aggregate rides the
+    carry as the packed ``[5, L]`` moment table, so a round's accept gate and
+    update are each one fused op instead of five.
 
     Each round runs as one fused pass: tiered exact Eq. 9 ranking into
     fixed-capacity buffers, top-k + independent-set selection, the
     prefix-deviation scan (kernels/fused_round) to pick the largest feasible
     prefix, and a dense exact Eq. 10/11 aggregate update as the
     authoritative accept check.
+
+    ``tier_c=False`` compiles a variant with the wide-window (span > WB)
+    ranking tier elided entirely.  Serial runs skip an empty tier through a
+    ``lax.cond`` at run time, but under vmap a batched cond executes both
+    branches every round — so the compacted batch driver starts on the
+    elided program and watches the ``saw_c`` carry flag, which the body
+    raises the moment any round's candidate set actually reaches the wide
+    tier.  The driver then replays that chunk from its saved carry on the
+    ``tier_c=True`` program, keeping results bit-identical to per-series
+    runs (spans only grow, so the switch is one-way).
+
+    ``small_rounds="cond"`` (default) adds a ``lax.cond`` fast path: when the
+    candidate budget fits ``k_small``, the round runs a ``round_at``
+    instantiation a third the size (shrunk ranking buffers too — tier
+    overflow is correctness-neutral, unranked candidates retry next
+    round).  The branch choice is trajectory-defining, so every program
+    that can reach a small round must compile the same cond.  Late-game
+    rounds dominate long compressions (hundreds of few-candidate rounds
+    after the early mass removals), so the fast path is worth roughly a
+    1.5x end-to-end speedup on real ingest traces.  Batched chunk
+    programs pay both branches under vmap (cond lowers to a select), so
+    the compacted driver watches for the moment *every* lane's candidate
+    budget is provably pinned at or below ``k_small`` — ``n_alive`` only
+    shrinks and ``alpha <= cfg.alpha`` always, making the small regime
+    absorbing — and switches (one-way) to ``small_rounds="only"``: the
+    small instantiation compiled unconditionally, bit-identical to the
+    cond's taken branch from that point on.
     """
     dt = cfg.jdtype()
-    nb = xp.shape[0]
     L = cfg.lags
     kap = cfg.kappa
     W = cfg.window
@@ -229,14 +261,10 @@ def _rounds_padded(xp: jax.Array, n_valid: jax.Array, min_alive: jax.Array,
 
     n_valid = n_valid.astype(jnp.int32)
     validm = idx < n_valid
-    xp = jnp.where(validm, xp.astype(dt), jnp.asarray(0.0, dt))
     ny_valid = n_valid // kap
 
-    y0 = aggregate_series(xp, kap)
-    agg0 = extract_aggregates_masked(y0, L, ny_valid, backend=cfg.backend)
     transform = _stat_transform(cfg)
     mfn = _measure_fn(cfg)
-    p0 = transform(acf_from_aggregates(agg0, ny_valid))
 
     def rows_dev(rows):
         p0r = p0.astype(rows.dtype)
@@ -245,14 +273,22 @@ def _rounds_padded(xp: jax.Array, n_valid: jax.Array, min_alive: jax.Array,
         return jax.vmap(lambda r: mfn(transform(r), p0r))(rows)
 
     k_max = max(1, min(int(cfg.alpha * nb), nb - 2))
-    k_small = max(8, min(k_max, 32))
     WB = max(2, min(_TIER_SMALL_W, W))
-    # Large-round vs endgame-round eviction-buffer capacities (overflow is
-    # correctness-neutral: unranked candidates retry next round).
-    cap_b = min(nb, max(32, nb // 8))
-    cap_c = min(nb, max(32, nb // 16))
-    cap_b_s = min(nb, max(16, nb // 32))
-    cap_c_s = min(nb, max(16, nb // 64))
+    # Tiered eviction-buffer capacities (overflow is correctness-neutral:
+    # unranked candidates retry next round).  Deliberately lean: early big
+    # rounds are all span-1 candidates ranked by the shared Eq. 8 pass, and
+    # by the time segments outgrow span 1 the removal fraction has usually
+    # backed off — so one small-capacity program serves every round, instead
+    # of the historical large-round/endgame-round branch pair that doubled
+    # the lowered op count (and ran both sides under vmap).
+    cap_b = min(nb, max(24, nb // 24))
+    cap_c = min(nb, max(16, nb // 48))
+    # Small-round fast path (serial programs only, see docstring): a
+    # third-size instantiation for the late-game rounds, entered only when
+    # provably equivalent to the full one.
+    k_small = max(8, min(k_max, 32))
+    cap_b_s = min(cap_b, max(16, nb // 32))
+    cap_c_s = min(cap_c, max(8, nb // 64))
 
     # Ranking runs in float32: it only orders the heuristic candidate
     # selection (every accepted removal is re-validated by the exact dense
@@ -275,17 +311,26 @@ def _rounds_padded(xp: jax.Array, n_valid: jax.Array, min_alive: jax.Array,
             cand = jnp.clip(slots, 0, nb - 1)
             dwin, start, _ = segment_deltas(xr, prev, nxt, cand, Wt)
             dyw, ystart = _ops.x_window_to_y(cfg, dwin, start)
-            acf_rows = _fused.window_acf_rows(
-                yr, dyw.astype(rdt), ystart, tbl_r, ny_valid, L=L)
+            acf_rows = _fused.window_rows(
+                cfg, yr, dyw.astype(rdt), ystart, tbl_r, ny_valid, L=L)
             imp = rows_dev(acf_rows).astype(dt)
             return jnp.full((nb,), jnp.inf, dt).at[slots].set(
                 imp, mode="drop")
 
-        # Tier classes are often empty (all spans start at 1 and only grow
-        # as removals accumulate) — skip the whole ranking pass then.
-        imp_full = jax.lax.cond(
-            jnp.any(mask), some,
-            lambda _: jnp.full((nb,), jnp.inf, dt), operand=None)
+        if tier_cond:
+            # Tier classes are often empty (all spans start at 1 and only
+            # grow as removals accumulate) — skip the whole ranking pass
+            # then.  Worth it only in the serial program: under vmap the
+            # batched cond lowers to select-over-both-branches, and the
+            # select machinery costs more than the ranking pass it guards.
+            imp_full = jax.lax.cond(
+                jnp.any(mask), some,
+                lambda _: jnp.full((nb,), jnp.inf, dt), operand=None)
+        else:
+            # Unconditional variant is bit-identical: with an empty mask the
+            # rank scatter writes nothing and `some` returns all-inf, same
+            # as the cond's false branch.
+            imp_full = some(None)
         return imp_full, ranked
 
     def single_impacts(xr, yr, tbl_r, prev, nxt):
@@ -299,14 +344,14 @@ def _rounds_padded(xp: jax.Array, n_valid: jax.Array, min_alive: jax.Array,
         return rows_dev(rows).astype(dt)
 
     def cond(c):
-        (xr, alive, prev, nxt, y, agg, alpha, dev, rounds, done, blocked,
-         retried) = c
+        (xr, alive, prev, nxt, y, tbl, alpha, dev, rounds, done, blocked,
+         retried, saw_c) = c
         return (~done) & (rounds < cfg.max_rounds) & \
             (jnp.sum(alive) > min_alive)
 
     def body(c):
-        (xr, alive, prev, nxt, y, agg, alpha, dev, rounds, done, blocked,
-         retried) = c
+        (xr, alive, prev, nxt, y, tbl, alpha, dev, rounds, done, blocked,
+         retried, saw_c) = c
         n_alive = jnp.sum(alive)
         # Per-lane re-check of `cond`: under vmap (compress_batch) the body
         # keeps executing for lanes whose own loop has finished as long as
@@ -317,9 +362,15 @@ def _rounds_padded(xp: jax.Array, n_valid: jax.Array, min_alive: jax.Array,
         removable = alive & (idx > 0) & (idx < n_valid - 1)
         cand = removable & (~blocked)
         span = nxt - prev - 1
+        # Raised (one-way) as soon as a live round's candidate set reaches
+        # the wide-window tier — the compacted batch driver's signal to
+        # replay this chunk on the tier_c=True program (see docstring).
+        if cfg.rank != "single" and WB < W:
+            saw_c = saw_c | (live & jnp.any(
+                cand & (span > WB) & (span <= W)))
 
         y_r = y.astype(rdt)
-        tbl_r = _ops.agg_to_table(agg).astype(rdt)
+        tbl_r = tbl.astype(rdt)
         imp_sd = single_impacts(xr, y_r, tbl_r, prev, nxt)
         k_cap = jnp.maximum(
             1, jnp.minimum(
@@ -345,10 +396,10 @@ def _rounds_padded(xp: jax.Array, n_valid: jax.Array, min_alive: jax.Array,
                                jnp.where(alive_new, xr, interp),
                                jnp.asarray(0.0, dt))
             dy = _x_to_y_delta(xr_new - xr, kap, dt)
-            agg_new = apply_delta_dense(agg, y, dy, ny=ny_valid)
-            dev_new = mfn(transform(acf_from_aggregates(agg_new, ny_valid)),
+            tbl_new = apply_delta_dense(tbl, y, dy, ny=ny_valid)
+            dev_new = mfn(transform(acf_from_aggregates(tbl_new, ny_valid)),
                           p0)
-            return dev_new, sel, alive_new, xr_new, dy, agg_new, prev_n, nxt_n
+            return dev_new, sel, alive_new, xr_new, dy, tbl_new, prev_n, nxt_n
 
         def round_at(k_rows: int, cb: int, cc: int):
             """Ranking + selection at one static problem size.  Outputs are
@@ -367,7 +418,7 @@ def _rounds_padded(xp: jax.Array, n_valid: jax.Array, min_alive: jax.Array,
                     impact = jnp.where(b_mask, imp_b, impact)
                     exact_ranked = a_mask | (b_mask & ranked_b)
                     overflowed = b_mask & (~ranked_b)
-                    if WB < W:
+                    if WB < W and tier_c:
                         c_mask = cand & (span > WB) & (span <= W)
                         imp_c, ranked_c = tier_impacts(
                             c_mask, xr, y_r, tbl_r, prev, nxt, W, cc)
@@ -417,7 +468,7 @@ def _rounds_padded(xp: jax.Array, n_valid: jax.Array, min_alive: jax.Array,
                         # prefix (greedy decisions up to the first skip) as
                         # the fallback proposal.
                         take_g, _ = _fused.greedy_feasible(
-                            cfg, y, dyw_k, ystart_k, ok, agg, p0,
+                            cfg, y, dyw_k, ystart_k, ok, tbl, p0,
                             ny_valid, eps)
                         out_a = dense_apply(sel_idx, take_g)
                         first_skip = jnp.min(jnp.where(
@@ -443,12 +494,10 @@ def _rounds_padded(xp: jax.Array, n_valid: jax.Array, min_alive: jax.Array,
                         # dense authoritative check gates the round; on a
                         # miss (linearization error) the proposal halves up
                         # to three times.
-                        def dev_of_table(tbl):
-                            aggt = Aggregates(tbl[0], tbl[1], tbl[2],
-                                              tbl[3], tbl[4])
+                        def dev_of_table(t5):
                             return mfn(transform(
-                                acf_from_aggregates(aggt, ny_valid)), p0)
-                        gtbl = jax.grad(dev_of_table)(_ops.agg_to_table(agg))
+                                acf_from_aggregates(t5, ny_valid)), p0)
+                        gtbl = jax.grad(dev_of_table)(tbl)
                         dagg = _fused.solo_moment_rows(
                             y, dyw_k, ystart_k, ny_valid, L=L)
                         g = jnp.einsum("al,kal->k", gtbl, dagg)
@@ -475,36 +524,38 @@ def _rounds_padded(xp: jax.Array, n_valid: jax.Array, min_alive: jax.Array,
                         # (degenerating to bisection when the model stalls).
                         n_ok = jnp.sum(finite_g).astype(jnp.int32)
                         out_empty = (dev, jnp.zeros((nb,), bool), alive,
-                                     xr, jnp.zeros((nyb,), dt), agg,
+                                     xr, jnp.zeros((nyb,), dt), tbl,
                                      prev, nxt)
 
-                        def probe(_, carry):
-                            k_lo, out_lo, k_hi, err = carry
-                            do = (k_hi - k_lo) > 1
+                        # A while_loop (not a fixed fori_loop): the bracket
+                        # usually closes after one or two dense probes, and a
+                        # while stops there — crucially also under vmap,
+                        # where a fori would charge every lane the full probe
+                        # budget every round (a cond inside a batched loop
+                        # runs both branches).
+                        def probe_cond(carry):
+                            it, k_lo, out_lo, k_hi, err = carry
+                            return (it < 4) & ((k_hi - k_lo) > 1)
+
+                        def probe(carry):
+                            it, k_lo, out_lo, k_hi, err = carry
                             k_p = jnp.max(jnp.where(
                                 finite_g & (pred + err <= eps), kidx,
                                 jnp.int32(0)))
                             k_p = jnp.clip(k_p, k_lo + 1, k_hi - 1)
-                            out_p = jax.lax.cond(
-                                do, lambda _: at_k(k_p),
-                                lambda _: out_lo, operand=None)
+                            out_p = at_k(k_p)
                             fits = out_p[0] <= eps
-                            err = jnp.where(
-                                do,
-                                out_p[0] - pred[jnp.maximum(k_p - 1, 0)],
-                                err)
-                            adv = do & fits
+                            err = out_p[0] - pred[jnp.maximum(k_p - 1, 0)]
                             out_lo = jax.tree.map(
-                                lambda a, b: jnp.where(adv, a, b),
+                                lambda a, b: jnp.where(fits, a, b),
                                 out_p, out_lo)
-                            return (jnp.where(adv, k_p, k_lo), out_lo,
-                                    jnp.where(do & (~fits), k_p, k_hi),
-                                    err)
+                            return (it + 1, jnp.where(fits, k_p, k_lo),
+                                    out_lo, jnp.where(fits, k_hi, k_p), err)
 
-                        k_lo, out, _, _ = jax.lax.fori_loop(
-                            0, 4, probe,
-                            (jnp.int32(0), out_empty, n_ok + 1,
-                             jnp.asarray(0.0, dt)))
+                        _, k_lo, out, _, _ = jax.lax.while_loop(
+                            probe_cond, probe,
+                            (jnp.int32(0), jnp.int32(0), out_empty,
+                             n_ok + 1, jnp.asarray(0.0, dt)))
                         no_fit = k_lo == 0
                 elif cfg.select == "bisect":
                     def probe(_, lohi):
@@ -528,7 +579,13 @@ def _rounds_padded(xp: jax.Array, n_valid: jax.Array, min_alive: jax.Array,
                               sel_idx[0], finite[0], no_fit)
             return go
 
-        if k_small < k_max:
+        if small_rounds == "only" and k_small < k_max:
+            # Compiled only by the compacted batch driver once every lane
+            # is provably inside the small regime (see docstring).
+            (dev_new, sel, alive_new, xr_new, dy, agg_new, prev_new,
+             nxt_new, impact, exact_ranked, overflowed, best_idx, finite0,
+             no_fit) = round_at(k_small, cap_b_s, cap_c_s)(None)
+        elif small_rounds and k_small < k_max:
             (dev_new, sel, alive_new, xr_new, dy, agg_new, prev_new,
              nxt_new, impact, exact_ranked, overflowed, best_idx, finite0,
              no_fit) = jax.lax.cond(
@@ -584,24 +641,90 @@ def _rounds_padded(xp: jax.Array, n_valid: jax.Array, min_alive: jax.Array,
         prev_out = jnp.where(accept, prev_new, prev)
         nxt_out = jnp.where(accept, nxt_new, nxt)
         y_out = jnp.where(accept, y + dy, y)
-        agg_out = jax.tree.map(
-            lambda new, old: jnp.where(accept, new, old), agg_new, agg)
+        tbl_out = jnp.where(accept, agg_new, tbl)
         dev_out = jnp.where(accept, dev_new, dev)
-        return (xr_out, alive_out, prev_out, nxt_out, y_out, agg_out,
+        return (xr_out, alive_out, prev_out, nxt_out, y_out, tbl_out,
                 alpha_new, dev_out, rounds + live.astype(jnp.int32),
-                done_new, blocked_new, retried_new)
+                done_new, blocked_new, retried_new, saw_c)
 
+    return cond, body
+
+
+def _rounds_init(xp: jax.Array, n_valid: jax.Array, cfg: CameoConfig):
+    """Initial rounds carry + target stat ``p0`` for one padded series
+    (plain traced function — callers jit)."""
+    dt = cfg.jdtype()
+    nb = xp.shape[0]
+    idx = jnp.arange(nb, dtype=jnp.int32)
+    n_valid = n_valid.astype(jnp.int32)
+    validm = idx < n_valid
+    xp = jnp.where(validm, xp.astype(dt), jnp.asarray(0.0, dt))
+    ny_valid = n_valid // cfg.kappa
+    y0 = aggregate_series(xp, cfg.kappa)
+    agg0 = extract_aggregates_masked(y0, cfg.lags, ny_valid,
+                                     backend=cfg.backend)
+    tbl0 = _ops.agg_to_table(agg0)
+    p0 = _stat_transform(cfg)(acf_from_aggregates(agg0, ny_valid))
     alive0 = validm
     prev0, nxt0 = alive_neighbors(alive0)
-    init = (xp, alive0, prev0, nxt0, y0, agg0, jnp.asarray(cfg.alpha, dt),
-            jnp.asarray(0.0, dt), jnp.asarray(0, jnp.int32),
-            jnp.asarray(False), jnp.zeros((nb,), bool), jnp.asarray(False))
-    (xr, alive, _, _, y, agg, _, dev, rounds, _, _, _) = jax.lax.while_loop(
-        cond, body, init)
-    stat_new = transform(acf_from_aggregates(agg, ny_valid))
+    carry = (xp, alive0, prev0, nxt0, y0, tbl0, jnp.asarray(cfg.alpha, dt),
+             jnp.asarray(0.0, dt), jnp.asarray(0, jnp.int32),
+             jnp.asarray(False), jnp.zeros((nb,), bool), jnp.asarray(False),
+             jnp.asarray(False))
+    return carry, p0
+
+
+def _rounds_result(carry, n_valid: jax.Array, p0: jax.Array,
+                   cfg: CameoConfig) -> CompressResult:
+    """Final carry → ``CompressResult`` (plain traced function)."""
+    (xr, alive, _, _, _, tbl, _, dev, rounds, _, _, _, _) = carry
+    ny_valid = n_valid.astype(jnp.int32) // cfg.kappa
+    stat_new = _stat_transform(cfg)(acf_from_aggregates(tbl, ny_valid))
     return CompressResult(
         kept=alive, xr=xr, deviation=dev, n_kept=jnp.sum(alive),
         iters=rounds, stat_orig=p0, stat_new=stat_new)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _rounds_padded(xp: jax.Array, n_valid: jax.Array, min_alive: jax.Array,
+                   eps: jax.Array, cfg: CameoConfig) -> CompressResult:
+    """Rounds mode over a zero-padded bucket ``xp [nb]`` with runtime valid
+    length ``n_valid`` — one compiled program per (bucket, cfg), running the
+    whole elimination to completion in a single ``lax.while_loop``."""
+    carry, p0 = _rounds_init(xp, n_valid, cfg)
+    cond, body = _round_fns(cfg, xp.shape[0], n_valid, min_alive, eps, p0)
+    final = jax.lax.while_loop(cond, body, carry)
+    return _rounds_result(final, n_valid, p0, cfg)
+
+
+def _rounds_chunk(carry, n_valid, min_alive, eps, p0, cfg: CameoConfig,
+                  budget: int, tier_c: bool = True, tier_cond: bool = True,
+                  small_rounds="cond"):
+    """Advance the rounds loop by at most ``budget`` rounds.
+
+    Returns ``(carry', live)`` where ``live`` is the per-lane continuation
+    flag (True while the loop would keep going).  The chunk-step counter is
+    a scalar shared across vmapped lanes, so a batched chunk stops early
+    the moment every lane is done — finished lanes inside a chunk execute
+    the body as exact no-ops (the same ``live`` gating that makes vmapped
+    results bit-identical to per-series runs).
+    """
+    nb = carry[0].shape[0]
+    cond, body = _round_fns(cfg, nb, n_valid, min_alive, eps, p0,
+                            tier_c=tier_c, tier_cond=tier_cond,
+                            small_rounds=small_rounds)
+
+    def ccond(tc):
+        t, c = tc
+        return (t < budget) & cond(c)
+
+    def cbody(tc):
+        t, c = tc
+        return t + 1, body(c)
+
+    _, out = jax.lax.while_loop(
+        ccond, cbody, (jnp.asarray(0, jnp.int32), carry))
+    return out, cond(out)
 
 
 def compress_rounds(x: jax.Array, cfg: CameoConfig, *,
@@ -814,6 +937,171 @@ def compress(x, cfg: CameoConfig) -> CompressResult:
     raise ValueError(f"unknown mode {cfg.mode!r}")
 
 
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _batch_init(xps, n_valid, cfg: CameoConfig):
+    return jax.vmap(lambda x, nv: _rounds_init(x, nv, cfg))(xps, n_valid)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("cfg", "budget", "tier_c", "small"))
+def _batch_chunk(carry, n_valid, min_alive, eps, p0, cfg: CameoConfig,
+                 budget: int, tier_c: bool = True, small="cond"):
+    # Batched chunks always compile with tier_cond=False: under vmap the
+    # empty-tier `lax.cond` lowers to a select over both branches and costs
+    # more than running the ranking pass unconditionally.
+    return jax.vmap(
+        lambda c, nv, ma, ep, p: _rounds_chunk(c, nv, ma, ep, p, cfg, budget,
+                                               tier_c=tier_c, tier_cond=False,
+                                               small_rounds=small)
+    )(carry, n_valid, min_alive, eps, p0)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("cfg", "budget", "tier_c", "small"))
+def _batch_chunk_gathered(carry, consts, sel, cfg: CameoConfig,
+                          budget: int, tier_c: bool = True, small="cond"):
+    """One fused super-round for a compacted lane subset: gather the lanes
+    named by ``sel`` out of the full carry, advance them ``budget`` rounds,
+    and scatter the results back — all in one compiled program, so the host
+    driver pays a single dispatch per super-round instead of two eager
+    tree-sized gather/scatter passes.  Padding duplicates in ``sel`` (the
+    pow-2 bucket fill) recompute the same lane deterministically, so the
+    duplicate scatter writes are value-identical and order-independent."""
+    sub = jax.tree.map(lambda a: a[sel], carry)
+    subc = jax.tree.map(lambda a: a[sel], consts)
+    sub, live = jax.vmap(
+        lambda c, nv, ma, ep, p: _rounds_chunk(c, nv, ma, ep, p, cfg, budget,
+                                               tier_c=tier_c, tier_cond=False,
+                                               small_rounds=small)
+    )(sub, *subc)
+    carry = jax.tree.map(lambda full, s: full.at[sel].set(s), carry, sub)
+    return carry, live
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _batch_result(carry, n_valid, p0, cfg: CameoConfig):
+    return jax.vmap(lambda c, nv, p: _rounds_result(c, nv, p, cfg))(
+        carry, n_valid, p0)
+
+
+OBS.register_jit("cameo.batch_init", _batch_init)
+OBS.register_jit("cameo.batch_chunk", _batch_chunk)
+OBS.register_jit("cameo.batch_result", _batch_result)
+
+# Rounds advanced per compacted super-round: small enough that finished
+# lanes drop out of the working set quickly, large enough that the host
+# sync + gather/scatter per super-round stays amortized.
+_BATCH_CHUNK_ROUNDS = 8
+
+
+def _next_pow2(k: int) -> int:
+    return 1 << max(0, (int(k) - 1)).bit_length()
+
+
+def _compress_batch_compacted(xs: jax.Array, cfg: CameoConfig,
+                              pad_to: Optional[int]) -> CompressResult:
+    """Host-driven lane-compacted batch: the jitted chunk program advances
+    every lane up to ``_BATCH_CHUNK_ROUNDS`` rounds, the host reads the
+    per-lane live flags, and the next super-round gathers only the still-
+    live lanes into the smallest power-of-two bucket (padded by duplicating
+    a live lane, whose copy is discarded on scatter-back).  Finished lanes
+    stop paying for the round body entirely — under plain vmap they execute
+    both branches of every round conditional until the slowest lane drains.
+
+    Per-lane math is untouched (same ``_round_fns`` body), so results stay
+    bit-identical to per-series ``compress_rounds`` runs; the differential
+    harness in ``tests/test_backend.py`` pins that.
+    """
+    dt = cfg.jdtype()
+    B, n = xs.shape
+    nb = _round_bucket(max(n, int(pad_to or 0)), cfg)
+    xp = jnp.asarray(xs, dt)
+    if nb > n:
+        xp = jnp.pad(xp, ((0, 0), (0, nb - n)))
+    min_alive, eps = _halting_params(n, cfg)
+    nv = jnp.full((B,), n, jnp.int32)
+    ma = jnp.full((B,), min_alive, jnp.int32)
+    ep = jnp.full((B,), eps, dt)
+    carry, p0 = _batch_init(xp, nv, cfg)
+    consts = (nv, ma, ep, p0)
+
+    live = np.ones(B, bool)
+    occ_active = occ_slots = 0
+    # Start on the program with the wide-window ranking tier compiled out —
+    # under vmap the elided tier would otherwise run every round for every
+    # lane, empty or not.  The first chunk whose body actually reaches the
+    # tier (saw_c carry flag) is replayed from its saved carry on the full
+    # program; spans only grow, so the switch is one-way and the replayed
+    # trajectory is bit-identical to a per-series run.
+    need_c = cfg.rank == "single"
+    # The small-rounds cond (see _round_fns) runs both branches under vmap,
+    # so chunks start on the dual-branch program and switch — one-way — to
+    # the small-instantiation-only program once every live lane's candidate
+    # budget is provably pinned at or below k_small: k_cap is bounded by
+    # min(int(cfg.alpha * n_alive), n_alive - min_alive), n_alive only
+    # shrinks, and alpha never exceeds cfg.alpha, so the regime is
+    # absorbing and the switched trajectory stays bit-identical to the
+    # serial cond's taken branch.
+    k_max = max(1, min(int(cfg.alpha * nb), nb - 2))
+    k_small = max(8, min(k_max, 32))
+    small = "cond"
+
+    def all_small(lanes):
+        if small == "only" or k_small >= k_max:
+            return small
+        n_alive = np.asarray(jnp.sum(carry[1][lanes], axis=-1))
+        ma_l = np.asarray(ma)[lanes]
+        bound = np.minimum(
+            (np.asarray(cfg.alpha, dt) *
+             n_alive.astype(dt)).astype(np.int32),
+            (n_alive - ma_l).astype(np.int32))
+        return "only" if bool(np.all(bound <= k_small)) else "cond"
+
+    while live.any():
+        active = np.nonzero(live)[0]
+        na = len(active)
+        bucket = min(B, _next_pow2(na))
+        saved = carry
+        if bucket == B:
+            # every lane live: no gather/scatter, run the chunk in place
+            small = all_small(active)
+            carry, sub_live = _batch_chunk(carry, *consts, cfg=cfg,
+                                           budget=_BATCH_CHUNK_ROUNDS,
+                                           tier_c=need_c, small=small)
+            if not need_c and bool(np.asarray(carry[12]).any()):
+                need_c = True
+                carry, sub_live = _batch_chunk(saved, *consts, cfg=cfg,
+                                               budget=_BATCH_CHUNK_ROUNDS,
+                                               tier_c=True, small=small)
+            live[:] = np.asarray(sub_live)
+        else:
+            sel = np.concatenate(
+                [active, np.full(bucket - na, active[0])])
+            sel_j = jnp.asarray(sel, jnp.int32)
+            small = all_small(active)
+            carry, sub_live = _batch_chunk_gathered(
+                carry, consts, sel_j, cfg=cfg,
+                budget=_BATCH_CHUNK_ROUNDS, tier_c=need_c, small=small)
+            if not need_c and bool(np.asarray(carry[12][sel_j]).any()):
+                need_c = True
+                carry, sub_live = _batch_chunk_gathered(
+                    saved, consts, sel_j, cfg=cfg,
+                    budget=_BATCH_CHUNK_ROUNDS, tier_c=True, small=small)
+            live[active] = np.asarray(sub_live)[:na]
+        occ_active += na
+        occ_slots += bucket
+
+    res = _batch_result(carry, nv, p0, cfg)
+    if OBS.enabled:
+        OBS.inc("cameo.batch_rounds_total",
+                int(np.asarray(jnp.sum(res.iters))))
+        OBS.gauge("cameo.batch_lane_occupancy",
+                  occ_active / occ_slots if occ_slots else 1.0)
+    if nb > n:
+        res = res._replace(kept=res.kept[:, :n], xr=res.xr[:, :n])
+    return res
+
+
 def compress_batch(xs, cfg: CameoConfig, mesh=None,
                    axis: str = "data", *,
                    pad_to: Optional[int] = None) -> CompressResult:
@@ -821,10 +1109,13 @@ def compress_batch(xs, cfg: CameoConfig, mesh=None,
 
     ``xs`` is ``[B, n]`` (B independent series of equal length); returns a
     ``CompressResult`` whose leaves carry a leading batch axis.  Built on the
-    TPU-native ``rounds`` mode: per-series results are bit-identical to
-    ``compress_rounds(xs[b], cfg)`` (the round loop no-ops for series that
-    finish early while the batch drains).  With ``mesh`` given, the batch is
-    additionally sharded over ``mesh.shape[axis]`` devices via ``shard_map``
+    ``rounds`` mode: per-series results are bit-identical to
+    ``compress_rounds(xs[b], cfg)``.  Off-TPU the batch runs lane-compacted
+    (see :func:`_compress_batch_compacted`): finished lanes are dropped from
+    the working set between jitted chunks, so a mixed-convergence batch pays
+    for the slowest lane only at its own width.  On TPU (or with ``mesh``)
+    the whole loop stays device-resident under vmap/``shard_map`` — with
+    ``mesh`` given, the batch is sharded over ``mesh.shape[axis]`` devices
     (B must divide evenly); each device vmaps its local shard.
     """
     xs = jnp.asarray(xs)
@@ -836,9 +1127,11 @@ def compress_batch(xs, cfg: CameoConfig, mesh=None,
     if cfg.kappa > 1:
         n = (xs.shape[1] // cfg.kappa) * cfg.kappa
         xs = xs[:, :n]
-    batched = jax.vmap(lambda x: compress_rounds(x, cfg, pad_to=pad_to))
     if mesh is None:
-        return batched(xs)
+        if xs.shape[0] > 1 and jax.default_backend() != "tpu":
+            return _compress_batch_compacted(xs, cfg, pad_to)
+        return jax.vmap(lambda x: compress_rounds(x, cfg, pad_to=pad_to))(xs)
+    batched = jax.vmap(lambda x: compress_rounds(x, cfg, pad_to=pad_to))
     from jax.sharding import PartitionSpec as P
     from repro import sharding as shd
     T = mesh.shape[axis]

@@ -43,9 +43,14 @@ from repro.kernels import ref as _ref
 # reference form: vectorized deviation curve
 # ---------------------------------------------------------------------------
 
-def _moment_deltas(d, ctx, ystarts, ny, *, L: int):
+def _moment_deltas(d, ctx, ystarts, ny, *, L: int, form: str = "auto"):
     """Five per-lag aggregate deltas ``[K, 5, L]`` for independent windowed
     deltas ``d [K, Wy]`` given their series context ``ctx [K, Wy + 2L]``.
+
+    ``form`` picks the bilinear-term lowering: ``"einsum"`` (shift-basis
+    contraction), ``"roll"`` (one batched roll-and-reduce over the lag
+    axis), ``"slices"`` (L-unrolled static slices), or ``"auto"`` (roll on
+    CPU, einsum elsewhere — see the comment at the term).
 
     Relies on the padded-bucket discipline — the series (and hence ``ctx``)
     is zero beyond ``ny`` and before 0, and deltas only touch valid
@@ -70,11 +75,62 @@ def _moment_deltas(d, ctx, ystarts, ny, *, L: int):
     dsxl = cdz[:, -1:] - jnp.take_along_axis(cdz, c_tail, axis=1)
     dsxl2 = cez[:, -1:] - jnp.take_along_axis(cez, c_tail, axis=1)
 
-    # Bilinear term, one contiguous static slice per lag: materializing the
-    # three [K, Wy, L] gathered context tensors costs more than the
-    # multiply-reduce itself (XLA CPU/TPU gathers are far slower than
-    # static slices), so unroll the (static, small) lag axis into fused
-    # slice-multiply-sum steps instead.
+    # Bilinear term, three equivalent lowerings.  As a contraction, the
+    # lag-shifted context reads are three gathers against a constant
+    # [Wy, L] shift basis, summed and contracted in one einsum — O(1)
+    # emitted ops, the right shape wherever gathers run at memory speed
+    # (TPU).  XLA's CPU emitter however runs that gather an order of
+    # magnitude slower than contiguous reads (measured ~8ms/window on the
+    # stream bench), and the historical L-unrolled static-slice chain is
+    # dispatch-bound on the legacy runtime (~1.5us per emitted op, 2L+ ops
+    # per call) — so on CPU the lag axis is one *batched* roll-and-reduce:
+    # a single vmapped op the emitter fuses into one [L, K, Wy] pass.  All
+    # forms are pinned against each other by `tests/test_contractions.py`.
+    d_pad = jnp.pad(d, ((0, 0), (0, L)))
+    if form == "auto":
+        form = "roll" if jax.default_backend() == "cpu" else "einsum"
+    if form == "slices":
+        dsxx = jnp.stack(
+            [jnp.sum(d * (ctx[:, L + lag:L + lag + Wy]
+                          + ctx[:, L - lag:L - lag + Wy]
+                          + d_pad[:, lag:lag + Wy]), axis=1)
+             for lag in range(1, L + 1)], axis=1)
+    elif form == "roll":
+        # No wraparound reaches the kept [:Wy] prefix: the largest shift is
+        # L + lag <= 2L against width Wy + 2L (and lag <= L against the
+        # d_pad width Wy + L), so no validity mask is needed.
+        def lag_term(lag):
+            g = (jnp.roll(ctx, -(L + lag), axis=1)[:, :Wy]
+                 + jnp.roll(ctx, -(L - lag), axis=1)[:, :Wy]
+                 + jnp.roll(d_pad, -lag, axis=1)[:, :Wy])
+            return jnp.sum(d * g, axis=1)
+
+        dsxx = jax.vmap(lag_term, out_axes=1)(l)
+    else:
+        w = jnp.arange(Wy)
+        shift = w[:, None] + l[None, :]                   # [Wy, L]: w + lag
+        G = ctx[:, L + shift] + ctx[:, (L + w[:, None]) - l[None, :]] \
+            + d_pad[:, shift]
+        dsxx = jnp.einsum("kw,kwl->kl", d, G)
+    return jnp.stack([dsx, dsxl, dsx2, dsxl2, dsxx], axis=1)  # [K, 5, L]
+
+
+def _moment_deltas_ref(d, ctx, ystarts, ny, *, L: int):
+    """Loop oracle for :func:`_moment_deltas` — the historical L-unrolled
+    slice-multiply-sum form of the bilinear term, kept for parity tests of
+    the einsum contraction (`tests/test_contractions.py`)."""
+    K, Wy = d.shape
+    l = jnp.arange(1, L + 1)
+    z_at = ctx[:, L:L + Wy]
+    e = d * (2.0 * z_at + d)
+    cdz = jnp.pad(jnp.cumsum(d, axis=1), ((0, 0), (1, 0)))
+    cez = jnp.pad(jnp.cumsum(e, axis=1), ((0, 0), (1, 0)))
+    c_head = jnp.clip(ny - l[None, :] - ystarts[:, None], 0, Wy)
+    c_tail = jnp.clip(l[None, :] - ystarts[:, None], 0, Wy)
+    dsx = jnp.take_along_axis(cdz, c_head, axis=1)
+    dsx2 = jnp.take_along_axis(cez, c_head, axis=1)
+    dsxl = cdz[:, -1:] - jnp.take_along_axis(cdz, c_tail, axis=1)
+    dsxl2 = cez[:, -1:] - jnp.take_along_axis(cez, c_tail, axis=1)
     d_pad = jnp.pad(d, ((0, 0), (0, L)))
     dsxx = jnp.stack(
         [jnp.sum(d * (ctx[:, L + lag:L + lag + Wy]
@@ -108,6 +164,17 @@ def window_acf_rows(y, dyws, ystarts, agg_table, ny, *, L: int):
     m = (ny - l).astype(dt)[None, :]
     return _ref.acf_from_moments(cum[:, 0], cum[:, 1], cum[:, 2],
                                  cum[:, 3], cum[:, 4], m)
+
+
+def window_rows(cfg, y, dyws, ystarts, agg_table, ny, *, L: int):
+    """Backend-dispatched tier-impact rows: the Pallas kernel on a real TPU,
+    the einsum contraction elsewhere (same eligibility rule as
+    :func:`prefix_devs`)."""
+    from repro.kernels import ops as _ops
+    if _ops._kernel_eligible(cfg.backend, cfg.stat, cfg.measure) \
+            and not _ops.interpret_mode():
+        return window_rows_pallas(y, dyws, ystarts, agg_table, ny, L=L)
+    return window_acf_rows(y, dyws, ystarts, agg_table, ny, L=L)
 
 
 def prefix_moment_rows(y, dyws, ystarts, ok, ny, *, L: int):
@@ -152,6 +219,87 @@ def prefix_acf_rows_ref(y, dyws, ystarts, ok, agg_table, ny, *, L: int):
     m = (ny - l).astype(dt)[None, :]
     return _ref.acf_from_moments(cum[:, 0], cum[:, 1], cum[:, 2],
                                  cum[:, 3], cum[:, 4], m)
+
+
+# ---------------------------------------------------------------------------
+# pallas form: independent per-candidate Eq. 9 rows
+# ---------------------------------------------------------------------------
+
+def _window_rows_kernel(dy_ref, s_ref, y_pad_ref, agg_ref, ny_ref, out_ref,
+                        *, K: int, Wy: int, L: int):
+    """Per-candidate trial ACF rows ``[K, L]`` — the kernel twin of
+    :func:`window_acf_rows` (tier-impact ranking).  Candidates are
+    independent, so each grid-free ``k`` step reads its ``Wy + 2L`` context
+    straight from the padded series and never mutates shared state."""
+    dtype = y_pad_ref.dtype
+    ny = ny_ref[0]
+    tiny = jnp.asarray(1e-30, dtype)
+
+    def step(k, _):
+        s = s_ref[k]
+        d = dy_ref[k, :].reshape(1, Wy)
+        idx = s + jax.lax.broadcasted_iota(jnp.int32, (1, Wy), 1)
+        jj = jax.lax.broadcasted_iota(jnp.int32, (1, Wy), 1)
+        z_at = y_pad_ref[pl.dslice(s + L, Wy)].reshape(1, Wy)
+        e = d * (2.0 * z_at + d)
+
+        def lag_body(lag, row):
+            lm1 = lag - 1
+            z_f = y_pad_ref[pl.dslice(s + L + lag, Wy)].reshape(1, Wy)
+            z_b = y_pad_ref[pl.dslice(s + L - lag, Wy)].reshape(1, Wy)
+            head = (idx <= ny - 1 - lag).astype(dtype)
+            tail = (idx >= lag).astype(dtype)
+            d_f = jnp.where(jj + lag < Wy, jnp.roll(d, -lag, axis=1), 0.0)
+            sx = agg_ref[0, lm1] + jnp.sum(d * head)
+            sxl = agg_ref[1, lm1] + jnp.sum(d * tail)
+            sx2 = agg_ref[2, lm1] + jnp.sum(e * head)
+            sxl2 = agg_ref[3, lm1] + jnp.sum(e * tail)
+            sxx = agg_ref[4, lm1] + jnp.sum(
+                d * (z_f * head + z_b * tail + d_f * head))
+            m = (ny - lag).astype(dtype)
+            num = m * sxx - sx * sxl
+            den2 = (m * sx2 - sx * sx) * (m * sxl2 - sxl * sxl)
+            den = jnp.sqrt(jnp.maximum(den2, tiny))
+            rho = jnp.where(den2 > tiny, num / den, jnp.zeros_like(num))
+            return jax.lax.dynamic_update_slice(
+                row, rho.reshape(1, 1), (0, lm1))
+
+        row = jax.lax.fori_loop(
+            1, L + 1, lag_body, jnp.zeros((1, L), dtype))
+        out_ref[pl.dslice(k, 1), :] = row
+        return 0
+
+    jax.lax.fori_loop(0, K, step, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("L", "interpret"))
+def window_rows_pallas(y, dyws, ystarts, agg_table, ny, *, L: int,
+                       interpret: bool = False):
+    """Pallas form of :func:`window_acf_rows`: per-candidate Eq. 9 ACF rows
+    ``[K, L]``.  TPU decision path (interpret mode for parity tests only —
+    same convention as :func:`prefix_devs_pallas`)."""
+    K, Wy = dyws.shape
+    nyb = y.shape[0]
+    dtype = y.dtype
+    y_pad = jnp.pad(y, (L, L + Wy))
+    starts = jnp.clip(ystarts, 0, nyb - 1).astype(jnp.int32)
+    ny_arr = jnp.asarray(ny, jnp.int32).reshape(1)
+
+    kernel = functools.partial(_window_rows_kernel, K=K, Wy=Wy, L=L)
+    return pl.pallas_call(
+        kernel,
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec(dyws.shape, lambda i: (0, 0)),
+            pl.BlockSpec(starts.shape, lambda i: (0,)),
+            pl.BlockSpec(y_pad.shape, lambda i: (0,)),
+            pl.BlockSpec(agg_table.shape, lambda i: (0, 0)),
+            pl.BlockSpec(ny_arr.shape, lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((K, L), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((K, L), dtype),
+        interpret=interpret,
+    )(dyws.astype(dtype), starts, y_pad, agg_table, ny_arr)
 
 
 # ---------------------------------------------------------------------------

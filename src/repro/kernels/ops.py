@@ -121,7 +121,7 @@ def lag_dot(a, L: int, *, b=None, halo=None, block: int = 4096,
         b_ext = jnp.concatenate([b_ext, halo[:L].astype(b_ext.dtype)])
     else:
         b_ext = jnp.pad(b_ext, (0, L))
-    return _ref.lag_xdot_ref(a, b_ext, L=L)
+    return _ref.lag_xdot(a, b_ext, L=L)
 
 
 # ---------------------------------------------------------------------------

@@ -57,6 +57,20 @@ def measure_rows(rows: jax.Array, p0: jax.Array, measure: str) -> jax.Array:
 KERNEL_MEASURES = ("mae", "rmse", "cheb")
 
 
+def as_table(agg) -> jax.Array:
+    """The packed ``[5, L]`` moment table for any aggregate structure
+    (``core.acf.Aggregates`` NamedTuple or an already-stacked array)."""
+    if isinstance(agg, jax.Array) or isinstance(agg, jnp.ndarray):
+        return agg
+    return jnp.stack([agg[0], agg[1], agg[2], agg[3], agg[4]])
+
+
+def acf_from_table(rows: jax.Array, m: jax.Array) -> jax.Array:
+    """Eq. 2 over packed moment rows ``[..., 5, L]`` → ACF ``[..., L]``."""
+    return acf_from_moments(rows[..., 0, :], rows[..., 1, :], rows[..., 2, :],
+                            rows[..., 3, :], rows[..., 4, :], m)
+
+
 # ---------------------------------------------------------------------------
 # Eq. 8 — hypothetical ACF after a single-point delta (Algorithm 2 ranking)
 # ---------------------------------------------------------------------------
@@ -83,11 +97,15 @@ def acf_after_single_delta(agg, y: jax.Array, idx: jax.Array,
     d = dval[:, None]                                      # [P, 1]
     e = (dval * (2.0 * y_at + dval))[:, None]              # [P, 1]
 
-    sx = agg[0][None, :] + d * head
-    sxl = agg[1][None, :] + d * tail
-    sx2 = agg[2][None, :] + e * head
-    sxl2 = agg[3][None, :] + e * tail
-    sxx = agg[4][None, :] + d * (y_fwd * head + y_bwd * tail)
+    # Five flat [P, L] moment rows: a packed [P, 5, L] stack would be two
+    # fewer dispatches but materializes 5 PL elements through a concat the
+    # legacy CPU runtime doesn't fuse — measurably slower at P = nb.
+    tab = as_table(agg)
+    sx = tab[0][None, :] + d * head
+    sxl = tab[1][None, :] + d * tail
+    sx2 = tab[2][None, :] + e * head
+    sxl2 = tab[3][None, :] + e * tail
+    sxx = tab[4][None, :] + d * (y_fwd * head + y_bwd * tail)
 
     m = (ny - l).astype(dtype)[None, :]
     return acf_from_moments(sx, sxl, sx2, sxl2, sxx, m)
@@ -123,19 +141,45 @@ def _window_delta_acf(agg, dwins, abs_t, y_at, y_fwd, y_bwd, *, ny: int):
     d = dwins                                               # [P, W]
     e = d * (2.0 * y_at + d)
 
+    l = jnp.arange(1, L + 1)
+    j = jnp.arange(W)
+    d_padded = jnp.pad(d, ((0, 0), (0, L)))
+    d_fwd = d_padded[:, j[:, None] + l[None, :]]            # [P, W, L]
+
+    # All five Eq. 9 moment deltas as one [P, 5, W] x [P, 5, W, L]
+    # contraction: the per-row weights are d or e, the per-row bases the
+    # head/tail masks (plus the shifted-context row for the bilinear term).
+    coeff = jnp.stack([d, d, e, e, d], axis=1)              # [P, 5, W]
+    basis = jnp.stack(
+        [head, tail, head, tail,
+         (y_fwd + d_fwd) * head + y_bwd * tail], axis=1)    # [P, 5, W, L]
+    rows = as_table(agg)[None] + jnp.einsum("paw,pawl->pal", coeff, basis)
+
+    m = (ny - l).astype(dtype)[None, :]
+    return acf_from_table(rows, m)
+
+
+def _window_delta_acf_ref(agg, dwins, abs_t, y_at, y_fwd, y_bwd, *, ny: int):
+    """Per-moment-einsum oracle for :func:`_window_delta_acf` (the historical
+    form with one contraction per moment row), kept for parity tests of the
+    fused ``[P, 5, W] x [P, 5, W, L]`` contraction."""
+    L = agg[0].shape[-1]
+    dtype = y_at.dtype
+    head, tail = head_tail_masks(abs_t, ny, L, dtype)       # [P, W, L]
+    d = dwins
+    e = d * (2.0 * y_at + d)
     dsx = jnp.einsum("pw,pwl->pl", d, head)
     dsxl = jnp.einsum("pw,pwl->pl", d, tail)
     dsx2 = jnp.einsum("pw,pwl->pl", e, head)
     dsxl2 = jnp.einsum("pw,pwl->pl", e, tail)
-
     l = jnp.arange(1, L + 1)
+    W = dwins.shape[1]
     j = jnp.arange(W)
     d_padded = jnp.pad(d, ((0, 0), (0, L)))
     d_fwd = d_padded[:, j[:, None] + l[None, :]]            # [P, W, L]
     dsxx = jnp.einsum(
         "pw,pwl->pl", d, y_fwd * head + y_bwd * tail) + jnp.einsum(
         "pw,pwl->pl", d, d_fwd * head)
-
     m = (ny - l).astype(dtype)[None, :]
     return acf_from_moments(
         agg[0][None, :] + dsx, agg[1][None, :] + dsxl,
@@ -210,12 +254,21 @@ def acf_window_impact_ref(y_rows, dwins, starts_abs, agg_table, p0, *,
 # ---------------------------------------------------------------------------
 
 @functools.partial(jax.jit, static_argnames=("L",))
-def lag_xdot_ref(a, b_ext, *, L: int):
-    """``out[l-1] = sum_{t < m} a[t] * b_ext[t + l]`` for l in 1..L.
+def lag_xdot(a, b_ext, *, L: int):
+    """``out[l-1] = sum_{t < m} a[t] * b_ext[t + l]`` for l in 1..L, as one
+    ``[m] x [m, L]`` contraction against a constant shift basis.
 
     ``b_ext`` has length ``m + L`` (the caller appends an L-point halo —
     zeros for a plain series, the next chunk's head for partitioned work).
     """
+    m = a.shape[0]
+    shifted = b_ext[jnp.arange(m)[:, None] + jnp.arange(1, L + 1)[None, :]]
+    return a @ shifted
+
+
+@functools.partial(jax.jit, static_argnames=("L",))
+def lag_xdot_ref(a, b_ext, *, L: int):
+    """Loop oracle for :func:`lag_xdot` (one dynamic slice per lag)."""
     m = a.shape[0]
 
     def one(l):
