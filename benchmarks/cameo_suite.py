@@ -754,6 +754,18 @@ def bench_stream(full=False):
              f"pad_hits={oc.get('stream.pad_to_bucket_hits', 0)},"
              f"drains={oc.get('stream.queue_drains', 0)},"
              f"watermark={osnap['recompiles']['total']}")
+        # group-commit ack latency: the time a façade push spends getting
+        # its chunk journaled (the durability handshake), straight from
+        # the production ``ingest.ack_seconds`` histogram of the same
+        # telemetry pass, alongside the journal's fsync amortization
+        ah = osnap["histograms"].get("ingest.ack_seconds", {})
+        fh = osnap["histograms"].get("wal.fsync_seconds", {})
+        emit(f"stream.wal_ack_latency.{ds}", 0.0,
+             f"ack_p50={ah.get('p50', 0.0) * 1e6:.0f}us,"
+             f"ack_p95={ah.get('p95', 0.0) * 1e6:.0f}us,"
+             f"records={oc.get('wal.records', 0)},"
+             f"group_commits={oc.get('wal.group_commits', 0)},"
+             f"fsync_p95={fh.get('p95', 0.0) * 1e6:.0f}us")
         # compile cost rides in its own row so the ledger keeps it visible
         # without polluting the throughput summary statistics
         rows.append(dict(
@@ -769,6 +781,14 @@ def bench_stream(full=False):
             pad_to_bucket_hits=oc.get("stream.pad_to_bucket_hits", 0),
             queue_drains=oc.get("stream.queue_drains", 0),
             recompile_watermark=osnap["recompiles"]["total"]))
+        rows.append(dict(
+            section="stream_wal", dataset=ds,
+            ack_p50_s=ah.get("p50"), ack_p95_s=ah.get("p95"),
+            wal_records=oc.get("wal.records", 0),
+            wal_append_bytes=oc.get("wal.append_bytes", 0),
+            wal_group_commits=oc.get("wal.group_commits", 0),
+            wal_checkpoints=oc.get("wal.checkpoints", 0),
+            fsync_p95_s=fh.get("p95")))
         rows.append(dict(
             section="stream", dataset=ds, n=n, window=wlen, chunk=chunk,
             eps=eps, bytes_equal=bytes_equal, oneshot_secs=oneshot_s,

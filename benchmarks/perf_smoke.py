@@ -19,7 +19,11 @@ Runs a small synthetic fixture (seconds, not minutes) and compares
 * ``obs_overhead``: streamed compressor ingest with the ``repro.obs``
   telemetry registry enabled vs disabled — gated as an **absolute** floor
   (``CAMEO_OBS_OVERHEAD_FLOOR``, default 0.97: enabled must stay within
-  3% of disabled), since the telemetry contract is machine-independent.
+  3% of disabled), since the telemetry contract is machine-independent, and
+* ``wal_overhead``: façade streamed ingest with the write-ahead journal
+  on (default group commit) vs off — also an **absolute** floor
+  (``CAMEO_WAL_OVERHEAD_FLOOR``, default 0.90: journaled ingest must stay
+  within ~10% of journal-off).
 
 Metrics present in only one of {baseline, current} are *skipped with a
 note*, not failed — new rows land in the same PR as their code and are
@@ -95,6 +99,11 @@ PER_METRIC_TOLERANCE = {"pushdown_warm_speedup": 0.30,
 # disabled), not relative to the committed baseline — the contract is
 # "telemetry is nearly free", not "as cheap as last time".
 OBS_OVERHEAD_FLOOR = float(os.environ.get("CAMEO_OBS_OVERHEAD_FLOOR", "0.97"))
+# wal_overhead is the journal-off/journal-on façade ingest time ratio,
+# also gated as an *absolute* floor: group commit must amortize the
+# write-ahead journal to within ~10% of journal-off ingest (0.90 floor),
+# or the durability default is too expensive to leave on.
+WAL_OVERHEAD_FLOOR = float(os.environ.get("CAMEO_WAL_OVERHEAD_FLOOR", "0.90"))
 # round_body_eqns counts equations in the *lowered* rounds-mode round body
 # (the while-loop the compressor spends its life in) and is gated as an
 # absolute ceiling: op count is machine-independent, and on CPU the round
@@ -203,6 +212,7 @@ def _measure() -> dict:
           f"{metrics['pushdown_warm_speedup']:.1f}x")
     metrics.update(_measure_stream(cfg))
     metrics.update(_measure_stream_compress())
+    metrics.update(_measure_wal_overhead())
     metrics.update(_measure_mvar(cfg))
     metrics.update(_measure_opcount())
     return metrics
@@ -286,8 +296,12 @@ def _measure_stream_compress() -> dict:
     x = np.asarray(make_dataset("pedestrian"), np.float64)[:n]
 
     def ingest(path):
+        # wal off: this row gates the *telemetry* contract at 3%, and the
+        # journal's footer-checkpoint fsyncs add millisecond-scale jitter
+        # that would swamp it (durability cost has its own absolute gate,
+        # ``wal_overhead``)
         sc = StreamingCompressor(cfg, wlen)
-        with CameoStore.create(path, block_len=1024) as store:
+        with CameoStore.create(path, block_len=1024, wal=False) as store:
             sess = store.open_stream("s", cfg)
             for lo in range(0, n, 731):
                 for w in sc.push(x[lo:lo + 731]):
@@ -298,6 +312,8 @@ def _measure_stream_compress() -> dict:
 
     was_enabled = obs.enabled()
     obs.disable()
+    fsync_prev = os.environ.get("CAMEO_FSYNC")
+    os.environ["CAMEO_FSYNC"] = "0"   # same jitter argument as wal=False
     try:
         with tempfile.TemporaryDirectory() as tmp:
             ingest(os.path.join(tmp, "warm.cameo"))    # compile both buckets
@@ -313,6 +329,10 @@ def _measure_stream_compress() -> dict:
             best_on = min(_best_of(ingest, os.path.join(tmp, f"o{i}.cameo"),
                                    reps=1) for i in range(3))
     finally:
+        if fsync_prev is None:
+            os.environ.pop("CAMEO_FSYNC", None)
+        else:
+            os.environ["CAMEO_FSYNC"] = fsync_prev
         obs.enable() if was_enabled else obs.disable()
     assert not recompiles, \
         f"streamed ingest retraced {recompiles} program(s) after warmup — " \
@@ -323,6 +343,45 @@ def _measure_stream_compress() -> dict:
           f"{pts:.0f} pts/s (recompiles=0); obs-enabled "
           f"{best_on * 1e3:.0f}ms -> overhead ratio {overhead:.3f}")
     return {"stream_pts_per_s": pts, "obs_overhead": overhead}
+
+
+def _measure_wal_overhead() -> dict:
+    """Façade streamed ingest with the write-ahead journal on (default
+    group-commit policy) vs off (``wal=False``) over the identical
+    workload as ``_measure_stream_compress``.  The ratio off/on is gated
+    as an absolute floor (``WAL_OVERHEAD_FLOOR``): group commit must keep
+    acked-push durability within ~10% of journal-off ingest."""
+    import tempfile
+
+    from repro import api
+    from repro.core.cameo import CameoConfig
+    from repro.data.synthetic import make_dataset
+
+    cfg = CameoConfig(eps=1e-2, lags=24, mode="rounds", max_rounds=120,
+                      dtype="float64")
+    wlen = 1024
+    n = 4 * wlen + 520
+    x = np.asarray(make_dataset("pedestrian"), np.float64)[:n]
+
+    def ingest(path, use_wal):
+        ds = api.open(path, cfg, block_len=1024, stream_window=wlen,
+                      wal=use_wal)
+        w = ds.stream("s")
+        for lo in range(0, n, 731):
+            w.push(x[lo:lo + 731])
+        w.close()
+        ds.close()
+
+    with tempfile.TemporaryDirectory() as tmp:
+        ingest(os.path.join(tmp, "warm.cameo"), True)    # compile buckets
+        best_on = min(_best_of(ingest, os.path.join(tmp, f"on{i}.cameo"),
+                               True, reps=1) for i in range(3))
+        best_off = min(_best_of(ingest, os.path.join(tmp, f"off{i}.cameo"),
+                                False, reps=1) for i in range(3))
+    ratio = best_off / max(best_on, 1e-12)
+    print(f"wal overhead: journal-off {best_off * 1e3:.0f}ms journal-on "
+          f"{best_on * 1e3:.0f}ms -> ratio {ratio:.3f}")
+    return {"wal_overhead": ratio}
 
 
 def _measure_mvar(cfg) -> dict:
@@ -479,6 +538,7 @@ def _gate(metrics: dict) -> int:
         return 1
     base_native = baseline.pop("native_scan", None)
     baseline.pop("obs_overhead", None)       # gated absolutely below
+    baseline.pop("wal_overhead", None)       # gated absolutely below
     baseline.pop("round_body_eqns", None)    # gated absolutely below
     if base_native and not _scan.NATIVE:
         print("perf-smoke FAILED: the committed baseline was pinned with "
@@ -505,7 +565,7 @@ def _gate(metrics: dict) -> int:
         if cur < floor:
             failures.append(key)
     for key in sorted(set(metrics) - set(baseline)
-                      - {"obs_overhead", "round_body_eqns"}):
+                      - {"obs_overhead", "wal_overhead", "round_body_eqns"}):
         # a freshly added row whose baseline section hasn't been pinned
         # yet: new rows must be able to land in the same PR as their code,
         # so this is a skip, not a failure
@@ -537,6 +597,15 @@ def _gate(metrics: dict) -> int:
               f"(floor {OBS_OVERHEAD_FLOOR:.2f}) {status}")
         if cur < OBS_OVERHEAD_FLOOR:
             failures.append("obs_overhead")
+    # journal overhead is likewise an absolute contract: default-on
+    # durability must cost <= ~10% over journal-off ingest
+    cur = metrics.get("wal_overhead")
+    if cur is not None:
+        status = "ok" if cur >= WAL_OVERHEAD_FLOOR else "REGRESSED"
+        print(f"wal_overhead: journal-off/on ingest ratio {cur:.3f} "
+              f"(floor {WAL_OVERHEAD_FLOOR:.2f}) {status}")
+        if cur < WAL_OVERHEAD_FLOOR:
+            failures.append("wal_overhead")
     # the round-body op count is a deterministic absolute ceiling: a
     # failure means the round body regrew per-lag unrolled chains
     cur = metrics.get("round_body_eqns")

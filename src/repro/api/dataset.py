@@ -56,6 +56,7 @@ from repro.core.streaming import (
 )
 from repro.obs import OBS
 from repro.store import query as _query
+from repro.store import wal as _wal
 from repro.store.store import DEFAULT_CACHE_BYTES, CameoStore
 
 
@@ -64,7 +65,9 @@ def open(path: str, cfg: Optional[CameoConfig] = None, *,
          value_codec: str = None, entropy: str = None,
          cache_bytes: int = DEFAULT_CACHE_BYTES,
          store_residuals: bool = True,
-         stream_window: int = 4096) -> "Dataset":
+         stream_window: int = 4096, wal: bool = None,
+         wal_group_ms: float = _wal.DEFAULT_GROUP_MS,
+         wal_group_bytes: int = _wal.DEFAULT_GROUP_BYTES) -> "Dataset":
     """Open (or create) a CAMEO dataset at ``path``.
 
     ``mode`` is ``"w"`` (create), ``"r"`` (read-only) or ``"a"`` (append /
@@ -80,6 +83,13 @@ def open(path: str, cfg: Optional[CameoConfig] = None, *,
     existing file keeps the settings recorded in its footer, and passing
     *different* values in ``"r"``/``"a"`` mode raises rather than
     silently ignoring them (re-passing the matching values is fine).
+
+    Writable handles keep a per-store write-ahead journal (``wal``;
+    default on, ``CAMEO_WAL=0`` opts the process out): every
+    :meth:`StreamWriter.push` is acked once journaled, a crash never loses
+    an acked push (``mode="a"`` recovers and replays), and the fsync
+    cadence is the ``wal_group_ms`` / ``wal_group_bytes`` group-commit
+    policy (see ``store/README.md`` for the durability contract).
     """
     if mode is None:
         mode = "r" if os.path.exists(path) else "w"
@@ -91,16 +101,22 @@ def open(path: str, cfg: Optional[CameoConfig] = None, *,
         store = CameoStore.create(
             path, block_len=4096 if block_len is None else block_len,
             value_codec=value_codec or "gorilla", entropy=entropy or "auto",
-            cache_bytes=cache_bytes)
+            cache_bytes=cache_bytes, wal=wal, wal_group_ms=wal_group_ms,
+            wal_group_bytes=wal_group_bytes)
     else:
-        store = CameoStore.open(path, mode, cache_bytes=cache_bytes)
+        store = CameoStore.open(path, mode, cache_bytes=cache_bytes,
+                                wal=wal, wal_group_ms=wal_group_ms,
+                                wal_group_bytes=wal_group_bytes)
         clash = [f"{name}={want!r} (stored {getattr(store, name)!r})"
                  for name, want in (("block_len", block_len),
                                     ("value_codec", value_codec),
                                     ("entropy", entropy))
                  if want is not None and want != getattr(store, name)]
         if clash:
-            store._f.close()     # abandon without a footer rewrite
+            if store._wal is not None:   # abandon without a footer rewrite
+                store._wal.close()
+                store._wal = None
+            store._f.close()
             raise ValueError(
                 f"{path!r} was created with different store-layout "
                 f"settings: {', '.join(clash)}; layout parameters take "
@@ -239,34 +255,92 @@ class StreamWriter:
                  channels: int = 1, resume: bool = False,
                  queue_depth: int = None):
         self.sid = sid
+        self._store = store
+        self._wal = store._wal
+        # journaled-but-unreplayed pushes from a crashed run (the store's
+        # recovery scan parks them per-sid); consumed exactly once here
+        pending = (store._wal_pending.pop(sid, None)
+                   if self._wal is not None else None)
         if resume:
-            self._sess = store.open_stream(sid, ccfg, resume=True)
-            state = self._sess.restored_client_state
-            if state is None:
-                # unwind: re-stash the session state and release the slot,
-                # so a raw-store resume of the same stream still works
-                store._series[sid]["stream_state"] = self._sess._stash()
-                store._streams.pop(sid, None)
-                raise ValueError(
-                    f"series {sid!r}: stream was not opened through the "
-                    "streaming façade — no compressor state to resume")
-            self._comp = compressor_from_state(ccfg, state)
-            if queue_depth is not None:   # explicit override wins over state
-                if queue_depth < 1:
-                    raise ValueError(f"queue_depth={queue_depth} must be >= 1")
-                self._comp.queue_depth = int(queue_depth)
-        else:
-            if int(channels) > 1:
-                self._comp = MVStreamingCompressor(
-                    ccfg, window_len, channels,
-                    queue_depth=queue_depth or 1)
+            entry = store._series.get(sid)
+            if (entry is None or not entry.get("streaming")) and pending:
+                # the crashed run journaled this stream's pushes but never
+                # published a footer that catalogs it — re-create the
+                # stream from scratch and let the journal replay rebuild it
+                if pending[0].start != 0:
+                    raise IOError(
+                        f"series {sid!r}: journal replay starts at point "
+                        f"{pending[0].start}, but the catalog has no "
+                        "stream to resume — the journal lost its prefix")
+                channels = (1 if pending[0].x.ndim == 1
+                            else int(pending[0].x.shape[1]))
+                self._build_fresh(store, ccfg, sid, window_len=window_len,
+                                  with_resid=with_resid, channels=channels,
+                                  queue_depth=queue_depth)
             else:
-                self._comp = StreamingCompressor(
-                    ccfg, window_len, queue_depth=queue_depth or 1)
-            self._sess = store.open_stream(
-                sid, ccfg, with_resid=with_resid, channels=channels)
+                self._sess = store.open_stream(sid, ccfg, resume=True)
+                state = self._sess.restored_client_state
+                if state is None:
+                    # unwind: re-stash the session state and release the
+                    # slot, so a raw-store resume of the same stream still
+                    # works (and re-park the journal records)
+                    store._series[sid]["stream_state"] = self._sess._stash()
+                    store._streams.pop(sid, None)
+                    if pending:
+                        store._wal_pending[sid] = pending
+                    raise ValueError(
+                        f"series {sid!r}: stream was not opened through "
+                        "the streaming façade — no compressor state to "
+                        "resume")
+                self._comp = compressor_from_state(ccfg, state)
+                if queue_depth is not None:   # explicit override wins
+                    if queue_depth < 1:
+                        raise ValueError(
+                            f"queue_depth={queue_depth} must be >= 1")
+                    self._comp.queue_depth = int(queue_depth)
+        else:
+            self._build_fresh(store, ccfg, sid, window_len=window_len,
+                              with_resid=with_resid, channels=channels,
+                              queue_depth=queue_depth)
         self._sess.state_provider = self._comp.state_dict
         self.closed = False
+        # a fresh (non-resume) open of the same sid supersedes any crashed
+        # run's journal records: they are consumed (dropped), not replayed
+        if resume and pending:
+            self._replay(pending)
+
+    def _build_fresh(self, store, ccfg, sid, *, window_len, with_resid,
+                     channels, queue_depth):
+        if int(channels) > 1:
+            self._comp = MVStreamingCompressor(
+                ccfg, window_len, channels, queue_depth=queue_depth or 1)
+        else:
+            self._comp = StreamingCompressor(
+                ccfg, window_len, queue_depth=queue_depth or 1)
+        self._sess = store.open_stream(
+            sid, ccfg, with_resid=with_resid, channels=channels)
+
+    def _replay(self, pending) -> None:
+        """Re-feed journaled pushes a crashed run had acked.  Replay is
+        idempotent (records at or below the resumed watermark are skipped)
+        and deterministic — the regenerated blocks are byte-identical to
+        the ones the crashed run wrote or would have written."""
+        replayed = points = 0
+        for rec in pending:
+            end = rec.start + int(np.shape(rec.x)[0])
+            if end <= self._comp.n_seen:
+                continue              # footer already covers this record
+            if rec.start != self._comp.n_seen:
+                raise IOError(
+                    f"series {self.sid!r}: journal gap — replay record "
+                    f"starts at {rec.start} but the stream resumed at "
+                    f"{self._comp.n_seen}")
+            self._sess.append_windows(self._comp.push(rec.x))
+            replayed += 1
+            points += int(np.shape(rec.x)[0])
+        if OBS.enabled and replayed:
+            OBS.inc("wal.replayed_records", replayed)
+            OBS.inc("wal.replayed_points", points)
 
     # -- introspection -------------------------------------------------------
 
@@ -296,15 +370,46 @@ class StreamWriter:
 
     # -- feeding -------------------------------------------------------------
 
+    def _journal(self, chunk: np.ndarray) -> None:
+        """Write-ahead: the chunk is journaled (and acked) *before* it is
+        compressed, so a crash anywhere downstream replays it on resume.
+        Validation happens first — a rejected chunk must never ack."""
+        C = self.channels
+        if C > 1:
+            if chunk.ndim != 2 or int(chunk.shape[1]) != C:
+                raise ValueError(
+                    f"stream {self.sid!r} expects [m, {C}] chunks, got "
+                    f"shape {chunk.shape}")
+        elif chunk.ndim != 1:
+            raise ValueError(
+                f"stream {self.sid!r} expects 1-D chunks, got shape "
+                f"{chunk.shape}")
+        if chunk.shape[0]:
+            self._wal.append_push(_wal.PushRecord(
+                self.sid, self._comp.n_seen,
+                np.asarray(chunk, np.float64)))
+
     def push(self, chunk) -> int:
         """Feed a chunk (``[m]``, or ``[m, C]`` for multivariate streams);
         compresses and stores every window it closes (one burst append per
-        batched drain).  Returns the number of windows closed."""
+        batched drain).  Returns the number of windows closed.
+
+        With the journal on (the default) the push is **acked once
+        journaled**: the raw points are on their way to stable storage
+        (group-commit fsync cadence) before compression starts, and a
+        crash at any later point replays them on ``resume`` — so a return
+        from ``push`` means the data cannot be silently lost, even though
+        its compressed form may not exist yet."""
         if not OBS.enabled:
+            if self._wal is not None:
+                self._journal(np.asarray(chunk))
             wins = self._comp.push(chunk)
             self._sess.append_windows(wins)
             return len(wins)
         t0 = _perf_counter()
+        if self._wal is not None:
+            self._journal(np.asarray(chunk))
+            OBS.observe("ingest.ack_seconds", _perf_counter() - t0)
         wins = self._comp.push(chunk)
         self._sess.append_windows(wins)
         OBS.observe("ingest.push_seconds", _perf_counter() - t0)
@@ -312,12 +417,15 @@ class StreamWriter:
         return len(wins)
 
     def flush(self) -> None:
-        """Durability checkpoint: footer (incl. resume state) rewritten."""
+        """Durability checkpoint: footer (incl. resume state) rewritten,
+        fsynced, and the journal truncated to it."""
         self._sess.flush()
 
     def close(self) -> dict:
         """Flush the final partial window, finalize the series, and return
-        its catalog entry."""
+        its catalog entry.  On a journaling store the footer is also
+        published (checkpointing the journal), so the finalized series is
+        durable — not just staged for the dataset's own close."""
         self._sess.append_windows(self._comp.finish())
         if getattr(self._comp, "channels", 1) > 1:
             entry = self._sess.close(deviation=self._comp.deviation(),
@@ -325,6 +433,8 @@ class StreamWriter:
         else:
             entry = self._sess.close(deviation=self._comp.deviation())
         self.closed = True
+        if self._wal is not None:
+            self._store.flush()
         return entry
 
     def __enter__(self):

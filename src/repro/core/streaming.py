@@ -32,6 +32,15 @@ Semantics (the differential contract ``tests/test_streaming.py`` enforces):
   the global deviation is *reported*, exactly as in
   ``core/parallel.compress_partitioned_local``.
 
+Durability is the layer above's concern: this class acks nothing — a
+``push()`` return only means the points are buffered/compressed in memory.
+The serving façade (``repro.api.StreamWriter`` over a journaling store)
+journals each chunk *before* it reaches this compressor, so there an acked
+push survives a crash and replays deterministically on resume — the replay
+rides exactly the chunking-invariance contract below (re-feeding the
+journaled chunks regenerates bit-identical windows regardless of how the
+crashed run had chunked them).
+
 Window borders are always kept (``compress`` never removes endpoints), so
 windows concatenate without any interpolation segment crossing a border and
 the stream's reconstruction is the per-window reconstructions laid side by

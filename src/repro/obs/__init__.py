@@ -34,6 +34,12 @@ Metric name inventory (the production names; benchmarks reuse them)
 ``store.read.mmap_bytes|pread_bytes``  body bytes by read path
 ``store.read.coalesced_runs|blocks_fetched``  pread coalescing
 ``store.write.blocks|bytes``       block bodies appended
+``wal.records`` / ``wal.append_bytes``  write-ahead journal appends
+``wal.group_commits`` / ``wal.group_batch_records``  fsync barriers / batch size (hist)
+``wal.fsync_seconds``              group-commit fsync latency (hist)
+``wal.checkpoints`` / ``wal.recoveries``  journal truncations / crash recoveries
+``wal.replayed_records|points``    journaled pushes re-fed on resume
+``ingest.ack_seconds``             façade push journal-ack latency (hist)
 ``query.count`` / ``query.kind.<agg>`` / ``query.seconds``  query dispatch
 ``query.segments_meta|segments_edge``  pushdown-vs-decode block decisions
 ``query.meta_only|with_edge_decode``   per-query decision outcome

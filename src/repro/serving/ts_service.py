@@ -56,6 +56,7 @@ import numpy as np
 
 from repro.api.dataset import Dataset, StreamWriter
 from repro.core.cameo import CameoConfig
+from repro.store import wal as _wal
 from repro.store.query import query as _pushdown_query
 from repro.store.store import CameoStore
 
@@ -70,6 +71,13 @@ class TsServiceConfig:
     cache_bytes: int = 64 << 20   # decoded-block LRU budget (0 disables)
     stream_window: int = 4096     # default ingest_stream window length
     queue_depth: int = 1          # ingest_stream windows per batched drain
+    # write-ahead journal (crash-safe ingest; see store/README.md):
+    # None defers to CAMEO_WAL (default on); the group-commit policy
+    # amortizes one fsync over wal_group_ms of wall clock or
+    # wal_group_bytes of journal appends, whichever fills first
+    wal: Optional[bool] = None
+    wal_group_ms: float = _wal.DEFAULT_GROUP_MS
+    wal_group_bytes: int = _wal.DEFAULT_GROUP_BYTES
 
 
 class StreamIngest(StreamWriter):
@@ -110,7 +118,9 @@ class TimeSeriesService:
         self.store = CameoStore(
             path, "a" if resume else "w", block_len=self.scfg.block_len,
             value_codec=self.scfg.value_codec, entropy=self.scfg.entropy,
-            cache_bytes=self.scfg.cache_bytes)
+            cache_bytes=self.scfg.cache_bytes, wal=self.scfg.wal,
+            wal_group_ms=self.scfg.wal_group_ms,
+            wal_group_bytes=self.scfg.wal_group_bytes)
         # the façade Dataset over the same store: batched ingest routes
         # through Dataset.write_batch, so the deprecated service surface
         # stays a shim over the one documented path (identical bytes)
@@ -132,6 +142,10 @@ class TimeSeriesService:
         self.close()
 
     def close(self):
+        """Drain pending batches and close the store: the footer publish
+        is fsynced and checkpoints the write-ahead journal, so everything
+        acked — including open streams' resume state — survives the
+        shutdown even if the process dies right after."""
         self.flush()
         self.store.close()
 

@@ -31,6 +31,12 @@ internals it drives:
   appends blocks as stream windows close, serves the written prefix
   mid-stream, and resumes bit-exactly from footer-stashed state — the
   finalized file is byte-identical to the one-shot write.
+* ``store.wal``    — per-store write-ahead journal (``<path>.wal``):
+  length-prefixed checksummed records, group-commit fsync amortization,
+  footer-image checkpoints, tolerant torn-tail scan.  Writable stores
+  attach one by default (``CAMEO_WAL=0`` opts out); ``mode="a"`` opens
+  recover a crashed writer's acked pushes through it — see
+  ``store/README.md`` for the durability contract.
 * ``store.query``  — Plato-style pushdown aggregates (sum/mean/var/ACF)
   with deterministic error bounds; ``ColumnView`` projects one column of
   a multivariate series onto the same machinery, and ``query(...,
@@ -52,6 +58,7 @@ import warnings
 _EXPORTS = {
     "CameoStore": "repro.store.store",
     "StreamSession": "repro.store.store",
+    "WriteAheadLog": "repro.store.wal",
     "chimp_stream_bits": "repro.store.codec",
     "compression_ratio_bytes": "repro.store.codec",
     "encode_series_payload": "repro.store.codec",
@@ -60,7 +67,7 @@ _EXPORTS = {
 # deprecated free-function query surface: kept working, but warns — the
 # façade (repro.api Series.sum/mean/var/acf) is the documented path
 _DEPRECATED_QUERY = ("window_acf", "window_mean", "window_sum", "window_var")
-_SUBMODULES = ("blocks", "codec", "query", "store")
+_SUBMODULES = ("blocks", "codec", "query", "store", "wal")
 
 
 def _deprecated_query(name):

@@ -24,10 +24,25 @@ writers.  v2/v3 files read fine (the per-block flags byte / catalog
 ``channels`` say which layout a body uses); v1 files are refused loudly —
 reingest them.
 
-A crashed writer leaves a file without a footer; ``CameoStore.open`` refuses
-it loudly rather than serving a partial catalog.  Reopening with
-``mode="a"`` truncates the footer and keeps appending — restart-safe ingest
-for the serving layer.
+Durability contract (details + journal format: ``store/README.md``)
+-------------------------------------------------------------------
+Writable stores keep a sidecar **write-ahead journal** (``<path>.wal``,
+:mod:`repro.store.wal`; opt out with ``wal=False`` / ``CAMEO_WAL=0``).
+Acked stream pushes land in the journal *before* compression, with one
+group-commit fsync amortized over ``wal_group_ms`` / ``wal_group_bytes``
+of appends; ``flush()``/``close()`` publish the footer atomically — body
+fsynced before the tail marker that makes readers trust it — and then
+checkpoint (truncate) the journal.  A crashed writer leaves a file with a
+torn tail: a partial block, footer, or tail marker.  ``mode="r"`` still
+refuses it loudly rather than serve a partial catalog, but reopening with
+``mode="a"`` **recovers**: the store rolls back to the journal's
+checkpoint (the last published footer, byte-identical), and the acked
+pushes past it replay deterministically through the streaming façade
+(``repro.api`` / ``ingest_stream(resume=True)``) — so a crash never loses
+an acked push, and the recovered file is byte-identical to a clean run of
+the same feed.  All fsyncs honor the ``CAMEO_FSYNC=0`` escape hatch
+(tests), which downgrades power-loss durability to process-crash
+durability without changing any write ordering.
 
 Two ingest paths share the block writer:
 
@@ -86,6 +101,7 @@ import numpy as np
 
 from repro.obs import OBS
 from repro.store import codec as _codec
+from repro.store import wal as _wal
 from repro.store.blocks import (
     BlockMeta,
     build_block,
@@ -101,6 +117,21 @@ _MAGICS = {2: b"CAMEOST\x02", 3: MAGIC,   # readable format versions
            4: b"CAMEOST\x04"}             # v4 = v3 + multivariate blocks
 _TAIL = struct.Struct("<QI")          # footer offset, footer byte length
 DEFAULT_CACHE_BYTES = 64 << 20
+
+
+def _json_default(o):
+    """Footer-catalog JSON fallback: numpy scalars serialize as their exact
+    Python kind.  The old ``default=float`` coerced numpy *integers* to
+    float too — silently inexact past 2**53 (block offsets, ``n``, block
+    borders in a large store) and wrong-typed on reload."""
+    if isinstance(o, np.integer):
+        return int(o)
+    if isinstance(o, np.floating):
+        return float(o)
+    if isinstance(o, np.ndarray):
+        return o.tolist()
+    raise TypeError(
+        f"footer catalog cannot serialize {type(o).__name__!r} values")
 
 # cache-entry slots: [meta, kept_idx, kept_vals, xr_or_None, nbytes]
 _E_META, _E_IDX, _E_VALS, _E_XR, _E_NBYTES = range(5)
@@ -196,7 +227,10 @@ class CameoStore:
 
     def __init__(self, path: str, mode: str, *, block_len: int = 4096,
                  value_codec: str = "gorilla", entropy: str = "auto",
-                 cache_bytes: int = DEFAULT_CACHE_BYTES, version: int = 3):
+                 cache_bytes: int = DEFAULT_CACHE_BYTES, version: int = 3,
+                 wal: bool = None,
+                 wal_group_ms: float = _wal.DEFAULT_GROUP_MS,
+                 wal_group_bytes: int = _wal.DEFAULT_GROUP_BYTES):
         if value_codec not in _codec.VALUE_CODECS:
             raise ValueError(f"unknown value codec {value_codec!r}")
         if version not in _MAGICS:
@@ -217,21 +251,50 @@ class CameoStore:
         self._streams: Dict[str, "StreamSession"] = {}  # open ingest streams
         self._writable = mode in ("w", "a")
         self._footer_dirty = False   # a footer sits at EOF; truncate first
-        self._mm = None              # mmap view (read-only opens, POSIX)
+        self._mm = None              # mmap view (lazy for writable opens)
+        self._mm_stale = False       # file grew since the map was taken
+        self._mm_ok = True           # mmap attempt failed; stop retrying
+        self._wal = None             # WriteAheadLog of a writable store
+        self._wal_pending: Dict[str, list] = {}  # journaled, un-replayed
+        self._wal_group_ms = float(wal_group_ms)
+        self._wal_group_bytes = int(wal_group_bytes)
+        use_wal = self._writable and (
+            wal if wal is not None
+            else os.environ.get("CAMEO_WAL", "1") not in ("0", "false", "off"))
         if mode == "w":
             self._f = open(path, "w+b")
             self._f.write(_MAGICS[self.version])
+            if use_wal:
+                self._attach_wal(None)
         elif mode in ("r", "a"):
             self._f = open(path, "r+b" if mode == "a" else "rb")
-            self._load_footer()
+            scan = (_wal.scan(self._wal_path())
+                    if mode == "a" and use_wal else None)
+            recovered_empty = False
+            try:
+                self._load_footer()
+            except IOError:
+                if scan is None or scan.checkpoint is None:
+                    if mode != "a" and os.path.exists(self._wal_path()):
+                        self._f.close()
+                        raise IOError(
+                            f"{self.path}: torn store with a recovery "
+                            "journal alongside — reopen with mode='a' to "
+                            "recover the acked prefix") from None
+                    self._f.close()
+                    raise
+                recovered_empty = not scan.checkpoint.footer
+                self._recover(scan.checkpoint)
             if mode == "r":
                 self._mm = self._open_mmap()
-            if mode == "a":
+            else:
                 # defer the footer truncation to the first append: until new
                 # bytes exist, the old footer (the sole copy of the catalog
                 # and any stashed stream-resume state) stays intact, so a
                 # crash between reopen and the first write loses nothing
-                self._footer_dirty = True
+                self._footer_dirty = not recovered_empty
+                if use_wal:
+                    self._attach_wal(scan)
         else:
             raise ValueError(f"unknown mode {mode!r}")
 
@@ -240,15 +303,24 @@ class CameoStore:
     @classmethod
     def create(cls, path: str, *, block_len: int = 4096,
                value_codec: str = "gorilla", entropy: str = "auto",
-               cache_bytes: int = DEFAULT_CACHE_BYTES,
-               version: int = 3) -> "CameoStore":
+               cache_bytes: int = DEFAULT_CACHE_BYTES, version: int = 3,
+               wal: bool = None,
+               wal_group_ms: float = _wal.DEFAULT_GROUP_MS,
+               wal_group_bytes: int = _wal.DEFAULT_GROUP_BYTES
+               ) -> "CameoStore":
         return cls(path, "w", block_len=block_len, value_codec=value_codec,
-                   entropy=entropy, cache_bytes=cache_bytes, version=version)
+                   entropy=entropy, cache_bytes=cache_bytes, version=version,
+                   wal=wal, wal_group_ms=wal_group_ms,
+                   wal_group_bytes=wal_group_bytes)
 
     @classmethod
     def open(cls, path: str, mode: str = "r", *,
-             cache_bytes: int = DEFAULT_CACHE_BYTES) -> "CameoStore":
-        return cls(path, mode, cache_bytes=cache_bytes)
+             cache_bytes: int = DEFAULT_CACHE_BYTES, wal: bool = None,
+             wal_group_ms: float = _wal.DEFAULT_GROUP_MS,
+             wal_group_bytes: int = _wal.DEFAULT_GROUP_BYTES
+             ) -> "CameoStore":
+        return cls(path, mode, cache_bytes=cache_bytes, wal=wal,
+                   wal_group_ms=wal_group_ms, wal_group_bytes=wal_group_bytes)
 
     # -- context / lifecycle ------------------------------------------------
 
@@ -263,15 +335,103 @@ class CameoStore:
             return
         if self._writable:
             self._write_footer()
-        if self._mm is not None:
-            self._mm.close()
-            self._mm = None
+        if self._wal is not None:
+            # the footer just published (and was fsynced) supersedes the
+            # journal — except for acked pushes of streams that were never
+            # resumed this run, which only the journal still holds
+            self._wal.close(remove=not self._wal_pending)
+            self._wal = None
+        self._invalidate_mmap()
         self._f.close()
+
+    # -- write-ahead journal ------------------------------------------------
+
+    def _wal_path(self) -> str:
+        return os.fspath(self.path) + ".wal"
+
+    def _wal_checkpoint(self, footer: bytes = None) -> "_wal.Checkpoint":
+        """Checkpoint image of the store's current published state: the
+        footer bytes at EOF (or the ones just written, when passed in) and
+        the layout parameters needed to rebuild an empty store."""
+        meta = dict(block_len=self.block_len, value_codec=self.value_codec,
+                    entropy=self.entropy)
+        if footer is None:
+            if self._footer_dirty and getattr(
+                    self, "_footer_offset", None) is not None:
+                pos = self._f.tell()
+                self._f.seek(self._footer_offset)
+                footer = self._f.read(self._footer_len)
+                self._f.seek(pos)
+            else:
+                footer = b""
+        off = self._footer_offset if footer else len(MAGIC)
+        return _wal.Checkpoint(self.version, off, meta, footer)
+
+    def _attach_wal(self, scan) -> None:
+        """Start a journal generation for this writable store.  ``scan`` is
+        the tolerant read of the previous generation (or ``None``): its
+        acked pushes that the catalog does not already cover become
+        ``_wal_pending`` — the streaming façade replays them on resume —
+        and are carried into the new generation so they survive further
+        crashes until a footer covers them."""
+        pending: Dict[str, list] = {}
+        if scan is not None:
+            for rec in scan.pushes:
+                e = self._series.get(rec.sid)
+                if e is not None and not e.get("streaming"):
+                    continue     # finalized after this record was acked
+                pending.setdefault(rec.sid, []).append(rec)
+        self._wal_pending = pending
+        carry = [r for recs in pending.values() for r in recs]
+        self._wal = _wal.WriteAheadLog.start(
+            self._wal_path(), self._wal_checkpoint(), carry,
+            group_ms=self._wal_group_ms, group_bytes=self._wal_group_bytes)
+
+    def _recover(self, ckpt: "_wal.Checkpoint") -> None:
+        """Roll a torn store file back to the journal's checkpoint image:
+        truncate everything past the last published footer, restore the
+        footer bytes the append run had truncated (plus tail marker and
+        head magic for a crash mid-v4-upgrade), and reload the catalog.
+        With no footer in the checkpoint the store rolls back to the bare
+        header.  The journaled pushes past the checkpoint are *not* lost —
+        they replay through the streaming façade on resume."""
+        f = self._f
+        end = f.seek(0, os.SEEK_END)
+        if ckpt.footer:
+            if end < ckpt.footer_offset:
+                f.close()
+                raise IOError(
+                    f"{self.path}: store is shorter than its journal "
+                    "checkpoint — the file lost bytes below the last "
+                    "published footer; cannot recover")
+            f.seek(ckpt.footer_offset)
+            f.truncate()
+            f.write(ckpt.footer)
+            f.write(_TAIL.pack(ckpt.footer_offset, len(ckpt.footer)))
+            f.write(_MAGICS[ckpt.store_version])
+            f.seek(0)
+            f.write(_MAGICS[ckpt.store_version])
+            _wal.maybe_fsync(f)
+            self._load_footer()
+        else:
+            f.seek(0)
+            f.truncate()
+            f.write(_MAGICS[ckpt.store_version])
+            _wal.maybe_fsync(f)
+            self.version = int(ckpt.store_version)
+            self.block_len = int(ckpt.meta.get("block_len", self.block_len))
+            self.value_codec = ckpt.meta.get("value_codec", self.value_codec)
+            self.entropy = ckpt.meta.get("entropy", self.entropy)
+            self._series = {}
+            self._totals = dict(series=0, points=0, n_kept=0,
+                                stored_nbytes=0, raw_nbytes=0)
+        if OBS.enabled:
+            OBS.inc("wal.recoveries")
 
     # -- mmap read path ------------------------------------------------------
 
     def _open_mmap(self):
-        """Page-cache-backed view of a finalized store file; ``None`` when
+        """Page-cache-backed view of the store file; ``None`` when
         disabled (``CAMEO_MMAP=0``) or unavailable (non-POSIX mmap quirks,
         empty/special files) — callers fall back to pread."""
         if os.environ.get("CAMEO_MMAP", "1").lower() in ("0", "false", "off"):
@@ -282,11 +442,38 @@ class CameoStore:
         except (ImportError, AttributeError, ValueError, OSError):
             return None
 
+    def _mmap(self):
+        """The current mmap view, taken lazily.  Read-only opens map once
+        at open; writable opens map on first read and **remap** after the
+        file grows (``_append_body`` marks the view stale; the remap
+        flushes buffered writes first so the page cache is current) —
+        a reader never sees a stale or short view after an append."""
+        if self._mm_stale:
+            self._invalidate_mmap()
+        if self._mm is None and self._writable and self._mm_ok:
+            self._f.flush()
+            self._mm = self._open_mmap()
+            if self._mm is None:
+                self._mm_ok = False   # unavailable/disabled: stop retrying
+        return self._mm
+
+    def _invalidate_mmap(self):
+        """Drop the current map (before any truncation: a view over
+        truncated pages would fault on access)."""
+        if self._mm is not None:
+            self._mm.close()
+            self._mm = None
+        self._mm_stale = False
+
     def flush(self):
         """Rewrite the footer so everything ingested so far — including the
         readable prefix of open stream sessions, whose resume state is
-        embedded — is durable.  Appending after a flush truncates the stale
-        footer first (the next flush/close writes a fresh one)."""
+        embedded — survives a crash: the footer body and tail marker are
+        ``os.fsync``'d in order (see ``_write_footer``), so the durability
+        promise holds through power loss, not just a process crash
+        (``CAMEO_FSYNC=0`` downgrades it to page-cache durability for
+        tests).  Appending after a flush truncates the stale footer first
+        (the next flush/close writes a fresh one)."""
         if not self._writable:
             raise IOError("store opened read-only")
         self._write_footer()
@@ -294,6 +481,7 @@ class CameoStore:
     def _ensure_appendable(self):
         """Truncate a footer left at EOF by ``flush()`` before appending."""
         if self._footer_dirty:
+            self._invalidate_mmap()
             self._f.seek(self._footer_offset)
             self._f.truncate()
             self._footer_dirty = False
@@ -304,6 +492,7 @@ class CameoStore:
         off = self._f.seek(0, os.SEEK_END)
         self._f.write(struct.pack("<I", len(body)))
         self._f.write(body)
+        self._mm_stale = True   # the map no longer covers the new bytes
         if OBS.enabled:
             OBS.inc("store.write.blocks")
             OBS.inc("store.write.bytes", 4 + len(body))
@@ -327,16 +516,28 @@ class CameoStore:
         footer = zlib.compress(json.dumps(
             {"block_len": self.block_len, "value_codec": self.value_codec,
              "entropy": self.entropy, "series": self._series},
-            default=float).encode())
+            default=_json_default).encode())
+        # two-phase publish: the footer body must be durable *before* the
+        # tail marker that makes readers trust it — a crash between the
+        # barriers leaves a torn tail (recoverable), never a tail marker
+        # pointing at garbage
         self._f.write(footer)
+        _wal.maybe_fsync(self._f)
         self._f.write(_TAIL.pack(off, len(footer)))
         self._f.write(_MAGICS[self.version])
-        self._f.flush()
+        _wal.maybe_fsync(self._f)
         self._footer_offset = off
+        self._footer_len = len(footer)
         self._footer_dirty = True
+        if self._wal is not None:
+            # the published footer is the new checkpoint; only pushes of
+            # never-resumed streams still need the journal to carry them
+            carry = [r for recs in self._wal_pending.values() for r in recs]
+            self._wal.checkpoint(self._wal_checkpoint(footer), carry)
 
     def _load_footer(self):
         f = self._f
+        f.seek(0)
         head = f.read(len(MAGIC))
         versions = {m: v for v, m in _MAGICS.items()}
         if head not in versions:
@@ -355,11 +556,17 @@ class CameoStore:
         tail = f.read(tail_len)
         if tail[-len(MAGIC):] != head:
             raise IOError(f"{self.path}: missing footer magic — the writer "
-                          "crashed before close(); reingest or salvage "
-                          "blocks manually")
+                          "crashed mid-run; reopen with mode='a' to recover "
+                          "from the journal, or reingest")
         off, flen = _TAIL.unpack(tail[:_TAIL.size])
         f.seek(off)
-        meta = json.loads(zlib.decompress(f.read(flen)).decode())
+        try:
+            meta = json.loads(zlib.decompress(f.read(flen)).decode())
+        except Exception as e:   # garbage tail pointer / torn footer bytes
+            raise IOError(
+                f"{self.path}: corrupt footer ({e}); reopen with mode='a' "
+                "to recover from the journal, or reingest") from None
+        self._footer_len = flen
         self.block_len = int(meta.get("block_len", self.block_len))
         self.value_codec = meta.get("value_codec", self.value_codec)
         self.entropy = meta.get("entropy", self.entropy)
@@ -636,13 +843,14 @@ class CameoStore:
     # -- block access -------------------------------------------------------
 
     def _read_body(self, blk: dict) -> bytes:
-        if self._mm is not None:
+        mm = self._mmap()
+        if mm is not None:
             off = blk["offset"]
-            blen, = struct.unpack_from("<I", self._mm, off)
+            blen, = struct.unpack_from("<I", mm, off)
             if OBS.enabled:
                 OBS.inc("store.read.mmap_bytes", 4 + blen)
                 OBS.inc("store.read.blocks_fetched")
-            return self._mm[off + 4:off + 4 + blen]
+            return mm[off + 4:off + 4 + blen]
         self._f.seek(blk["offset"])
         blen, = struct.unpack("<I", self._f.read(4))
         if OBS.enabled:
@@ -656,7 +864,7 @@ class CameoStore:
         block (multi-block windows of an uninterleaved series are one IO).
         With an mmap attached every body is a page-cache slice — no
         syscalls at all, so no coalescing is needed."""
-        if self._mm is not None:
+        if self._mmap() is not None:
             return [self._read_body(b) for b in blks]
         out: List[bytes] = []
         i = 0
@@ -1153,7 +1361,9 @@ class StreamSession:
             t1 = int(bounds[bi + 1])
             j = int(np.searchsorted(self._kept_idx, t1, "left"))
             self._emit(j, t1, is_last=(bi == len(bounds) - 2))
-        self._store._f.flush()
+        # the finalized blocks are durable before the catalog entry that
+        # publishes them can be (CAMEO_FSYNC=0 keeps just the write order)
+        _wal.maybe_fsync(self._store._f)
         e = self._entry
         e["n"] = last + 1
         e["n_kept"] = self._total_kept

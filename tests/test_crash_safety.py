@@ -1,0 +1,467 @@
+"""Crash safety: the write-ahead journal (store/wal.py) + torn-tail
+recovery make `mode="a"` reopen lossless for acked pushes.
+
+The harness simulates kill-at-arbitrary-byte crashes by building a *crash
+image* — a writer is driven partway and abandoned with its OS-level file
+contents captured — and then truncating the store (or journal) at every
+structural offset class: inside a block body, inside the footer, inside
+the tail marker, inside a journal record.  Recovery must always land on
+the last consistent prefix, replay every acked push, and produce a file
+byte-identical to a clean uninterrupted run of the same feed.
+"""
+import os
+import shutil
+
+import numpy as np
+import pytest
+
+import repro.api as api
+from repro.core.cameo import CameoConfig
+from repro.serving.ts_service import TimeSeriesService, TsServiceConfig
+from repro.store import wal as walmod
+from repro.store.store import CameoStore
+
+CFG = CameoConfig(eps=2e-2, lags=8, mode="rounds", max_rounds=60,
+                  dtype="float64")
+W = 64          # stream window
+BLK = 64        # store block length
+CHUNK = 37      # deliberately misaligned with W and BLK
+N = 1200
+
+
+def _series(n=N, seed=7):
+    rng = np.random.default_rng(seed)
+    t = np.arange(n)
+    return (3 * np.sin(2 * np.pi * t / 24) + np.sin(2 * np.pi * t / 168)
+            + 0.2 * rng.standard_normal(n))
+
+
+def _open_ds(p, mode):
+    return api.open(p, CFG, mode=mode, block_len=BLK, stream_window=W)
+
+
+def _push_range(w, x, a, b):
+    for i in range(a, b, CHUNK):
+        w.push(x[i:min(i + CHUNK, b)])
+
+
+def _clean_run(p, x, upto=None, flush_only=False):
+    """Uninterrupted reference writer; returns the final file bytes."""
+    upto = len(x) if upto is None else upto
+    ds = _open_ds(p, "w")
+    w = ds.stream("s")
+    _push_range(w, x, 0, upto)
+    if flush_only:
+        ds.flush()
+        blob = open(p, "rb").read()
+        w.close()
+        ds.close()
+        return blob
+    w.close()
+    ds.close()
+    return open(p, "rb").read()
+
+
+def _snapshot_crash(store, p):
+    """Capture the writer's OS-visible file state as the crash image at
+    ``p`` (+ ``.wal``): what a kill -9 leaves in the page cache.  The live
+    writer keeps running on its own path and is closed cleanly afterwards
+    (closing a file object whose fd was os.close()d would double-close a
+    reused descriptor)."""
+    store._f.flush()
+    if store._wal is not None:
+        store._wal._f.flush()
+    shutil.copyfile(store.path, p)
+    if store._wal is not None:
+        shutil.copyfile(store._wal.path, p + ".wal")
+
+
+def _crash_writer(p, x, upto, flush_at=None):
+    """Drive a writer to ``upto`` acked points and leave its crash image
+    at ``p``.  Returns the acked count."""
+    live = p + ".live"
+    ds = _open_ds(live, "w")
+    w = ds.stream("s")
+    acked = 0
+    for i in range(0, upto, CHUNK):
+        c = x[i:min(i + CHUNK, upto)]
+        w.push(c)
+        acked += len(c)
+        if flush_at is not None and acked >= flush_at:
+            ds.flush()
+            flush_at = None
+    _snapshot_crash(ds.store, p)
+    w.close()
+    ds.close()
+    return acked
+
+
+def _finish_feed(p, x, total=N):
+    """Reopen, resume, feed the rest of ``x``, close; returns final bytes
+    plus the resume point the recovery landed on."""
+    ds = _open_ds(p, "a")
+    w = ds.stream("s", resume=True)
+    start = w.resume_from
+    _push_range(w, x, start, total)
+    w.close()
+    ds.close()
+    return open(p, "rb").read(), start
+
+
+# ---------------------------------------------------------------------------
+# end-to-end recovery
+# ---------------------------------------------------------------------------
+
+def test_crash_resume_byte_identity(tmp_path):
+    """Crash after a mid-run flush: every acked push is recovered and the
+    finished file is byte-identical to a clean uninterrupted run."""
+    x = _series()
+    p = str(tmp_path / "c.cameo")
+    acked = _crash_writer(p, x, 800, flush_at=400)
+    got, start = _finish_feed(p, x)
+    assert start == acked                       # no acked push lost
+    assert got == _clean_run(str(tmp_path / "ref.cameo"), x)
+    assert not os.path.exists(p + ".wal")       # clean close retires it
+
+
+def test_crash_before_any_flush_recovers_from_journal_alone(tmp_path):
+    """A stream that crashed before any footer existed lives only in the
+    journal: recovery re-creates it from scratch and replays."""
+    x = _series()
+    p = str(tmp_path / "c.cameo")
+    acked = _crash_writer(p, x, 500, flush_at=None)
+    got, start = _finish_feed(p, x)
+    assert start == acked
+    assert got == _clean_run(str(tmp_path / "ref.cameo"), x)
+
+
+def test_multivariate_crash_recovery(tmp_path):
+    """v4 stores recover too — including the head-magic rollback when the
+    crash interrupted the v3→v4 upgrade window."""
+    x = _series()
+    X = np.stack([x, np.roll(x, 5) * 0.7], axis=1)
+    p = str(tmp_path / "mv.cameo")
+    ds = _open_ds(p + ".live", "w")
+    w = ds.stream("mv", channels=2)
+    acked = 0
+    for i in range(0, 700, CHUNK):
+        c = X[i:min(i + CHUNK, 700)]
+        w.push(c)
+        acked += len(c)
+        if acked >= 300 and acked < 300 + CHUNK:
+            ds.flush()
+    _snapshot_crash(ds.store, p)
+    w.close()
+    ds.close()
+
+    ds2 = _open_ds(p, "a")
+    w2 = ds2.stream("mv", channels=2, resume=True)
+    assert w2.resume_from == acked
+    for i in range(acked, N, CHUNK):
+        w2.push(X[i:min(i + CHUNK, N)])
+    w2.close()
+    ds2.close()
+
+    pr = str(tmp_path / "ref.cameo")
+    ds = _open_ds(pr, "w")
+    w = ds.stream("mv", channels=2)
+    for i in range(0, N, CHUNK):
+        w.push(X[i:min(i + CHUNK, N)])
+    w.close()
+    ds.close()
+    assert open(p, "rb").read() == open(pr, "rb").read()
+
+
+def test_service_stop_crash_resume_byte_identity(tmp_path):
+    """Service-level stop (clean close), then a crash on the resumed run,
+    then a second resume: the finished store is byte-identical to the
+    uninterrupted feed."""
+    x = _series()
+    p = str(tmp_path / "svc.cameo")
+    scfg = TsServiceConfig(block_len=BLK, stream_window=W)
+    svc = TimeSeriesService(p, CFG, scfg)
+    with pytest.warns(DeprecationWarning):
+        h = svc.ingest_stream("s")
+    _push_range(h, x, 0, 400)
+    svc.close()                                  # clean stop, stream open
+
+    live = p + ".live"
+    shutil.copyfile(p, live)                     # second leg on a copy
+    svc = TimeSeriesService(live, CFG, scfg, resume=True)
+    with pytest.warns(DeprecationWarning):
+        h = svc.ingest_stream("s", resume=True)
+    assert h.resume_from == 400
+    _push_range(h, x, 400, 900)
+    _snapshot_crash(svc.store, p)                # crash mid-second-run
+    h.close()
+    svc.close()
+
+    svc = TimeSeriesService(p, CFG, scfg, resume=True)
+    with pytest.warns(DeprecationWarning):
+        h = svc.ingest_stream("s", resume=True)
+    assert h.resume_from == 900                  # nothing acked was lost
+    _push_range(h, x, 900, N)
+    h.close()
+    svc.close()
+    assert open(p, "rb").read() == _clean_run(
+        str(tmp_path / "ref.cameo"), x)
+
+
+# ---------------------------------------------------------------------------
+# kill-at-every-offset fault injection
+# ---------------------------------------------------------------------------
+
+def _recovery_floor(wal_path):
+    """Bytes of the store file the journal checkpoint still needs: below
+    this offset a truncation is data loss beyond crash semantics (the
+    checkpointed footer itself is restored *from the journal*, so cuts
+    anywhere at or past ``footer_offset`` are recoverable)."""
+    scanres = walmod.scan(wal_path)
+    return scanres.checkpoint.footer_offset
+
+
+def test_kill_at_every_store_offset(tmp_path):
+    """Truncate the crashed store file at every offset class past the
+    journal checkpoint — mid-block, mid-footer, mid-tail-marker, empty
+    tail — and assert recovery always lands on the acked prefix,
+    byte-identical to a clean run of the same pushes."""
+    x = _series()
+    img = tmp_path / "img"
+    img.mkdir()
+    p = str(img / "c.cameo")
+    acked = _crash_writer(p, x, 800, flush_at=400)
+    store_blob = open(p, "rb").read()
+    wal_blob = open(p + ".wal", "rb").read()
+    floor = _recovery_floor(p + ".wal")
+    assert floor <= len(store_blob)
+
+    # the recovered-prefix reference: a clean writer over exactly the
+    # acked pushes, flushed (recovery + flush must reproduce it, bit for
+    # bit, regardless of where the crash tore the file)
+    ref_prefix = _clean_run(str(tmp_path / "refp.cameo"), x, upto=acked,
+                            flush_only=True)
+
+    tail = len(store_blob) - floor
+    offsets = set(range(floor, len(store_blob) + 1,
+                        max(1, tail // 40)))       # interior sweep
+    offsets |= {floor, floor + 1,                  # checkpoint boundary
+                len(store_blob) - 1, len(store_blob),   # EOF classes
+                }
+    offsets |= {len(store_blob) - k for k in range(1, 13)}  # tail marker
+    work = tmp_path / "w"
+    for cut in sorted(offsets):
+        if work.exists():
+            shutil.rmtree(work)
+        work.mkdir()
+        q = str(work / "c.cameo")
+        with open(q, "wb") as f:
+            f.write(store_blob[:cut])
+        with open(q + ".wal", "wb") as f:
+            f.write(wal_blob)
+        ds = _open_ds(q, "a")                     # must always load
+        w = ds.stream("s", resume=True)
+        assert w.resume_from == acked, f"cut={cut}: lost acked pushes"
+        ds.flush()
+        got = open(q, "rb").read()
+        assert got == ref_prefix, f"cut={cut}: recovered prefix differs"
+        w.close()
+        ds.close()
+
+
+def test_kill_at_every_wal_offset(tmp_path):
+    """Truncate the journal at record boundaries and mid-record: recovery
+    lands on the last intact record prefix (a torn append was never acked
+    as journaled), and finishing the feed stays byte-identical."""
+    x = _series()
+    img = tmp_path / "img"
+    img.mkdir()
+    p = str(img / "c.cameo")
+    _crash_writer(p, x, 500, flush_at=None)   # no footer: journal-only
+    store_blob = open(p, "rb").read()
+    wal_blob = open(p + ".wal", "rb").read()
+
+    # record layout of the journal image (checkpoint first, then pushes)
+    ends = [pos for _, pos in walmod._iter_records(wal_blob)]
+    assert len(ends) >= 3
+    ckpt_end = ends[0]
+    ref = _clean_run(str(tmp_path / "ref.cameo"), x)
+
+    cases = []                 # (cut, points the scan must still see)
+    pts = 0
+    for i, end in enumerate(ends[1:]):
+        prev_pts = pts
+        pts += min(CHUNK, 500 - i * CHUNK)
+        cases.append((end, pts))               # exactly at a boundary
+        cases.append((end - 3, prev_pts))      # torn checksum/payload
+    cases.append((ckpt_end, 0))                # no pushes survive
+
+    work = tmp_path / "w"
+    for k, (cut, want_pts) in enumerate(cases):
+        if work.exists():
+            shutil.rmtree(work)
+        work.mkdir()
+        q = str(work / "c.cameo")
+        with open(q, "wb") as f:
+            f.write(store_blob)
+        with open(q + ".wal", "wb") as f:
+            f.write(wal_blob[:cut])
+        if want_pts == 0:
+            # nothing journaled: the sid is unknown — resume must refuse,
+            # but a fresh (non-resume) stream of the same sid works
+            ds = _open_ds(q, "a")
+            with pytest.raises(ValueError, match="no incomplete stream"):
+                ds.stream("s", resume=True)
+            ds.close()
+            continue
+        ds = _open_ds(q, "a")
+        w = ds.stream("s", resume=True)
+        assert w.resume_from == want_pts, f"cut={cut}"
+        if k % 7 == 0:
+            # torn-away pushes were never acked as journaled: re-feeding
+            # from the resume point must converge to the clean run
+            _push_range(w, x, w.resume_from, N)
+            w.close()
+            ds.close()
+            assert open(q, "rb").read() == ref, f"cut={cut}"
+        else:
+            ds.close()       # stash the resumed stream and move on
+
+
+def test_torn_checkpoint_is_refused(tmp_path):
+    """A journal torn inside its checkpoint record cannot vouch for the
+    store; with the store itself torn too the open must fail loudly (the
+    checkpoint rewrite is atomic, so a real crash cannot produce this)."""
+    x = _series()
+    p = str(tmp_path / "c.cameo")
+    _crash_writer(p, x, 500, flush_at=400)
+    wal_blob = open(p + ".wal", "rb").read()
+    with open(p + ".wal", "wb") as f:
+        f.write(wal_blob[:len(walmod.MAGIC) + 5])
+    with pytest.raises(IOError, match="missing footer|corrupt footer"):
+        CameoStore.open(p, mode="a")
+
+
+# ---------------------------------------------------------------------------
+# journal mechanics
+# ---------------------------------------------------------------------------
+
+def test_group_commit_amortizes_fsync(tmp_path):
+    """Group commit batches many appends behind one barrier: an unbounded
+    window yields zero barriers until the checkpoint; a zero window
+    degenerates to one barrier per push."""
+    from repro import obs
+    x = _series()
+    was = obs.enabled()
+    obs.enable()
+    obs.reset()
+    try:
+        p = str(tmp_path / "g.cameo")
+        ds = api.open(p, CFG, mode="w", block_len=BLK, stream_window=W,
+                      wal_group_ms=60_000.0, wal_group_bytes=1 << 30)
+        w = ds.stream("s")
+        _push_range(w, x, 0, 500)
+        snap = obs.snapshot()["counters"]
+        assert snap.get("wal.records", 0) == len(range(0, 500, CHUNK))
+        assert snap.get("wal.group_commits", 0) == 0
+        w.close()
+        ds.close()
+
+        obs.reset()
+        p2 = str(tmp_path / "g0.cameo")
+        ds = api.open(p2, CFG, mode="w", block_len=BLK, stream_window=W,
+                      wal_group_ms=0.0)
+        w = ds.stream("s")
+        _push_range(w, x, 0, 500)
+        snap = obs.snapshot()["counters"]
+        pushes = len(range(0, 500, CHUNK))
+        assert snap.get("wal.group_commits", 0) == pushes
+        w.close()
+        ds.close()
+    finally:
+        obs.enable() if was else obs.disable()
+        obs.reset()
+
+
+def test_wal_bytes_do_not_change_store_bytes(tmp_path):
+    """The journal is a sidecar: store bytes are identical with the
+    journal on, off, and across group-commit policies."""
+    x = _series()
+    blobs = []
+    for name, kw in (("on.cameo", dict()),
+                     ("off.cameo", dict(wal=False)),
+                     ("g0.cameo", dict(wal_group_ms=0.0))):
+        p = str(tmp_path / name)
+        ds = api.open(p, CFG, mode="w", block_len=BLK, stream_window=W,
+                      **kw)
+        w = ds.stream("s")
+        _push_range(w, x, 0, N)
+        w.close()
+        ds.close()
+        blobs.append(open(p, "rb").read())
+    assert blobs[0] == blobs[1] == blobs[2]
+    assert not os.path.exists(str(tmp_path / "off.cameo") + ".wal")
+
+
+def test_wal_disabled_keeps_legacy_refusal(tmp_path, monkeypatch):
+    """CAMEO_WAL=0 restores the old behavior exactly: no sidecar file and
+    a torn store is refused loudly even in append mode."""
+    monkeypatch.setenv("CAMEO_WAL", "0")
+    x = _series()
+    p = str(tmp_path / "c.cameo")
+    ds = _open_ds(p + ".live", "w")
+    w = ds.stream("s")
+    _push_range(w, x, 0, 500)
+    assert ds.store._wal is None
+    assert not os.path.exists(p + ".live.wal")
+    _snapshot_crash(ds.store, p)
+    w.close()
+    ds.close()
+    with pytest.raises(IOError, match="missing footer"):
+        CameoStore.open(p, mode="a")
+
+
+def test_fresh_stream_supersedes_crashed_journal(tmp_path):
+    """Opening the same sid *without* resume after a crash starts over:
+    the journaled pushes are consumed (not replayed into the new feed)."""
+    x = _series()
+    p = str(tmp_path / "c.cameo")
+    _crash_writer(p, x, 500, flush_at=None)
+    ds = _open_ds(p, "a")
+    w = ds.stream("s")                    # deliberate fresh start
+    assert w.resume_from == 0
+    _push_range(w, x, 0, N)
+    w.close()
+    ds.close()
+    assert open(p, "rb").read() == _clean_run(
+        str(tmp_path / "ref.cameo"), x)
+
+
+def test_push_acks_only_valid_chunks(tmp_path):
+    """A rejected chunk must never reach the journal (an ack would promise
+    replay of data the compressor refused)."""
+    x = _series()
+    p = str(tmp_path / "c.cameo")
+    ds = _open_ds(p, "w")
+    w = ds.stream("s")
+    w.push(x[:100])
+    with pytest.raises(ValueError):
+        w.push(np.stack([x[:10], x[:10]], axis=1))   # 2-D into 1-D stream
+    scanres = walmod.scan(p + ".wal")
+    assert sum(r.x.shape[0] for r in scanres.pushes) == 100
+    w.close()
+    ds.close()
+
+
+def test_journal_roundtrip_units():
+    """Record codecs: push and checkpoint payloads round-trip exactly."""
+    rec = walmod.PushRecord("sensor/α", 12345678901234,
+                            np.linspace(-1e300, 1e300, 37))
+    out = walmod._decode_push(walmod._encode_push(rec))
+    assert out.sid == rec.sid and out.start == rec.start
+    assert np.array_equal(out.x.view(np.uint64), rec.x.view(np.uint64))
+    mv = walmod.PushRecord("mv", 0, np.ones((5, 3)))
+    out = walmod._decode_push(walmod._encode_push(mv))
+    assert out.x.shape == (5, 3)
+    ck = walmod.Checkpoint(4, 2**41, dict(block_len=64), b"zlib-bytes")
+    out = walmod._decode_checkpoint(walmod._encode_checkpoint(ck))
+    assert out == ck

@@ -486,13 +486,63 @@ def test_mmap_reads_match_pread_path(stored, monkeypatch):
         v2, b2 = squery.query(r_rd, "s", kind, 64, 3000)
         assert np.array_equal(np.asarray(v1), np.asarray(v2))
         assert np.array_equal(np.asarray(b1), np.asarray(b2))
-    # writable opens never mmap (the file grows under them)
+    # writable opens map lazily: nothing mapped until the first read
     monkeypatch.delenv("CAMEO_MMAP")
     r_a = CameoStore.open(store.path, mode="a")
     assert r_a._mm is None
+    if r_a._wal is not None:
+        r_a._wal.close(remove=True)
     r_a._f.close()            # drop without footer rewrite: file untouched
     r_mm.close()
     r_rd.close()
+
+
+def test_mmap_read_after_append_parity(tmp_path, monkeypatch):
+    """A writable store's mmap is invalidated by appends: read series A
+    (takes a map), append series B behind the map's back, then read both —
+    results must match a pread-only (CAMEO_MMAP=0) twin bit-for-bit."""
+    xa = _series(3000, seed=11)
+    xb = _series(3000, seed=12)
+    ra = compress(jnp.asarray(xa), CFG)
+    rb = compress(jnp.asarray(xb), CFG)
+    paths = {}
+    for tag, mm in (("mm", None), ("rd", "0")):
+        if mm is not None:
+            monkeypatch.setenv("CAMEO_MMAP", mm)
+        else:
+            monkeypatch.delenv("CAMEO_MMAP", raising=False)
+        p = str(tmp_path / f"{tag}.cameo")
+        st = CameoStore.create(p, block_len=256)
+        st.append_series("a", ra, CFG)
+        got_a = st.read_series("a")            # takes (or skips) the map
+        st.append_series("b", rb, CFG)         # grows the file under it
+        got_a2 = st.read_series("a")
+        got_b = st.read_series("b")
+        st.close()
+        paths[tag] = (got_a, got_a2, got_b)
+    for i in range(3):
+        assert np.array_equal(paths["mm"][i].view(np.uint64),
+                              paths["rd"][i].view(np.uint64))
+
+
+def test_footer_json_preserves_wide_integers(tmp_path):
+    """Footer encoding regression: offsets and numpy integers survive the
+    JSON round-trip exactly.  The old ``default=float`` encoder silently
+    rounded any np.int64 above 2**53 (and every >2^31 block offset went
+    through it on platforms where offsets land as np.int64)."""
+    p = str(tmp_path / "wide.cameo")
+    x = _series(512, seed=3)
+    res = compress(jnp.asarray(x), CFG)
+    big = 2 ** 53 + 1              # first integer a float64 cannot hold
+    with CameoStore.create(p, block_len=256) as w:
+        w.append_series("s", res, CFG)
+        w._series["s"]["fake_off"] = np.int64(big)
+        w._series["s"]["fake_off_py"] = 2 ** 41 + 7
+    r = CameoStore.open(p)
+    e = r.series_meta("s")
+    assert e["fake_off"] == big and isinstance(e["fake_off"], int)
+    assert e["fake_off_py"] == 2 ** 41 + 7
+    r.close()
 
 
 def test_unknown_version_refused(tmp_path):
