@@ -915,6 +915,159 @@ def bench_mvar(full=False):
     return rows
 
 
+def bench_serve(full=False):
+    """Ingest-server section (``repro.server``): multi-tenant sessions
+    sealing small blocks, then background compaction and tier movement.
+
+    Rows per dataset:
+
+    * ``compaction_gain`` — per-series stored bytes before / after
+      compacting the small sealed blocks into full-size blocks (a pure
+      byte ratio of a deterministic fixture: the header + partial-block
+      overhead the seal-small-for-latency policy pays and compaction
+      reclaims);
+    * ``tier_hit_ratio`` — hot-tier (decoded-block LRU) hit fraction of a
+      repeated pushdown workload after one warm-up pass — a collapse
+      means queries re-decode per hit;
+    * ``cold_saved_frac`` — bytes reclaimed by entropy-wrapping block
+      bodies into the cold tier, with the answers verified unchanged.
+
+    Feeds the repo-root ``BENCH_store.json`` ledger (``serve_*`` keys)
+    that ``benchmarks/perf_smoke.py`` gates CI against."""
+    import os
+    import tempfile
+
+    from repro.core.streaming import min_window_len
+    from repro.server import IngestServer, ServerConfig, tenant_sid
+    from repro.store.store import CameoStore
+
+    rows = []
+    eps = 1e-2
+    NT = 3
+    chunk = 731
+    for ds in (["pedestrian"] if not full else DATASETS_SMALL):
+        x, spec = bench_series(ds, full)
+        n = len(x)
+        cfg = _cfg(spec, eps, mode="rounds", max_rounds=120)
+        wlen = max(1024, min_window_len(cfg))
+        scfg = ServerConfig(block_len=4096, seal_block_len=512,
+                            stream_window=wlen, auto_compact=False,
+                            max_sessions=NT)
+        with tempfile.TemporaryDirectory() as tmp:
+            p = os.path.join(tmp, "serve.cameo")
+            srv = IngestServer(p, cfg, scfg)
+            tenants = [f"t{i}" for i in range(NT)]
+            t0 = time.perf_counter()
+            for t in tenants:
+                srv.register_tenant(t)
+                with srv.session("s", tenant=t) as sess:
+                    for lo in range(0, n, chunk):
+                        sess.push(x[lo:lo + chunk])
+            ingest_s = time.perf_counter() - t0
+            before = sum(srv.catalog.usage(t)["stored_nbytes"]
+                         for t in tenants)
+            blocks_before = sum(
+                len(srv.store.series_meta(tenant_sid(t, "s"))["blocks"])
+                for t in tenants)
+            t0 = time.perf_counter()
+            for t in tenants:
+                srv.compact("s", tenant=t)
+            compact_s = time.perf_counter() - t0
+            after = sum(srv.catalog.usage(t)["stored_nbytes"]
+                        for t in tenants)
+            blocks_after = sum(
+                len(srv.store.series_meta(tenant_sid(t, "s"))["blocks"])
+                for t in tenants)
+            compaction_gain = before / max(after, 1)
+
+            # hot tier: one warm-up pass, then a repeated pushdown
+            # workload — the hit fraction of the decoded-block LRU
+            sid = tenant_sid(tenants[0], "s")
+            a, b = n // 8, n // 8 + n // 2
+            view = srv.view(tenants[0])
+            srv.tiers.prefetch(sid, a, b)
+            view.series("s").mean(a, b)                   # warm-up
+            cs0 = srv.store.cache_stats()
+            for _ in range(32):
+                view.series("s").mean(a, b)
+            cs1 = srv.store.cache_stats()
+            dh = cs1["hits"] - cs0["hits"]
+            dm = cs1["misses"] - cs0["misses"]
+            tier_hit_ratio = dh / max(dh + dm, 1)
+            _, warm_q = best_of(lambda: view.series("s").mean(a, b),
+                                reps=9)
+
+            # cold tier: wrap bodies, verify the answers, count the bytes
+            w0 = view.series("s").window(a, b)
+            saved = 0
+            for t in tenants:
+                saved += srv.tiers.demote_cold(tenant_sid(t, "s"))[
+                    "saved_nbytes"]
+            srv.store._cache.clear()
+            w1 = view.series("s").window(a, b)
+            assert np.array_equal(w0.view(np.uint64), w1.view(np.uint64))
+            _, cold_q = best_of(lambda: view.series("s").window(a, b),
+                                reps=3)
+            cold_saved_frac = saved / max(after, 1)
+            srv.close()
+            file_bytes = os.path.getsize(p)
+            r = CameoStore.open(p)      # cold-tier file reopens clean
+            assert np.array_equal(
+                r.read_window(sid, a, b).view(np.uint64),
+                w0.view(np.uint64))
+            r.close()
+        emit(f"serve.compaction.{ds}", compact_s,
+             f"tenants={NT},n={n},blocks={blocks_before}->{blocks_after},"
+             f"bytes={before}->{after},gain={compaction_gain:.2f}x")
+        emit(f"serve.tiers.{ds}", warm_q,
+             f"hit_ratio={tier_hit_ratio:.3f},"
+             f"cold_saved={cold_saved_frac * 100:.1f}%,"
+             f"cold_window={cold_q * 1e3:.2f}ms")
+        rows.append(dict(
+            section="serve", dataset=ds, n=n, tenants=NT, eps=eps,
+            ingest_secs=ingest_s, compact_secs=compact_s,
+            stored_before=before, stored_after=after,
+            blocks_before=blocks_before, blocks_after=blocks_after,
+            compaction_gain=compaction_gain,
+            tier_hit_ratio=tier_hit_ratio,
+            cold_saved_nbytes=saved, cold_saved_frac=cold_saved_frac,
+            warm_query_secs=warm_q, cold_window_secs=cold_q,
+            file_bytes=file_bytes))
+    save_json("serve", rows)
+    _update_bench_serve_json(rows)
+    return rows
+
+
+def _update_bench_serve_json(rows):
+    """Append the server summary to the BENCH_store.json ledger
+    (``serve_baseline`` pinned on bootstrap, ``serve_runs`` capped) —
+    same discipline as ``_update_bench_store_json``."""
+    summary = dict(
+        compaction_gain_geomean=geomean(
+            [r["compaction_gain"] for r in rows]),
+        tier_hit_ratio_min=min(r["tier_hit_ratio"] for r in rows),
+        cold_saved_frac_mean=float(
+            np.mean([r["cold_saved_frac"] for r in rows])),
+        rows=[{k: r[k] for k in
+               ("dataset", "n", "tenants", "stored_before", "stored_after",
+                "blocks_before", "blocks_after", "compaction_gain",
+                "tier_hit_ratio", "cold_saved_frac", "warm_query_secs",
+                "cold_window_secs")} for r in rows],
+    )
+    ledger, path = _load_bench_ledger()
+    if ledger is None:
+        ledger = dict(schema=1, baseline=None, runs=[])
+    if not ledger.get("serve_baseline"):
+        ledger["serve_baseline"] = summary
+    ledger.setdefault("serve_runs", []).append(summary)
+    ledger["serve_runs"] = ledger["serve_runs"][-20:]
+    _save_bench_ledger(ledger, path)
+    emit("serve.bench_json", 0.0,
+         f"compaction_gain={summary['compaction_gain_geomean']:.2f}x,"
+         f"tier_hit_ratio={summary['tier_hit_ratio_min']:.3f},"
+         f"cold_saved={summary['cold_saved_frac_mean'] * 100:.1f}%")
+
+
 def _update_bench_mvar_json(rows):
     """Append the multivariate summary to the BENCH_store.json ledger
     (``mvar_baseline`` pinned on bootstrap, ``mvar_runs`` capped) — same

@@ -23,7 +23,13 @@ Runs a small synthetic fixture (seconds, not minutes) and compares
 * ``wal_overhead``: façade streamed ingest with the write-ahead journal
   on (default group commit) vs off — also an **absolute** floor
   (``CAMEO_WAL_OVERHEAD_FLOOR``, default 0.90: journaled ingest must stay
-  within ~10% of journal-off).
+  within ~10% of journal-off), and
+* the ingest-server rows: ``compaction_gain`` (stored bytes of small
+  sealed blocks before / after the maintenance rewrite — an absolute
+  floor, ``CAMEO_COMPACTION_GAIN_FLOOR`` default 1.05) and
+  ``tier_hit_ratio`` (hot-tier LRU hit fraction of a repeated pushdown
+  workload — an absolute floor, ``CAMEO_TIER_HIT_RATIO_FLOOR`` default
+  0.90); both are deterministic counter/byte ratios, machine-independent.
 
 Metrics present in only one of {baseline, current} are *skipped with a
 note*, not failed — new rows land in the same PR as their code and are
@@ -104,6 +110,18 @@ OBS_OVERHEAD_FLOOR = float(os.environ.get("CAMEO_OBS_OVERHEAD_FLOOR", "0.97"))
 # write-ahead journal to within ~10% of journal-off ingest (0.90 floor),
 # or the durability default is too expensive to leave on.
 WAL_OVERHEAD_FLOOR = float(os.environ.get("CAMEO_WAL_OVERHEAD_FLOOR", "0.90"))
+# compaction_gain is the stored-bytes ratio of small sealed blocks before
+# vs after the maintenance rewrite on a deterministic synthetic fixture —
+# a pure byte ratio, machine-independent, gated as an absolute floor: the
+# seal-small-then-compact policy must reclaim at least ~5% or compaction
+# stopped merging.
+COMPACTION_GAIN_FLOOR = float(
+    os.environ.get("CAMEO_COMPACTION_GAIN_FLOOR", "1.05"))
+# tier_hit_ratio is the decoded-block LRU hit fraction of a repeated
+# pushdown workload after one warm-up pass — also an absolute floor: a
+# collapse means hot-tier reads fell back to re-decoding per query.
+TIER_HIT_RATIO_FLOOR = float(
+    os.environ.get("CAMEO_TIER_HIT_RATIO_FLOOR", "0.90"))
 # round_body_eqns counts equations in the *lowered* rounds-mode round body
 # (the while-loop the compressor spends its life in) and is gated as an
 # absolute ceiling: op count is machine-independent, and on CPU the round
@@ -214,8 +232,50 @@ def _measure() -> dict:
     metrics.update(_measure_stream_compress())
     metrics.update(_measure_wal_overhead())
     metrics.update(_measure_mvar(cfg))
+    metrics.update(_measure_serve(cfg))
     metrics.update(_measure_opcount())
     return metrics
+
+
+def _measure_serve(cfg) -> dict:
+    """Ingest-server fixture: one tenant streams the smoke series through
+    a seal-small session, then compaction merges the small blocks and a
+    repeated pushdown workload exercises the hot tier.  Both metrics are
+    deterministic (byte and counter ratios), gated as absolute floors."""
+    import tempfile
+
+    from repro.server import IngestServer, ServerConfig
+
+    x, _ = _fixture()
+    chunk = 731
+    with tempfile.TemporaryDirectory() as tmpdir:
+        path = os.path.join(tmpdir, "serve.cameo")
+        srv = IngestServer(path, cfg, ServerConfig(
+            block_len=4096, seal_block_len=256, stream_window=1024,
+            auto_compact=False, wal=False))
+        srv.register_tenant("t0")
+        with srv.session("s", tenant="t0") as sess:
+            for lo in range(0, _N, chunk):
+                sess.push(x[lo:lo + chunk])
+        before = srv.catalog.usage("t0")["stored_nbytes"]
+        rep = srv.compact("s", tenant="t0")
+        after = srv.catalog.usage("t0")["stored_nbytes"]
+        gain = before / max(after, 1)
+        a, b = _N // 8, _N // 8 + _N // 2
+        view = srv.view("t0")
+        view.series("s").mean(a, b)                     # warm-up decode
+        cs0 = srv.store.cache_stats()
+        for _ in range(32):
+            view.series("s").mean(a, b)
+        cs1 = srv.store.cache_stats()
+        dh = cs1["hits"] - cs0["hits"]
+        dm = cs1["misses"] - cs0["misses"]
+        ratio = dh / max(dh + dm, 1)
+        srv.close()
+    print(f"serve: compaction {rep['blocks_before']}->"
+          f"{rep['blocks_after']} blocks, bytes {before}->{after} "
+          f"(gain {gain:.2f}x), tier hit ratio {ratio:.3f}")
+    return {"compaction_gain": gain, "tier_hit_ratio": ratio}
 
 
 def _count_eqns(jaxpr) -> int:
@@ -540,6 +600,8 @@ def _gate(metrics: dict) -> int:
     baseline.pop("obs_overhead", None)       # gated absolutely below
     baseline.pop("wal_overhead", None)       # gated absolutely below
     baseline.pop("round_body_eqns", None)    # gated absolutely below
+    baseline.pop("compaction_gain", None)    # gated absolutely below
+    baseline.pop("tier_hit_ratio", None)     # gated absolutely below
     if base_native and not _scan.NATIVE:
         print("perf-smoke FAILED: the committed baseline was pinned with "
               "the native C scanner, but this environment has none (no "
@@ -565,7 +627,8 @@ def _gate(metrics: dict) -> int:
         if cur < floor:
             failures.append(key)
     for key in sorted(set(metrics) - set(baseline)
-                      - {"obs_overhead", "wal_overhead", "round_body_eqns"}):
+                      - {"obs_overhead", "wal_overhead", "round_body_eqns",
+                         "compaction_gain", "tier_hit_ratio"}):
         # a freshly added row whose baseline section hasn't been pinned
         # yet: new rows must be able to land in the same PR as their code,
         # so this is a skip, not a failure
@@ -606,6 +669,23 @@ def _gate(metrics: dict) -> int:
               f"(floor {WAL_OVERHEAD_FLOOR:.2f}) {status}")
         if cur < WAL_OVERHEAD_FLOOR:
             failures.append("wal_overhead")
+    # compaction must reclaim the seal-small overhead: a deterministic
+    # byte ratio on a fixed fixture, gated as an absolute floor
+    cur = metrics.get("compaction_gain")
+    if cur is not None:
+        status = "ok" if cur >= COMPACTION_GAIN_FLOOR else "REGRESSED"
+        print(f"compaction_gain: stored before/after ratio {cur:.3f} "
+              f"(floor {COMPACTION_GAIN_FLOOR:.2f}) {status}")
+        if cur < COMPACTION_GAIN_FLOOR:
+            failures.append("compaction_gain")
+    # the hot tier must actually serve repeated pushdowns from the LRU
+    cur = metrics.get("tier_hit_ratio")
+    if cur is not None:
+        status = "ok" if cur >= TIER_HIT_RATIO_FLOOR else "REGRESSED"
+        print(f"tier_hit_ratio: hot-tier hit fraction {cur:.3f} "
+              f"(floor {TIER_HIT_RATIO_FLOOR:.2f}) {status}")
+        if cur < TIER_HIT_RATIO_FLOOR:
+            failures.append("tier_hit_ratio")
     # the round-body op count is a deterministic absolute ceiling: a
     # failure means the round body regrew per-lag unrolled chains
     cur = metrics.get("round_body_eqns")

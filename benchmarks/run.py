@@ -42,6 +42,7 @@ BENCHES = {
     "store": cameo_suite.bench_store,
     "stream": cameo_suite.bench_stream,
     "mvar": cameo_suite.bench_mvar,
+    "serve": cameo_suite.bench_serve,
     "fig12": forecast.bench_fig12_forecasting,
     "fig12lm": forecast.bench_fig12_lm_forecaster,
     "fig13": anomaly.bench_fig13_anomaly,

@@ -16,6 +16,6 @@ points (``TimeSeriesService.submit``/``ingest_stream``, the free
 ``repro.store.window_*`` functions, ``compress_windowed``) are deprecated
 shims over the same internals.
 """
-from repro.api.dataset import Dataset, Series, StreamWriter, open
+from repro.api.dataset import Dataset, DatasetView, Series, StreamWriter, open
 
-__all__ = ["Dataset", "Series", "StreamWriter", "open"]
+__all__ = ["Dataset", "DatasetView", "Series", "StreamWriter", "open"]

@@ -253,10 +253,11 @@ class StreamWriter:
     def __init__(self, store: CameoStore, ccfg: CameoConfig, sid: str, *,
                  window_len: int = 4096, with_resid: bool = True,
                  channels: int = 1, resume: bool = False,
-                 queue_depth: int = None):
+                 queue_depth: int = None, block_len: int = None):
         self.sid = sid
         self._store = store
         self._wal = store._wal
+        self._block_len = block_len   # per-session seal override (server)
         # journaled-but-unreplayed pushes from a crashed run (the store's
         # recovery scan parks them per-sid); consumed exactly once here
         pending = (store._wal_pending.pop(sid, None)
@@ -278,7 +279,8 @@ class StreamWriter:
                                   with_resid=with_resid, channels=channels,
                                   queue_depth=queue_depth)
             else:
-                self._sess = store.open_stream(sid, ccfg, resume=True)
+                self._sess = store.open_stream(sid, ccfg, resume=True,
+                                               block_len=block_len)
                 state = self._sess.restored_client_state
                 if state is None:
                     # unwind: re-stash the session state and release the
@@ -318,7 +320,8 @@ class StreamWriter:
             self._comp = StreamingCompressor(
                 ccfg, window_len, queue_depth=queue_depth or 1)
         self._sess = store.open_stream(
-            sid, ccfg, with_resid=with_resid, channels=channels)
+            sid, ccfg, with_resid=with_resid, channels=channels,
+            block_len=self._block_len)
 
     def _replay(self, pending) -> None:
         """Re-feed journaled pushes a crashed run had acked.  Replay is
@@ -575,7 +578,8 @@ class Dataset:
         return out
 
     def stream(self, sid: str, *, window_len: int = None, channels: int = 1,
-               resume: bool = False, queue_depth: int = None) -> StreamWriter:
+               resume: bool = False, queue_depth: int = None,
+               block_len: int = None) -> StreamWriter:
         """Open a continuous-feed ingest stream for ``sid``.
 
         ``channels > 1`` opens a multivariate stream (push ``[m, C]``
@@ -584,13 +588,16 @@ class Dataset:
         feed points from ``writer.resume_from`` onward.  ``queue_depth=K``
         batches K filled windows into one device program per drain (bytes
         are invariant to the depth; default 1 compresses synchronously).
+        ``block_len`` seals this stream's blocks at a non-default length
+        (the ingest server seals small and compacts later — see
+        ``store/maintenance.py``).
         """
         self._require_write()
         return StreamWriter(
             self._store, self.cfg, sid,
             window_len=window_len or self.stream_window,
             with_resid=self.store_residuals, channels=channels,
-            resume=resume, queue_depth=queue_depth)
+            resume=resume, queue_depth=queue_depth, block_len=block_len)
 
     # -- reads ---------------------------------------------------------------
 
@@ -605,6 +612,14 @@ class Dataset:
 
     def __iter__(self):
         return iter(self._store.series_ids())
+
+    def view(self, prefix: str) -> "DatasetView":
+        """A prefix-scoped facade over this dataset: every sid passed to
+        the view maps to ``prefix + sid`` in the store, and ``sids()``
+        lists only (and un-prefixes) the matching series.  The ingest
+        server hands out ``view(tenant + "/")`` as the tenant-scoped
+        query surface; an empty prefix is the identity view."""
+        return DatasetView(self, prefix)
 
     # -- accounting ----------------------------------------------------------
 
@@ -632,3 +647,51 @@ class Dataset:
             out["per_series"] = {s: self._store.compression_stats(s)
                                  for s in self._store.series_ids()}
         return out
+
+
+class DatasetView:
+    """A sid-prefix-scoped view of a :class:`Dataset` (``Dataset.view``).
+
+    Exposes the ingest/read surface of the dataset with every series id
+    transparently mapped through ``prefix + sid`` — the mechanism behind
+    tenant-scoped access in :mod:`repro.server` (tenant ``t`` owns the
+    ``"t/"`` namespace of the shared store).  The view adds no state of
+    its own: handles it returns (:class:`Series`, :class:`StreamWriter`)
+    are the ordinary ones, bound to the prefixed sid.
+    """
+
+    def __init__(self, dataset: Dataset, prefix: str):
+        self._ds = dataset
+        self.prefix = str(prefix)
+
+    def _sid(self, sid: str) -> str:
+        return self.prefix + sid
+
+    # -- ingest --------------------------------------------------------------
+
+    def write(self, sid: str, x, *, eps=None) -> dict:
+        return self._ds.write(self._sid(sid), x, eps=eps)
+
+    def write_batch(self, items: Dict[str, np.ndarray]) -> Dict[str, dict]:
+        out = self._ds.write_batch(
+            {self._sid(sid): x for sid, x in items.items()})
+        k = len(self.prefix)
+        return {sid[k:]: entry for sid, entry in out.items()}
+
+    def stream(self, sid: str, **kw) -> StreamWriter:
+        return self._ds.stream(self._sid(sid), **kw)
+
+    # -- reads ---------------------------------------------------------------
+
+    def series(self, sid: str) -> Series:
+        return self._ds.series(self._sid(sid))
+
+    def sids(self) -> List[str]:
+        k = len(self.prefix)
+        return [s[k:] for s in self._ds.sids() if s.startswith(self.prefix)]
+
+    def __contains__(self, sid: str) -> bool:
+        return self._sid(sid) in self._ds
+
+    def __iter__(self):
+        return iter(self.sids())

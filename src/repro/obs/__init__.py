@@ -45,7 +45,21 @@ Metric name inventory (the production names; benchmarks reuse them)
 ``query.meta_only|with_edge_decode``   per-query decision outcome
 ``query.bound_width``              realized pushdown bound widths (hist)
 ``span.<name>.seconds|calls``      user/code spans
+``server.sessions`` (gauge) / ``server.pushes|points|rejects``  ingest server
+``server.tenant.pushes|points``    per-tenant (labeled ``{tenant="..."}``)
+``store.tier.cold.hits|bytes``     cold-tier (entropy-wrapped) body fetches
+``store.compaction.runs|blocks_merged|dead_bytes``  compaction rewrites
 ================================  =====================================
+
+Labels
+------
+``inc``/``gauge``/``observe`` take an optional ``labels`` dict; a
+labeled series is stored under the rendered key ``name{k="v"}`` (sorted
+keys), shares its base metric's ``# TYPE`` line in :func:`exposition`,
+and costs nothing when ``labels`` is ``None`` — the disabled-path
+contract (one attribute lookup behind ``if OBS.enabled:``) is
+unchanged.  The ingest server labels its per-tenant traffic this way;
+unlabeled call sites produce byte-identical exposition to before.
 
 The unified stats snapshot schema
 ---------------------------------
@@ -109,16 +123,16 @@ def reset():
     OBS.reset()
 
 
-def inc(name, delta=1):
-    OBS.inc(name, delta)
+def inc(name, delta=1, labels=None):
+    OBS.inc(name, delta, labels=labels)
 
 
-def gauge(name, value):
-    OBS.gauge(name, value)
+def gauge(name, value, labels=None):
+    OBS.gauge(name, value, labels=labels)
 
 
-def observe(name, value):
-    OBS.observe(name, value)
+def observe(name, value, labels=None):
+    OBS.observe(name, value, labels=labels)
 
 
 def span(name, **attrs):

@@ -71,6 +71,34 @@ def sanitize_metric_name(name):
     return s
 
 
+def _escape_label(v):
+    return str(v).replace("\\", "\\\\").replace('"', '\\"')
+
+
+def labeled(name, labels):
+    """Render a metric name + label dict into the registry's labeled-key
+    form, ``name{k="v",...}`` (keys sorted, values escaped).  Labeled
+    series are just distinct keys in the counter/gauge/histogram dicts —
+    the hot path stays a plain dict operation and the exposition surface
+    recognises the embedded suffix (see ``exposition``).  An empty/None
+    label dict returns the bare name, so unlabeled call sites are
+    byte-for-byte unchanged."""
+    if not labels:
+        return name
+    inner = ",".join(f'{sanitize_metric_name(str(k))}="{_escape_label(v)}"'
+                     for k, v in sorted(labels.items()))
+    return f"{name}{{{inner}}}"
+
+
+def _split_key(name):
+    """Split a (possibly labeled) metric key into ``(base, suffix)`` where
+    ``suffix`` is the literal ``{...}`` label block or ``""``."""
+    i = name.find("{")
+    if i < 0:
+        return name, ""
+    return name[:i], name[i:]
+
+
 class StreamingHistogram:
     """Bounded-memory streaming histogram with interpolated quantiles.
 
@@ -172,14 +200,20 @@ class MetricsRegistry:
         self._lock = threading.Lock()
 
     # -- recording ---------------------------------------------------------
-    def inc(self, name, delta=1):
+    def inc(self, name, delta=1, labels=None):
+        if labels:
+            name = labeled(name, labels)
         c = self._counters
         c[name] = c.get(name, 0) + delta
 
-    def gauge(self, name, value):
+    def gauge(self, name, value, labels=None):
+        if labels:
+            name = labeled(name, labels)
         self._gauges[name] = value
 
-    def observe(self, name, value):
+    def observe(self, name, value, labels=None):
+        if labels:
+            name = labeled(name, labels)
         h = self._hists.get(name)
         if h is None:
             with self._lock:
@@ -263,27 +297,44 @@ class MetricsRegistry:
 
         Counters become ``<prefix>_<name>_total``, gauges bare samples,
         histograms summaries with ``quantile`` labels plus ``_sum`` /
-        ``_count``.  Dots in metric names map to underscores.  Output is
-        deterministic (sorted) so it can be golden-tested.
+        ``_count``.  Dots in metric names map to underscores.  Labeled
+        series (keys of the ``name{k="v"}`` form written by the
+        ``labels=`` kwarg) render their label block after the sample
+        name, share one ``# TYPE`` line with their base metric, and for
+        histograms merge the ``quantile`` label into the block.  Output
+        is deterministic (sorted) so it can be golden-tested.
         """
         lines = []
+        last = None
         for name in sorted(self._counters):
-            m = f"{prefix}_{sanitize_metric_name(name)}"
-            lines.append(f"# TYPE {m} counter")
-            lines.append(f"{m}_total {_fmt(self._counters[name])}")
+            base, suffix = _split_key(name)
+            m = f"{prefix}_{sanitize_metric_name(base)}"
+            if m != last:
+                lines.append(f"# TYPE {m} counter")
+                last = m
+            lines.append(f"{m}_total{suffix} {_fmt(self._counters[name])}")
+        last = None
         for name in sorted(self._gauges):
-            m = f"{prefix}_{sanitize_metric_name(name)}"
-            lines.append(f"# TYPE {m} gauge")
-            lines.append(f"{m} {_fmt(self._gauges[name])}")
+            base, suffix = _split_key(name)
+            m = f"{prefix}_{sanitize_metric_name(base)}"
+            if m != last:
+                lines.append(f"# TYPE {m} gauge")
+                last = m
+            lines.append(f"{m}{suffix} {_fmt(self._gauges[name])}")
+        last = None
         for name in sorted(self._hists):
             h = self._hists[name]
-            m = f"{prefix}_{sanitize_metric_name(name)}"
-            lines.append(f"# TYPE {m} summary")
+            base, suffix = _split_key(name)
+            m = f"{prefix}_{sanitize_metric_name(base)}"
+            if m != last:
+                lines.append(f"# TYPE {m} summary")
+                last = m
             for q in _QUANTILES:
-                lines.append(f'{m}{{quantile="{_fmt(q)}"}} '
-                             f"{_fmt(h.quantile(q))}")
-            lines.append(f"{m}_sum {_fmt(h.sum)}")
-            lines.append(f"{m}_count {_fmt(h.count)}")
+                qlab = (f'{{{suffix[1:-1]},quantile="{_fmt(q)}"}}' if suffix
+                        else f'{{quantile="{_fmt(q)}"}}')
+                lines.append(f"{m}{qlab} {_fmt(h.quantile(q))}")
+            lines.append(f"{m}_sum{suffix} {_fmt(h.sum)}")
+            lines.append(f"{m}_count{suffix} {_fmt(h.count)}")
         if self._jits:
             m = f"{prefix}_recompile_watermark"
             lines.append(f"# TYPE {m} gauge")

@@ -6,8 +6,10 @@
     ``repro.api.open(path, cfg)`` returns a ``Dataset`` whose ``write`` /
     ``write_batch`` / ``stream`` / ``series`` methods are the single
     documented surface, with first-class multivariate series.  The shims
-    keep working and stay byte-identical to the façade (they drive the
-    same internals), but new code should not use them.
+    keep working and stay byte-identical to the façade — since the
+    multi-tenant server landed they are a single-tenant wrapper over
+    :class:`repro.server.IngestServer` (default tenant, no small-block
+    sealing, no compaction) — but new code should not use them.
 
 The fleet-of-sensors front-end: producers ``submit`` raw series, the
 service buffers them into length groups and drives one
@@ -54,11 +56,10 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro.api.dataset import Dataset, StreamWriter
 from repro.core.cameo import CameoConfig
+from repro.server.ingest_server import IngestServer, ServerConfig
 from repro.store import wal as _wal
 from repro.store.query import query as _pushdown_query
-from repro.store.store import CameoStore
 
 
 @dataclasses.dataclass
@@ -80,11 +81,12 @@ class TsServiceConfig:
     wal_group_bytes: int = _wal.DEFAULT_GROUP_BYTES
 
 
-class StreamIngest(StreamWriter):
+class StreamIngest:
     """One unbounded-feed ingest stream: chunks in, blocks out, O(window)
-    state.  A thin service-bookkeeping shim over the façade's
-    :class:`repro.api.StreamWriter` (same code path, so service streams
-    stay byte-identical to ``Dataset.stream`` writes).  Obtain via
+    state.  A thin service-bookkeeping shim over the ingest server's
+    session API (:meth:`repro.server.IngestServer.session`, default
+    tenant) — the same ``StreamWriter`` code path underneath, so service
+    streams stay byte-identical to ``Dataset.stream`` writes.  Obtain via
     :meth:`TimeSeriesService.ingest_stream`; feed with :meth:`push` and
     :meth:`close` when the feed ends.
     """
@@ -92,19 +94,52 @@ class StreamIngest(StreamWriter):
     def __init__(self, service: "TimeSeriesService", sid: str,
                  window_len: int, resume: bool, queue_depth: int = None):
         self._svc = service
-        super().__init__(service.store, service.ccfg, sid,
-                         window_len=window_len,
-                         with_resid=service.scfg.store_residuals,
-                         resume=resume,
-                         queue_depth=(service.scfg.queue_depth
-                                      if queue_depth is None
-                                      else queue_depth))
+        self.sid = sid
+        self._sess = service._server.session(
+            sid, resume=resume, window_len=window_len,
+            queue_depth=(service.scfg.queue_depth
+                         if queue_depth is None else queue_depth))
+
+    @property
+    def resume_from(self) -> int:
+        return self._sess.resume_from
+
+    @property
+    def n_seen(self) -> int:
+        return self._sess.n_seen
+
+    @property
+    def channels(self) -> int:
+        return self._sess.channels
+
+    @property
+    def closed(self) -> bool:
+        return self._sess.closed
+
+    def deviation(self) -> float:
+        return self._sess.deviation()
+
+    def deviations(self) -> np.ndarray:
+        return self._sess.deviations()
+
+    def push(self, chunk) -> int:
+        return self._sess.push(chunk)
+
+    def flush(self) -> None:
+        self._sess.flush()
 
     def close(self) -> dict:
-        entry = super().close()
+        entry = self._sess.close()
         self._svc._streams.pop(self.sid, None)
         self._svc._ingested += 1
         return entry
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        if exc[0] is None and not self.closed:
+            self.close()
 
 
 class TimeSeriesService:
@@ -115,18 +150,26 @@ class TimeSeriesService:
                  resume: bool = False):
         self.ccfg = ccfg
         self.scfg = scfg or TsServiceConfig()
-        self.store = CameoStore(
-            path, "a" if resume else "w", block_len=self.scfg.block_len,
-            value_codec=self.scfg.value_codec, entropy=self.scfg.entropy,
-            cache_bytes=self.scfg.cache_bytes, wal=self.scfg.wal,
-            wal_group_ms=self.scfg.wal_group_ms,
-            wal_group_bytes=self.scfg.wal_group_bytes)
-        # the façade Dataset over the same store: batched ingest routes
-        # through Dataset.write_batch, so the deprecated service surface
-        # stays a shim over the one documented path (identical bytes)
-        self._ds = Dataset(self.store, ccfg,
-                           store_residuals=self.scfg.store_residuals,
-                           stream_window=self.scfg.stream_window)
+        # the service is a single-tenant shim over the ingest server:
+        # every entry point routes through the server's default-tenant
+        # surface (seal_block_len=None, no compaction), so the stored
+        # bytes stay identical to the pre-server service and to the
+        # Dataset façade
+        self._server = IngestServer(
+            path, ccfg, ServerConfig(
+                block_len=self.scfg.block_len, seal_block_len=None,
+                value_codec=self.scfg.value_codec,
+                entropy=self.scfg.entropy,
+                cache_bytes=self.scfg.cache_bytes,
+                store_residuals=self.scfg.store_residuals,
+                stream_window=self.scfg.stream_window,
+                queue_depth=self.scfg.queue_depth, wal=self.scfg.wal,
+                wal_group_ms=self.scfg.wal_group_ms,
+                wal_group_bytes=self.scfg.wal_group_bytes,
+                max_sessions=1 << 30, auto_compact=False),
+            resume=resume)
+        self.store = self._server.store
+        self._ds = self._server._ds
         # pending ingest, grouped by length (compress_batch wants [B, n])
         self._pending: Dict[int, List[Tuple[str, np.ndarray]]] = {}
         self._streams: Dict[str, StreamIngest] = {}   # open feed streams
@@ -147,7 +190,7 @@ class TimeSeriesService:
         acked — including open streams' resume state — survives the
         shutdown even if the process dies right after."""
         self.flush()
-        self.store.close()
+        self._server.close()
 
     # -- ingest -------------------------------------------------------------
 
@@ -178,10 +221,10 @@ class TimeSeriesService:
         group = self._pending.pop(length, [])
         if not group:
             return
-        # one façade call: Dataset.write_batch drives the same
+        # one server call: the default-tenant write_batch drives the same
         # compress_batch-per-length-group burst and append order this
         # method used to hand-roll, so stored bytes are unchanged
-        self._ds.write_batch(dict(group))
+        self._server.write_batch(dict(group))
         self._ingested += len(group)
         self._rounds += 1
 

@@ -262,6 +262,7 @@ def derive_aggregate_rows(sxx: np.ndarray, hv: np.ndarray, tv: np.ndarray,
 def build_block(kept_idx, kept_vals, *, t0: int, t1: int, is_last: bool,
                 owned_xr: np.ndarray, L: int, kappa: int, stat: str,
                 eps: float, resid: Optional[np.ndarray] = None,
+                resid_moments: Optional[tuple] = None,
                 value_codec: str = "gorilla", entropy: str = "auto",
                 meta_version: int = 3):
     """Encode one block -> ``(body, info)``.
@@ -269,7 +270,12 @@ def build_block(kept_idx, kept_vals, *, t0: int, t1: int, is_last: bool,
     ``kept_idx``/``kept_vals`` are the kept points in ``[t0, t1]`` (global
     indices, both borders included); ``owned_xr`` is the reconstruction over
     the owned range and ``resid`` the residual ``x - xr`` over the same
-    range when the original was available.  ``info`` carries
+    range when the original was available.  ``resid_moments`` is the
+    alternative when the original is *not* available but its Plato moments
+    are: a ``(r1, r2, rx, emax)`` tuple stored verbatim — the compaction
+    rewriter merges blocks whose owned ranges exactly partition the merged
+    range, so the moments of the merged block are the sums (max for
+    ``emax``) of the parts' stored moments.  ``info`` carries
     ``payload_nbytes`` (the codec-only stream size), ``meta_nbytes`` (the
     compacted aggregate/edge metadata) and ``meta_raw_nbytes`` (what the
     stored metadata vectors would cost uncompacted) — header metadata is
@@ -303,6 +309,9 @@ def build_block(kept_idx, kept_vals, *, t0: int, t1: int, is_last: bool,
         r1, r2 = float(resid.sum()), float(np.dot(resid, resid))
         rx = float(np.dot(owned_xr, resid))
         emax = float(np.max(np.abs(resid))) if resid.size else 0.0
+    elif resid_moments is not None:
+        flags |= _FLAG_RESID
+        r1, r2, rx, emax = (float(v) for v in resid_moments)
     else:
         r1 = r2 = rx = emax = 0.0
 

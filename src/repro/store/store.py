@@ -144,9 +144,16 @@ class BlockCache:
     it, the block's reconstruction; ``grow`` accounts the late-attached
     reconstruction bytes.  A zero budget disables caching (every ``put``
     evicts immediately), which the eviction tests rely on.
+
+    ``pin`` marks an entry hot-tier resident: pinned entries still count
+    against the budget but are skipped by eviction (the serving layer pins
+    blocks of latency-critical windows; see ``server/tiers.py``).  When
+    every entry is pinned the cache is allowed to run over budget rather
+    than evict a pin — unpinning re-triggers eviction on the next put.
     """
 
-    __slots__ = ("budget", "nbytes", "hits", "misses", "evictions", "_d")
+    __slots__ = ("budget", "nbytes", "hits", "misses", "evictions", "_d",
+                 "_pinned")
 
     def __init__(self, budget: int):
         self.budget = int(budget)
@@ -155,6 +162,7 @@ class BlockCache:
         self.misses = 0
         self.evictions = 0
         self._d = collections.OrderedDict()
+        self._pinned = set()
 
     def get(self, key):
         e = self._d.get(key)
@@ -185,24 +193,44 @@ class BlockCache:
             self.nbytes += extra
             self._evict()
 
+    def pin(self, key) -> bool:
+        """Exempt a resident entry from eviction; returns False on miss."""
+        if key not in self._d:
+            return False
+        self._pinned.add(key)
+        return True
+
+    def unpin(self, key):
+        self._pinned.discard(key)
+
     def invalidate(self, sid: str):
         for key in [k for k in self._d if k[0] == sid]:
             self.nbytes -= self._d.pop(key)[_E_NBYTES]
+            self._pinned.discard(key)
 
     def drop(self, key):
         """Invalidate one block entry (streamed per-append invalidation)."""
         e = self._d.pop(key, None)
         if e is not None:
             self.nbytes -= e[_E_NBYTES]
+            self._pinned.discard(key)
 
     def clear(self):
         self._d.clear()
+        self._pinned.clear()
         self.nbytes = 0
 
     def _evict(self):
         ev = 0
         while self.nbytes > self.budget and self._d:
-            _, e = self._d.popitem(last=False)
+            if self._pinned:
+                key = next((k for k in self._d if k not in self._pinned),
+                           None)
+                if key is None:
+                    break          # everything resident is pinned
+                e = self._d.pop(key)
+            else:
+                _, e = self._d.popitem(last=False)
             self.nbytes -= e[_E_NBYTES]
             self.evictions += 1
             ev += 1
@@ -212,6 +240,7 @@ class BlockCache:
     def stats(self) -> dict:
         return dict(hits=self.hits, misses=self.misses,
                     evictions=self.evictions, entries=len(self._d),
+                    pinned=len(self._pinned),
                     nbytes=self.nbytes, budget=self.budget)
 
 
@@ -242,6 +271,14 @@ class CameoStore:
         self.entropy = entropy
         self.version = int(version)
         self._series: Dict[str, dict] = {}   # sid -> catalog entry
+        self._tenants: Dict[str, dict] = {}  # tenant -> config (server layer)
+        self._dead_nbytes = 0    # bytes orphaned by compaction/tier rewrites
+        # per-tier fetch counters (hot tier = the decoded-block LRU, whose
+        # hits/misses live in cache_stats): "warm" = plain block bodies read
+        # from mmap/pread, "cold" = entropy-wrapped bodies (see
+        # store/maintenance.py) that pay an unwrap on top of the fetch
+        self._tier_counts = dict(warm_hits=0, warm_bytes=0,
+                                 cold_hits=0, cold_bytes=0)
         # O(1) running ingest totals (see ingest_totals) — bumped on every
         # append/stream emit, recomputed from the catalog on open
         self._totals = dict(series=0, points=0, n_kept=0,
@@ -423,6 +460,8 @@ class CameoStore:
             self.value_codec = ckpt.meta.get("value_codec", self.value_codec)
             self.entropy = ckpt.meta.get("entropy", self.entropy)
             self._series = {}
+            self._tenants = {}
+            self._dead_nbytes = 0
             self._totals = dict(series=0, points=0, n_kept=0,
                                 stored_nbytes=0, raw_nbytes=0)
         if OBS.enabled:
@@ -513,10 +552,17 @@ class CameoStore:
         for sid, sess in self._streams.items():
             self._series[sid]["stream_state"] = sess._stash()
         off = self._f.seek(0, os.SEEK_END)
+        cat = {"block_len": self.block_len, "value_codec": self.value_codec,
+               "entropy": self.entropy, "series": self._series}
+        # optional keys are written only when set, so stores that never see
+        # the server layer / maintenance rewrites stay byte-identical to
+        # what previous writers produced
+        if self._tenants:
+            cat["tenants"] = self._tenants
+        if self._dead_nbytes:
+            cat["dead_nbytes"] = self._dead_nbytes
         footer = zlib.compress(json.dumps(
-            {"block_len": self.block_len, "value_codec": self.value_codec,
-             "entropy": self.entropy, "series": self._series},
-            default=_json_default).encode())
+            cat, default=_json_default).encode())
         # two-phase publish: the footer body must be durable *before* the
         # tail marker that makes readers trust it — a crash between the
         # barriers leaves a torn tail (recoverable), never a tail marker
@@ -571,6 +617,8 @@ class CameoStore:
         self.value_codec = meta.get("value_codec", self.value_codec)
         self.entropy = meta.get("entropy", self.entropy)
         self._series = meta["series"]
+        self._tenants = meta.get("tenants", {})
+        self._dead_nbytes = int(meta.get("dead_nbytes", 0))
         self._footer_offset = off
         t = self._totals = dict(series=0, points=0, n_kept=0,
                                 stored_nbytes=0, raw_nbytes=0)
@@ -761,7 +809,8 @@ class CameoStore:
 
     def open_stream(self, sid: str, cfg, *, dtype: str = None,
                     with_resid: bool = True, channels: int = 1,
-                    resume: bool = False) -> "StreamSession":
+                    resume: bool = False,
+                    block_len: int = None) -> "StreamSession":
         """Open a streaming append session for one series.
 
         The session absorbs closed stream windows (``StreamSession.append``
@@ -776,6 +825,13 @@ class CameoStore:
         construction).  The finalized series — blocks, offsets, catalog
         entry — is byte-identical to a one-shot ``append_series`` of the
         same kept points.
+
+        ``block_len`` overrides the store-wide block length for this
+        session only (the ingest server seals small low-latency blocks per
+        stream and lets the compaction worker rewrite them to full size
+        later — see ``store/maintenance.py``).  The override rides along in
+        the resume stash, so a resumed session keeps sealing at the same
+        length.
         """
         if not self._writable:
             raise IOError("store opened read-only")
@@ -803,7 +859,8 @@ class CameoStore:
                     "previous writer crashed before flush()/close")
             sess = StreamSession(self, sid, cfg, dtype=stash["dtype"],
                                  with_resid=stash["with_resid"],
-                                 entry=entry, stash=stash)
+                                 entry=entry, stash=stash,
+                                 block_len=block_len)
         else:
             if sid in self._series:
                 raise ValueError(f"series {sid!r} already stored")
@@ -825,7 +882,8 @@ class CameoStore:
             self._series[sid] = entry
             self._bump_totals(series=1)
             sess = StreamSession(self, sid, cfg, dtype=entry["dtype"],
-                                 with_resid=with_resid, entry=entry)
+                                 with_resid=with_resid, entry=entry,
+                                 block_len=block_len)
         self._streams[sid] = sess
         return sess
 
@@ -842,6 +900,27 @@ class CameoStore:
 
     # -- block access -------------------------------------------------------
 
+    def _finish_body(self, blk: dict, raw: bytes) -> bytes:
+        """Tier accounting + cold-tier unwrap of one fetched body.
+
+        Catalog entries of cold blocks carry a ``"wrap"`` key naming the
+        entropy codec their on-disk body is wrapped in (see
+        ``store/maintenance.py``); the unwrap reproduces the original
+        length-prefixed body — crc and all — so every downstream parse and
+        answer is byte-identical across tiers."""
+        t = self._tier_counts
+        wrap = blk.get("wrap")
+        if wrap is None:
+            t["warm_hits"] += 1
+            t["warm_bytes"] += len(raw)
+            return raw
+        t["cold_hits"] += 1
+        t["cold_bytes"] += len(raw)
+        if OBS.enabled:
+            OBS.inc("store.tier.cold.hits")
+            OBS.inc("store.tier.cold.bytes", len(raw))
+        return _codec.entropy_unwrap(bytes(raw), wrap)
+
     def _read_body(self, blk: dict) -> bytes:
         mm = self._mmap()
         if mm is not None:
@@ -850,13 +929,13 @@ class CameoStore:
             if OBS.enabled:
                 OBS.inc("store.read.mmap_bytes", 4 + blen)
                 OBS.inc("store.read.blocks_fetched")
-            return mm[off + 4:off + 4 + blen]
+            return self._finish_body(blk, mm[off + 4:off + 4 + blen])
         self._f.seek(blk["offset"])
         blen, = struct.unpack("<I", self._f.read(4))
         if OBS.enabled:
             OBS.inc("store.read.pread_bytes", 4 + blen)
             OBS.inc("store.read.blocks_fetched")
-        return self._f.read(blen)
+        return self._finish_body(blk, self._f.read(blen))
 
     def _read_bodies(self, blks: List[dict]) -> List[bytes]:
         """One body per catalog entry; blocks that sit contiguously in the
@@ -881,9 +960,10 @@ class CameoStore:
                 OBS.inc("store.read.pread_bytes", len(buf))
                 OBS.inc("store.read.blocks_fetched", j - i + 1)
             pos = 0
-            for _ in range(i, j + 1):
+            for k in range(i, j + 1):
                 blen, = struct.unpack_from("<I", buf, pos)
-                out.append(buf[pos + 4:pos + 4 + blen])
+                out.append(self._finish_body(blks[k],
+                                             buf[pos + 4:pos + 4 + blen]))
                 pos += 4 + blen
             i = j + 1
         return out
@@ -956,6 +1036,17 @@ class CameoStore:
         """Decoded block (meta, global kept indices, values) — cached."""
         e = self._blocks(sid, [bi])[0]
         return e[_E_META], e[_E_IDX], e[_E_VALS]
+
+    def prefetch(self, sid: str, a: int = 0, b: int = None) -> List[int]:
+        """Decode the blocks overlapping ``[a, b)`` into the hot-tier LRU
+        (coalesced fetches, same as a window read would) without
+        materializing the window; returns the warmed block indices."""
+        entry = self._series[sid]
+        if b is None:
+            b = entry["n"]
+        bis = self._overlapping(sid, int(a), int(b))
+        self._blocks(sid, bis)
+        return bis
 
     def _overlapping(self, sid: str, a: int, b: int):
         """Indices of blocks whose *owned* range intersects [a, b).  While a
@@ -1058,6 +1149,22 @@ class CameoStore:
         """Decoded-block LRU counters (hits/misses/evictions/bytes)."""
         return self._cache.stats()
 
+    def tier_stats(self) -> dict:
+        """Per-tier read counters.  ``hot`` is the decoded-block LRU (a hit
+        never touches the file), ``warm`` counts plain body fetches from
+        mmap/pread, ``cold`` counts entropy-wrapped body fetches (bytes are
+        the wrapped on-disk sizes); ``dead_nbytes`` is the file space
+        orphaned by compaction / tier rewrites (reclaimable by a copying
+        rewrite of the store)."""
+        c = self._cache
+        t = self._tier_counts
+        return dict(
+            hot=dict(hits=c.hits, misses=c.misses, nbytes=c.nbytes,
+                     pinned=len(c._pinned)),
+            warm=dict(hits=t["warm_hits"], nbytes=t["warm_bytes"]),
+            cold=dict(hits=t["cold_hits"], nbytes=t["cold_bytes"]),
+            dead_nbytes=self._dead_nbytes)
+
     def ingest_totals(self) -> dict:
         """O(1) running ingest totals across every stored series.
 
@@ -1122,7 +1229,8 @@ class StreamSession:
     """
 
     def __init__(self, store: CameoStore, sid: str, cfg, *, dtype: str,
-                 with_resid: bool, entry: dict, stash: dict = None):
+                 with_resid: bool, entry: dict, stash: dict = None,
+                 block_len: int = None):
         self._store = store
         self.sid = sid
         self.cfg = cfg
@@ -1130,7 +1238,13 @@ class StreamSession:
         self.with_resid = bool(with_resid)
         self._entry = entry
         self.channels = int(entry.get("channels", 1))
-        self._block_len = max(int(store.block_len), int(cfg.lags))
+        # a stashed override wins over the argument: the session must keep
+        # planning the same borders it was planning before the resume
+        if stash is not None and stash.get("block_len") is not None:
+            block_len = stash["block_len"]
+        self._block_len_override = None if not block_len else int(block_len)
+        self._block_len = max(
+            int(self._block_len_override or store.block_len), int(cfg.lags))
         self._closed = False
         self.state_provider = None        # callable -> JSON-safe blob
         self.restored_client_state = None
@@ -1397,6 +1511,7 @@ class StreamSession:
         self._consolidate()
         return dict(
             dtype=str(self.dtype), with_resid=self.with_resid,
+            block_len=self._block_len_override,
             bound=self._bound, next=self._next, x_off=self._x_off,
             committed=self._committed, total_kept=self._total_kept,
             kept_idx=[int(i) for i in self._kept_idx],

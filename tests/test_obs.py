@@ -174,6 +174,31 @@ def test_exposition_golden():
         "cameo_h_count 1\n")
 
 
+def test_exposition_labeled_golden():
+    """Labeled metrics render Prometheus-style: sorted label keys,
+    escaped values, one TYPE line per metric base, and the unlabeled
+    series first.  The unlabeled output above is byte-unchanged."""
+    reg = MetricsRegistry(enabled=True)
+    reg.inc("a.b", 3)
+    reg.inc("a.b", 2, labels={"tenant": "t0"})
+    reg.inc("a.b", 1, labels={"tenant": "t1", "shard": 's"x\\y'})
+    reg.gauge("g", 1.5, labels={"shard": "s1"})
+    reg.observe("h", 1.0, labels={"tenant": "t0"})
+    assert reg.exposition() == (
+        "# TYPE cameo_a_b counter\n"
+        "cameo_a_b_total 3\n"
+        'cameo_a_b_total{shard="s\\"x\\\\y",tenant="t1"} 1\n'
+        'cameo_a_b_total{tenant="t0"} 2\n'
+        "# TYPE cameo_g gauge\n"
+        'cameo_g{shard="s1"} 1.5\n'
+        "# TYPE cameo_h summary\n"
+        'cameo_h{tenant="t0",quantile="0.5"} 1\n'
+        'cameo_h{tenant="t0",quantile="0.95"} 1\n'
+        'cameo_h{tenant="t0",quantile="0.99"} 1\n'
+        'cameo_h_sum{tenant="t0"} 1\n'
+        'cameo_h_count{tenant="t0"} 1\n')
+
+
 def test_exposition_watermark_line_only_with_jits():
     reg = MetricsRegistry(enabled=True)
     assert "recompile_watermark" not in reg.exposition()

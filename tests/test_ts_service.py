@@ -89,6 +89,40 @@ def test_service_cache_stats(tmp_path):
         assert svc.stats()["cache"]["hits"] > h0
 
 
+def test_service_routes_through_server_byte_identical(tmp_path):
+    """The deprecated service shims ride the ingest server's
+    default-tenant session API; the stored file must stay byte-identical
+    to the direct Dataset façade driving the same feed."""
+    import warnings
+
+    import repro.api as cameo
+    from repro.core.streaming import min_window_len
+    from repro.server import IngestServer
+
+    x = _fleet([700], seed=5)["s0"]
+    wlen = max(256, min_window_len(CFG))
+    p_svc = str(tmp_path / "svc.cameo")
+    p_ds = str(tmp_path / "ds.cameo")
+    scfg = TsServiceConfig(block_len=128, stream_window=wlen)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        with TimeSeriesService(p_svc, CFG, scfg) as svc:
+            assert isinstance(svc._server, IngestServer)   # the reroute
+            svc.submit("a", x)
+            svc.flush()
+            h = svc.ingest_stream("b", window_len=wlen)
+            for lo in range(0, 700, 130):
+                h.push(x[lo:lo + 130])
+            h.close()
+    with cameo.open(p_ds, CFG, mode="w", block_len=128,
+                    stream_window=wlen) as ds:
+        ds.write_batch({"a": x})
+        with ds.stream("b") as w:
+            for lo in range(0, 700, 130):
+                w.push(x[lo:lo + 130])
+    assert open(p_svc, "rb").read() == open(p_ds, "rb").read()
+
+
 def test_service_sequential_mode_fallback(tmp_path):
     cfg = CameoConfig(eps=2e-2, lags=8, mode="sequential", hops=8,
                       window=32, dtype="float64")
