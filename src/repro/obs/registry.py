@@ -99,6 +99,18 @@ def _split_key(name):
     return name[:i], name[i:]
 
 
+def _expo_sorted(keys):
+    """Exposition order: group by *sanitized* base name, then label
+    block.  Sorting raw keys would let a dotted name (``a.b.c``) sort
+    between a base (``a.b``) and its labeled ``a.b{...}`` keys and split
+    the family across two ``# TYPE`` lines, which Prometheus parsers
+    reject as a duplicate."""
+    def order(name):
+        base, suffix = _split_key(name)
+        return sanitize_metric_name(base), suffix
+    return sorted(keys, key=order)
+
+
 class StreamingHistogram:
     """Bounded-memory streaming histogram with interpolated quantiles.
 
@@ -306,7 +318,7 @@ class MetricsRegistry:
         """
         lines = []
         last = None
-        for name in sorted(self._counters):
+        for name in _expo_sorted(self._counters):
             base, suffix = _split_key(name)
             m = f"{prefix}_{sanitize_metric_name(base)}"
             if m != last:
@@ -314,7 +326,7 @@ class MetricsRegistry:
                 last = m
             lines.append(f"{m}_total{suffix} {_fmt(self._counters[name])}")
         last = None
-        for name in sorted(self._gauges):
+        for name in _expo_sorted(self._gauges):
             base, suffix = _split_key(name)
             m = f"{prefix}_{sanitize_metric_name(base)}"
             if m != last:
@@ -322,7 +334,7 @@ class MetricsRegistry:
                 last = m
             lines.append(f"{m}{suffix} {_fmt(self._gauges[name])}")
         last = None
-        for name in sorted(self._hists):
+        for name in _expo_sorted(self._hists):
             h = self._hists[name]
             base, suffix = _split_key(name)
             m = f"{prefix}_{sanitize_metric_name(base)}"

@@ -27,11 +27,12 @@ from repro.server.ingest_server import (
     ServerBusy,
     ServerConfig,
     ServerSession,
+    ServerView,
 )
 from repro.server.tiers import TierManager
 
 __all__ = [
-    "IngestServer", "ServerConfig", "ServerSession", "ServerBusy",
-    "QuotaExceeded", "TenantCatalog", "TierManager", "CompactionWorker",
-    "DEFAULT_TENANT", "tenant_sid",
+    "IngestServer", "ServerConfig", "ServerSession", "ServerView",
+    "ServerBusy", "QuotaExceeded", "TenantCatalog", "TierManager",
+    "CompactionWorker", "DEFAULT_TENANT", "tenant_sid",
 ]

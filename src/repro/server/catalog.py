@@ -44,12 +44,14 @@ class TenantCatalog:
         """Register (or re-configure) a tenant.  ``eps`` overrides the
         server's compression budget for this tenant's streams;
         ``max_points`` caps its total ingested points (channel-expanded),
-        enforced *before* a push is journaled/acked."""
+        enforced *before* a push is journaled/acked.  Re-registering
+        merges: an omitted kwarg keeps its configured value, so updating
+        ``eps`` never silently drops an existing quota."""
         if tenant == DEFAULT_TENANT:
             raise ValueError("the default tenant needs no registration")
         if "/" in tenant:
             raise ValueError(f"tenant name {tenant!r} must not contain '/'")
-        cfg = {}
+        cfg = dict(self._store._tenants.get(tenant, {}))
         if eps is not None:
             cfg["eps"] = float(eps)
         if max_points is not None:

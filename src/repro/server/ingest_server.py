@@ -27,7 +27,9 @@ The server multiplexes named **tenant sessions** over a single
   cold storage tiers.
 
 ``server.view(tenant)`` hands out the tenant-scoped
-:class:`~repro.api.dataset.DatasetView` query surface;
+:class:`ServerView` query surface (reads are the plain
+``DatasetView``; ingest methods route back through the server lock,
+quota and admission);
 ``metrics_text()`` / ``metrics_app()`` expose the ``obs`` registry as a
 Prometheus-style ``/metrics`` endpoint.
 """
@@ -101,6 +103,7 @@ class ServerSession:
         self._w = writer
         self._quota = quota
         self.closed = False
+        self._slot_released = False
 
     # -- introspection -------------------------------------------------------
 
@@ -161,13 +164,19 @@ class ServerSession:
     def close(self) -> dict:
         """Finalize the series (durable footer publish), release the
         admission slot, and queue the series for background compaction
-        when the server seals small blocks."""
+        when the server seals small blocks.  The slot is released even
+        when finalize fails — a failed close never shrinks admission
+        capacity (the session stays in the table for a retry)."""
         srv = self._server
-        with srv._lock:
-            entry = self._w.close()
-            srv._sessions.pop((self.tenant, self.series), None)
-        self.closed = True
-        srv._slots.release()
+        try:
+            with srv._lock:
+                entry = self._w.close()
+                srv._sessions.pop((self.tenant, self.series), None)
+            self.closed = True
+        finally:
+            if not self._slot_released:
+                self._slot_released = True
+                srv._slots.release()
         if OBS.enabled:
             OBS.gauge("server.sessions", len(srv._sessions))
         if srv.cfg.auto_compact and srv.cfg.seal_block_len:
@@ -180,6 +189,34 @@ class ServerSession:
     def __exit__(self, *exc):
         if exc[0] is None and not self.closed:
             self.close()
+
+
+class ServerView(DatasetView):
+    """Tenant-scoped facade handed out by :meth:`IngestServer.view`.
+
+    Reads are the plain :class:`DatasetView` surface; the ingest
+    methods are overridden to route back through the server, so a view
+    can never bypass admission control — ``write``/``write_batch`` run
+    under the server lock with the tenant quota checked *before* the
+    journal append (raising :class:`QuotaExceeded`), and ``stream``
+    opens a full :class:`ServerSession` (it takes an admission slot and
+    accepts the ``session`` keywords: ``channels``, ``resume``,
+    ``window_len``, ``queue_depth``, ``eps``)."""
+
+    def __init__(self, server: "IngestServer", tenant: str):
+        super().__init__(server._ds,
+                         "" if tenant == DEFAULT_TENANT else tenant + "/")
+        self._server = server
+        self._tenant = tenant
+
+    def write(self, sid: str, x, *, eps=None) -> dict:
+        return self._server.write(sid, x, tenant=self._tenant, eps=eps)
+
+    def write_batch(self, items: Dict[str, np.ndarray]) -> Dict[str, dict]:
+        return self._server.write_batch(items, tenant=self._tenant)
+
+    def stream(self, sid: str, **kw) -> ServerSession:
+        return self._server.session(sid, tenant=self._tenant, **kw)
 
 
 class IngestServer:
@@ -205,8 +242,8 @@ class IngestServer:
                            store_residuals=cfg.store_residuals,
                            stream_window=cfg.stream_window)
         self.catalog = TenantCatalog(self.store)
-        self.tiers = TierManager(self.store)
         self._lock = threading.RLock()
+        self.tiers = TierManager(self.store, lock=self._lock)
         self._sessions: Dict[Tuple[str, str], ServerSession] = {}
         self._slots = threading.BoundedSemaphore(int(cfg.max_sessions))
         self._used_points: Dict[str, int] = {}
@@ -372,13 +409,14 @@ class IngestServer:
 
     # -- reads ---------------------------------------------------------------
 
-    def view(self, tenant: str = DEFAULT_TENANT) -> DatasetView:
-        """The tenant-scoped query/ingest facade (``Dataset.view``)."""
+    def view(self, tenant: str = DEFAULT_TENANT) -> ServerView:
+        """The tenant-scoped query/ingest facade.  Ingest methods route
+        back through the server (lock + quota + admission) — see
+        :class:`ServerView`."""
         if tenant != DEFAULT_TENANT and not self.catalog.is_registered(
                 tenant):
             raise KeyError(f"unknown tenant {tenant!r}")
-        prefix = "" if tenant == DEFAULT_TENANT else tenant + "/"
-        return self._ds.view(prefix)
+        return ServerView(self, tenant)
 
     def series(self, series: str, *,
                tenant: str = DEFAULT_TENANT) -> Series:

@@ -19,6 +19,7 @@ for the mechanics.  ``stats()`` surfaces the per-tier hit/byte counters
 """
 from __future__ import annotations
 
+import threading
 from typing import List
 
 from repro.store import maintenance as _maint
@@ -26,42 +27,52 @@ from repro.store import maintenance as _maint
 
 class TierManager:
     """Pin/prefetch over the hot tier + demote/promote between warm and
-    cold, for one store (thread safety is the owning server's lock)."""
+    cold, for one store.  Every operation runs under ``lock`` — the
+    owning :class:`~repro.server.IngestServer` passes its ``_lock`` so
+    tier rewrites serialize against live session pushes (standalone use
+    gets a private lock)."""
 
-    def __init__(self, store):
+    def __init__(self, store, lock=None):
         self._store = store
+        self._lock = lock if lock is not None else threading.RLock()
 
     # -- hot tier ------------------------------------------------------------
 
     def prefetch(self, sid: str, a: int = 0, b: int = None) -> List[int]:
         """Decode the blocks overlapping ``[a, b)`` into the LRU."""
-        return self._store.prefetch(sid, a, b)
+        with self._lock:
+            return self._store.prefetch(sid, a, b)
 
     def pin(self, sid: str, a: int = 0, b: int = None) -> List[int]:
         """Prefetch + pin a window's blocks hot (evict-exempt); returns
         the pinned block indices.  Pins survive until ``unpin``."""
-        bis = self._store.prefetch(sid, a, b)
-        for bi in bis:
-            self._store._cache.pin((sid, bi))
-        return bis
+        with self._lock:
+            bis = self._store.prefetch(sid, a, b)
+            for bi in bis:
+                self._store._cache.pin((sid, bi))
+            return bis
 
     def unpin(self, sid: str, a: int = 0, b: int = None) -> None:
-        entry = self._store._series[sid]
-        b = entry["n"] if b is None else b
-        for bi in self._store._overlapping(sid, int(a), int(b)):
-            self._store._cache.unpin((sid, bi))
+        with self._lock:
+            entry = self._store._series[sid]
+            b = entry["n"] if b is None else b
+            for bi in self._store._overlapping(sid, int(a), int(b)):
+                self._store._cache.unpin((sid, bi))
 
     # -- warm <-> cold -------------------------------------------------------
 
     def demote_cold(self, sid: str, *, codec: str = "auto") -> dict:
         """Entropy-wrap one series' block bodies (see ``rewrite_cold``)."""
-        return _maint.rewrite_cold(self._store, sid, codec=codec)
+        with self._lock:
+            return _maint.rewrite_cold(self._store, sid, codec=codec)
 
     def promote_warm(self, sid: str) -> dict:
         """Unwrap one series' bodies back to the warm tier."""
-        return _maint.promote_warm(self._store, sid)
+        with self._lock:
+            return _maint.promote_warm(self._store, sid)
 
     # -- accounting ----------------------------------------------------------
 
     def stats(self) -> dict:
-        return self._store.tier_stats()
+        with self._lock:
+            return self._store.tier_stats()

@@ -199,6 +199,25 @@ def test_exposition_labeled_golden():
         'cameo_h_count{tenant="t0"} 1\n')
 
 
+def test_exposition_groups_type_lines_by_sanitized_base():
+    """A metric name that raw-sorts *between* a base and its labeled
+    keys (``a.b.c`` < ``a.b{``) must not split the base family across
+    two ``# TYPE`` lines — Prometheus parsers reject the duplicate."""
+    reg = MetricsRegistry(enabled=True)
+    reg.inc("a.b", 1)
+    reg.inc("a.b", 2, labels={"tenant": "t0"})
+    reg.inc("a.b.c", 3)
+    text = reg.exposition()
+    types = [ln for ln in text.splitlines() if ln.startswith("# TYPE")]
+    assert len(types) == len(set(types))
+    assert text == (
+        "# TYPE cameo_a_b counter\n"
+        "cameo_a_b_total 1\n"
+        'cameo_a_b_total{tenant="t0"} 2\n'
+        "# TYPE cameo_a_b_c counter\n"
+        "cameo_a_b_c_total 3\n")
+
+
 def test_exposition_watermark_line_only_with_jits():
     reg = MetricsRegistry(enabled=True)
     assert "recompile_watermark" not in reg.exposition()

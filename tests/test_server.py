@@ -337,6 +337,7 @@ def test_tier_demote_promote_answer_invariant(tmp_path):
     w0 = srv.view("a").series("s").window()
     m0 = srv.view("a").series("s").mean()
 
+    assert srv.tiers._lock is srv._lock       # rewrites serialize with pushes
     rep = srv.tiers.demote_cold(sid)
     assert rep["rewritten"] >= 1
     assert any("wrap" in b for b in srv.store._series[sid]["blocks"])
@@ -439,6 +440,75 @@ def test_quota_refused_before_ack(tmp_path):
     with pytest.raises(QuotaExceeded):
         srv.write("s2", _series(n=10, seed=4), tenant="a")
     assert "s2" not in srv.view("a")
+    srv.close()
+
+
+def test_view_ingest_routes_through_server(tmp_path):
+    """``view()`` hands out a :class:`ServerView`: its ingest methods go
+    back through the server, so a view write cannot bypass the lock or
+    the ``max_points`` quota, and ``view().stream()`` takes a real
+    admission slot."""
+    p = str(tmp_path / "vw.cameo")
+    srv = IngestServer(p, CFG, _scfg(max_sessions=1,
+                                     backpressure="reject"))
+    srv.register_tenant("a", max_points=100)
+    v = srv.view("a")
+    with pytest.raises(QuotaExceeded):
+        v.write("s", _series(n=10_000, seed=1))
+    assert "s" not in v
+    with pytest.raises(QuotaExceeded):
+        v.write_batch({"s": _series(n=64, seed=1),
+                       "u": _series(n=64, seed=2)})
+    assert srv.catalog.usage("a")["points"] == 0
+
+    sess = v.stream("s")                      # a full ServerSession
+    with pytest.raises(ServerBusy):
+        srv.session("other")                  # the view's stream holds
+    with pytest.raises(QuotaExceeded):        # the only slot
+        sess.push(_series(n=101, seed=3))
+    sess.push(_series(n=100, seed=3))
+    sess.close()
+    assert srv.catalog.usage("a")["points"] == 100
+    srv.close()
+
+
+def test_reregister_merges_tenant_config(tmp_path):
+    """Re-registering updates only the kwargs that were passed — an eps
+    refresh must not silently drop an existing quota (or vice versa)."""
+    p = str(tmp_path / "rr.cameo")
+    srv = IngestServer(p, CFG, _scfg())
+    srv.register_tenant("a", eps=5e-2, max_points=1000)
+    srv.register_tenant("a", eps=8e-2)
+    assert srv.catalog.config("a") == {"eps": 8e-2, "max_points": 1000}
+    srv.register_tenant("a", max_points=500)
+    assert srv.catalog.config("a") == {"eps": 8e-2, "max_points": 500}
+    srv.close()
+
+
+def test_failed_close_releases_admission_slot(tmp_path):
+    """A failed writer finalize must still free the admission slot, and
+    the close must stay retryable without double-releasing the bounded
+    semaphore."""
+    p = str(tmp_path / "fc.cameo")
+    srv = IngestServer(p, CFG, _scfg(max_sessions=1,
+                                     backpressure="reject"))
+    sess = srv.session("s")
+    sess.push(_series(n=256, seed=1))
+    orig, boom = sess._w.close, {"armed": True}
+
+    def flaky_close():
+        if boom.pop("armed", None):
+            raise RuntimeError("finalize failed")
+        return orig()
+
+    sess._w.close = flaky_close
+    with pytest.raises(RuntimeError, match="finalize failed"):
+        sess.close()
+    assert not sess.closed                    # still retryable
+    with srv.session("other") as s2:          # the slot was freed anyway
+        s2.push(_series(n=128, seed=2))
+    sess.close()                              # retry: no double release
+    assert sess.closed
     srv.close()
 
 
